@@ -1,0 +1,51 @@
+"""Shared benchmark fixtures: trained HAR model, cost/accuracy tables."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=1)
+def har_fixture(n_train: int = 120, n_test: int = 60, seed: int = 0):
+    """(model, F_test, y_test, cost_table, accuracy_table, classify_ok)."""
+    from repro.core import anytime_svm as asvm
+    from repro.core import profile_tables as pt
+    from repro.data import har
+
+    Xw_tr, ytr = har.generate_windows(n_train, seed=seed)
+    Xw_te, yte = har.generate_windows(n_test, seed=seed + 1)
+    Ftr = np.asarray(har.extract_features(jnp.asarray(Xw_tr)))
+    Fte = np.asarray(har.extract_features(jnp.asarray(Xw_te)))
+    model = asvm.train_ovr_svm(Ftr, ytr, 6)
+    costs = pt.har_cost_table(har.FEATURE_FAMILIES, model.order, scale=90.0)
+    acc_tab = asvm.accuracy_table(model, Fte, yte, np.arange(141))
+    Xo = model.standardize(Fte)[:, model.order]
+    Wo = model.W[:, model.order]
+
+    def classify_ok(sample_id: int, p: int) -> bool:
+        i = sample_id % len(yte)
+        return bool((Xo[i, :p] @ Wo[:, :p].T + model.b).argmax() == yte[i])
+
+    return model, Fte, yte, costs, acc_tab, classify_ok
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call (jax arrays blocked)."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,193 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory     = HLO_bytes_per_device / HBM_bw              [s]
+    collective = collective_bytes_per_device / link_bw      [s]
+
+HLO_FLOPs/collective bytes come from the loop-aware HLO walk
+(launch/hlo_analysis.py); HLO_bytes = max(cost_analysis 'bytes accessed',
+per-device argument bytes) — the argument bytes are a loop-independent
+floor (every parameter/cache byte is touched at least once per step).
+
+MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (inference);
+the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/recompute waste.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def n_params_active(arch: str) -> tuple[float, float]:
+    """(total params, active params per token), analytic from the config."""
+    cfg = get_config(arch)
+    D = cfg.d_model
+    attn = cfg.n_layers * (D * cfg.n_heads * cfg.head_dim * 2
+                           + D * cfg.n_kv_heads * cfg.head_dim * 2)
+    embed = cfg.vocab_size * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.is_moe:
+        n_moe = (cfg.n_layers - cfg.first_k_dense) // cfg.moe_every_k
+        n_dense = cfg.n_layers - n_moe
+        expert = 3 * D * cfg.moe_d_ff
+        dense_ffn = n_dense * 3 * D * cfg.d_ff
+        total_ffn = n_moe * cfg.n_experts * expert + dense_ffn
+        active_ffn = n_moe * cfg.moe_topk * expert + dense_ffn
+        if cfg.shared_expert:
+            total_ffn += n_moe * 3 * D * cfg.moe_d_ff
+            active_ffn += n_moe * 3 * D * cfg.moe_d_ff
+        router = n_moe * D * cfg.n_experts
+        total = attn + embed + total_ffn + router
+        active = attn + embed + active_ffn + router
+    elif cfg.family == "ssm":
+        per = 5 * D * D + D * cfg.d_ff * 2 + D * D  # rwkv blocks
+        total = active = cfg.n_layers * per + embed
+    elif cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * D
+        per = D * (2 * d_in + 2 * cfg.ssm_state
+                   + d_in // cfg.ssm_headdim) + d_in * D
+        shared = D * cfg.n_heads * cfg.head_dim * 2 \
+            + D * cfg.n_kv_heads * cfg.head_dim * 2 + 3 * D * cfg.d_ff
+        total = active = cfg.n_layers * per + shared + embed
+    else:
+        total = active = attn + embed + cfg.n_layers * 3 * D * cfg.d_ff
+        if cfg.family == "encdec":
+            total = active = total + cfg.n_enc_layers * (
+                D * D * 4 + 2 * D * cfg.d_ff)
+    return float(total), float(active)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global useful FLOPs per step: 6*N_active*tokens (train),
+    2*N_active*new-tokens (decode), 2*N_active*tokens (prefill)."""
+    shape = SHAPES[shape_name]
+    _, active = n_params_active(arch)
+    if shape.kind == "train":
+        return 6.0 * active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch  # decode: one token
+
+
+def load_cells(dryrun_dir: str | Path) -> list[dict]:
+    cells = []
+    for f in sorted(Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("fsdp") or rec.get("variant", "baseline") != "baseline":
+            continue  # perf variants reported separately (§Perf)
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "multipod" else 256
+    la = rec["loop_aware"]
+    flops_dev = la["flops_per_device"]
+    coll_dev = la["collective_total_bytes_per_device"]
+    bytes_dev = max(rec["cost_analysis"].get("bytes accessed", 0.0),
+                    rec["memory_analysis"].get(
+                        "argument_size_in_bytes", 0.0))
+    t_comp = flops_dev / PEAK
+    t_mem = bytes_dev / HBM
+    t_coll = coll_dev / ICI
+    mf = model_flops(rec["arch"], rec["shape"])
+    t_model = mf / (chips * PEAK)
+    bottleneck = max(("compute", t_comp), ("memory", t_mem),
+                     ("collective", t_coll), key=lambda kv: kv[1])
+    frac = t_model / max(bottleneck[1], 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll, "bottleneck": bottleneck[0],
+        "model_flops": mf,
+        "hlo_flops_global": flops_dev * chips,
+        "useful_flop_ratio": mf / max(flops_dev * chips, 1e-30),
+        "roofline_fraction": frac,
+        "mem_gb_per_dev": rec["memory_analysis"].get(
+            "argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def table(dryrun_dir="experiments/dryrun", mesh="single") -> list[dict]:
+    rows = []
+    for rec in load_cells(dryrun_dir):
+        if rec.get("mesh") != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful/HLO | roofline frac | GB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['mem_gb_per_dev']:.1f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(rows: list[dict]) -> dict:
+    """worst roofline fraction, most collective-bound, most representative
+    of the paper's technique (the anytime-serving decode shape of a
+    flagship dense arch — glm4-9b decode_32k, the KV-perforation target).
+
+    Sub-1e13-useful-FLOP cells (whisper-tiny on a 256-chip pod) are
+    excluded from 'worst': they are degenerate by assignment, not by
+    sharding, and hillclimbing them is pointless.
+    """
+    big = [r for r in rows if r["model_flops"] > 1e13]
+    worst = min(big, key=lambda r: r["roofline_fraction"])
+    coll = max(big, key=lambda r: r["t_collective_s"]
+               / max(r["t_compute_s"] + r["t_memory_s"], 1e-30))
+    rep = next((r for r in rows if r["arch"] == "glm4-9b"
+                and r["shape"] == "decode_32k"), worst)
+    return {"worst_fraction": worst, "most_collective_bound": coll,
+            "technique_representative": rep}
+
+
+def main():
+    import time
+
+    from benchmarks.common import emit
+
+    t0 = time.perf_counter()
+    rows = table()
+    if not rows:
+        emit("roofline.cells", 0.0, "no dryrun data")
+        return {}
+    us = (time.perf_counter() - t0) * 1e6
+    emit("roofline.cells", us / max(len(rows), 1), str(len(rows)))
+    med = float(np.median([r["roofline_fraction"] for r in rows]))
+    emit("roofline.median_fraction", 0.0, f"{med:.3f}")
+    picks = pick_hillclimb_cells(rows)
+    for k, v in picks.items():
+        emit(f"roofline.pick_{k}", 0.0,
+             f"{v['arch']}/{v['shape']} frac={v['roofline_fraction']:.3f}")
+    Path("experiments").mkdir(exist_ok=True)
+    Path("experiments/roofline_single.md").write_text(to_markdown(rows))
+    multi = table(mesh="multipod")
+    Path("experiments/roofline_multipod.md").write_text(to_markdown(multi))
+    return {"rows": rows, "picks": picks}
+
+
+if __name__ == "__main__":
+    main()

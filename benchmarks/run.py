@@ -1,0 +1,43 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Full JSON details land in
+experiments/bench_results.json.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    results = {}
+    from benchmarks import (bench_kernels, fig4_expected_accuracy,
+                            fig5_accuracy_throughput, fig6_latency,
+                            fig13_corner_equivalence,
+                            fig14_corner_throughput, roofline,
+                            scaled_training, serve_quality)
+
+    results["fig4"] = fig4_expected_accuracy.main()
+    results["fig5"] = fig5_accuracy_throughput.main()
+    results["fig6"] = fig6_latency.main()
+    results["fig13"] = fig13_corner_equivalence.main()
+    results["fig14_15"] = fig14_corner_throughput.main()
+    bench_kernels.main()
+    results["scaled"] = scaled_training.main()
+    results["serve_quality"] = serve_quality.main()
+    roof = roofline.main()
+    if roof:
+        results["roofline_picks"] = {
+            k: {kk: vv for kk, vv in v.items()}
+            for k, v in roof.get("picks", {}).items()}
+    out = Path("experiments")
+    out.mkdir(exist_ok=True)
+    (out / "bench_results.json").write_text(json.dumps(results, indent=1,
+                                                       default=str))
+
+
+if __name__ == "__main__":
+    main()

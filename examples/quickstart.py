@@ -1,0 +1,78 @@
+"""Quickstart: the paper end to end in two minutes.
+
+1. Generate synthetic HAR data, extract the 140-feature pipeline.
+2. Train the anytime OvR SVM; show accuracy vs feature-prefix length and
+   the analytic coherence forecast (Fig. 4).
+3. Run approximate intermittent computing (GREEDY) vs Chinchilla-style
+   checkpointing on a kinetic energy trace; print the throughput/accuracy
+   comparison (Fig. 5) and the latency-in-cycles claim (Fig. 6).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import anytime_svm as asvm
+from repro.core import profile_tables as pt
+from repro.core.coherence import coherence_curve
+from repro.core.energy import Capacitor, kinetic_trace
+from repro.core.intermittent import IntermittentExecutor, score_results
+from repro.core.policies import Greedy, Smart
+from repro.data import har
+
+
+def main():
+    print("=== 1. data + features ===")
+    Xw_tr, ytr = har.generate_windows(80, seed=0)
+    Xw_te, yte = har.generate_windows(50, seed=1)
+    Ftr = np.asarray(har.extract_features(jnp.asarray(Xw_tr)))
+    Fte = np.asarray(har.extract_features(jnp.asarray(Xw_te)))
+    print(f"train {Ftr.shape}, test {Fte.shape} "
+          f"({har.N_FEATURES} features, 6 activities)")
+
+    print("\n=== 2. anytime SVM (Fig. 4) ===")
+    model = asvm.train_ovr_svm(Ftr, ytr, 6)
+    ps = np.array([0, 10, 20, 40, 70, 100, 140])
+    acc = asvm.accuracy_table(model, Fte, yte, ps)
+    cur = coherence_curve(model.W, model.standardize(Fte), model.order,
+                          ps[1:])
+    print("p        " + " ".join(f"{p:6d}" for p in ps))
+    print("accuracy " + " ".join(f"{a:6.3f}" for a in acc))
+    print("coh(exp) " + "  ----- " + " ".join(
+        f"{c:6.3f}" for c in cur["expected"]))
+    print("coh(meas)" + "  ----- " + " ".join(
+        f"{c:6.3f}" for c in cur["measured"]))
+
+    print("\n=== 3. intermittent execution on kinetic energy ===")
+    costs = pt.har_cost_table(har.FEATURE_FAMILIES, model.order, scale=90.0)
+    acc_tab = asvm.accuracy_table(model, Fte, yte, np.arange(141))
+    Xo = model.standardize(Fte)[:, model.order]
+    Wo = model.W[:, model.order]
+
+    def ok(sid, p):
+        i = sid % len(yte)
+        return (Xo[i, :p] @ Wo[:, :p].T + model.b).argmax() == yte[i]
+
+    trace = kinetic_trace(seed=7, duration_s=1800)
+    for name, mode, pol, sb in (
+            ("GREEDY (this paper)", "approximate", Greedy(), 512),
+            ("SMART-80 (this paper)", "approximate", Smart(0.8), 512),
+            ("Chinchilla baseline", "checkpoint", Greedy(), 32768)):
+        ex = IntermittentExecutor(trace, costs, pol, acc_tab, mode=mode,
+                                  cap=Capacitor(v_max=3.8),
+                                  sampling_period_s=60.0, state_bytes=sb,
+                                  ckpt_energy_headroom=0.55)
+        st = ex.run()
+        lat = st.latency_cycles
+        print(f"{name:24s} results={len(st.results):3d}  "
+              f"acc={score_results(st.results, ok):.3f}  "
+              f"latency(cycles) mean={lat.mean() if len(lat) else 0:.1f} "
+              f"max={lat.max() if len(lat) else 0}  "
+              f"NVM energy={st.energy_on_nvm_j * 1e3:.1f} mJ")
+    print("\napproximate results always emit in the SAME power cycle; "
+          "all energy goes to useful work (0 mJ on NVM).")
+
+
+if __name__ == "__main__":
+    main()

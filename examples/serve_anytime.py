@@ -1,0 +1,16 @@
+"""Anytime serving demo: deadline-driven approximate decode.
+
+The engine calibrates (exit-depth x KV-keep) -> coherence offline, then
+resolves each token's deadline budget to a knob setting (GREEDY) or
+applies SMART admission control. Results are always produced within the
+deadline; generation state is never checkpointed across it.
+
+    PYTHONPATH=src python examples/serve_anytime.py --arch glm4-9b \
+        --tokens 16
+    PYTHONPATH=src python examples/serve_anytime.py --policy smart \
+        --floor 0.9
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end driver: REAL training under preemption, window-bounded
+(approximate intermittent) vs Chinchilla-adaptive checkpointing.
+
+Runs an actual jax training loop (decoder LM on the synthetic token
+pipeline); preemptions roll the checkpointing variant back to its last
+save, while the window-bounded variant never loses a step by design.
+
+    PYTHONPATH=src python examples/train_intermittent.py --steps 80
+    PYTHONPATH=src python examples/train_intermittent.py --scale 100m \
+        --steps 300   # the ~100M-parameter configuration
+"""
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

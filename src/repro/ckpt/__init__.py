@@ -1,0 +1,6 @@
+"""Distributed checkpointing + the Chinchilla-adaptive interval baseline."""
+from repro.ckpt.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.ckpt.chinchilla import AdaptiveCheckpointPolicy
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "AdaptiveCheckpointPolicy"]

@@ -1,0 +1,62 @@
+"""Chinchilla-style adaptive checkpoint placement for distributed training.
+
+The embedded Chinchilla [42] overprovisions checkpoints and dynamically
+DISABLES them while energy is abundant. The fleet-scale analogue adapts
+the checkpoint interval to the observed failure rate and measured
+checkpoint cost:
+
+- Young/Daly optimal interval:  tau* = sqrt(2 * C * MTBF)
+- online MTBF estimation from observed preemptions (exponential moving
+  average), so a stable fleet checkpoints rarely ("energy abundance")
+  and a churning spot fleet checkpoints often ("scarcity").
+
+This is the BASELINE the window-bounded approximate runtime is compared
+against (examples/train_intermittent.py; the scaled Fig.-5 analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class AdaptiveCheckpointPolicy:
+    ckpt_cost_s: float  # measured wall-clock cost of one save
+    mtbf_guess_s: float = 3600.0
+    min_interval_s: float = 60.0
+    max_interval_s: float = 4 * 3600.0
+    ema: float = 0.3
+    _mtbf: float | None = None
+    _last_failure_t: float | None = None
+
+    def __post_init__(self):
+        self._mtbf = self.mtbf_guess_s
+
+    @property
+    def mtbf_s(self) -> float:
+        return float(self._mtbf)
+
+    def observe_failure(self, t: float) -> None:
+        if self._last_failure_t is not None:
+            gap = max(t - self._last_failure_t, 1.0)
+            self._mtbf = (1 - self.ema) * self._mtbf + self.ema * gap
+        self._last_failure_t = t
+
+    def observe_ckpt_cost(self, seconds: float) -> None:
+        self.ckpt_cost_s = 0.7 * self.ckpt_cost_s + 0.3 * seconds
+
+    def interval_s(self) -> float:
+        """Young/Daly with the current MTBF estimate."""
+        tau = math.sqrt(2.0 * self.ckpt_cost_s * self._mtbf)
+        return float(min(max(tau, self.min_interval_s),
+                         self.max_interval_s))
+
+    def should_checkpoint(self, seconds_since_last: float) -> bool:
+        return seconds_since_last >= self.interval_s()
+
+    def expected_overhead_fraction(self) -> float:
+        """Fraction of wall-clock spent on checkpoints + expected rework."""
+        tau = self.interval_s()
+        ckpt = self.ckpt_cost_s / tau
+        rework = tau / (2.0 * self._mtbf)
+        return ckpt + rework

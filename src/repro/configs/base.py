@@ -1,0 +1,100 @@
+"""Model/config dataclasses shared by the whole framework."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    moe_topk: int = 0
+    moe_every_k: int = 1  # 1: every layer (past first_k_dense) is MoE
+    first_k_dense: int = 0
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_d_ff: int = 0  # expert hidden dim; 0 -> d_ff
+    # §Perf lever: shard expert weights over BOTH mesh axes (experts on tp,
+    # hidden dims on dp) — the 1T-scale decode/memory fix (EXPERIMENTS.md)
+    ep_dp_shard: bool = False
+
+    # --- SSM (Mamba2/SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+
+    # --- hybrid (zamba2-style shared attention) ---
+    shared_attn_every: int = 0  # apply the shared attn block every k layers
+
+    # --- encoder-decoder (whisper-style) ---
+    n_enc_layers: int = 0
+    enc_seq: int = 1500  # audio frames after the (stubbed) conv frontend
+
+    # --- VLM (qwen2-vl-style) ---
+    n_vision_tokens: int = 0
+    mrope_sections: tuple[int, int, int] = (0, 0, 0)  # t/h/w rotary sections
+
+    # --- attention-free (rwkv6) ---
+    attn_free: bool = False
+
+    # --- anytime / approximate knobs (the paper's technique) ---
+    exit_every: int = 0  # early-exit heads every k layers (0: disabled)
+    exit_loss_coef: float = 0.3
+
+    # --- numerics / execution ---
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    attn_chunk: int = 512  # q/kv chunking for flash-style pure-JAX attention
+    scan_layers: bool = True
+    remat: bool = True
+    use_pallas: bool = False  # TPU kernels; CPU dry-run uses the pure path
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_experts and not self.moe_d_ff:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """A reduced copy (smoke tests); overrides replace fields."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,32 @@
+"""kimi-k2-1t-a32b [moe]: trillion-param MoE (paper-table).
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048 (expert) vocab=163840,
+MoE 384 experts top-8, first layer dense [arXiv:2501.kimi2].
+Expert stacks dominate: 61 x 384 x 3 x 7168 x 2048 ~ 1.03 T params;
+~32B active per token. bf16 params: at 1T scale fp32 masters cannot fit a
+single pod (see DESIGN.md "Memory honesty").
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=16384,  # the single dense layer's FFN
+    moe_d_ff=2048,  # per-expert FFN width (the assigned d_ff)
+    vocab_size=163840,
+    n_experts=384,
+    moe_topk=8,
+    first_k_dense=1,
+    capacity_factor=1.25,
+    param_dtype="bfloat16",
+)
+
+REDUCED = CONFIG.scaled(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=256, moe_d_ff=128, vocab_size=512, n_experts=8, moe_topk=2,
+    first_k_dense=1, attn_chunk=16, param_dtype="float32")

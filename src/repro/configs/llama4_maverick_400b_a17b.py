@@ -1,0 +1,33 @@
+"""llama4-maverick-400b-a17b [moe]: interleaved MoE, shared expert.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 (expert) vocab=202048,
+MoE 128 experts top-1, MoE on every second layer, with a shared expert
+[hf:meta-llama/Llama-4-*]. ~400B total / ~17B active.
+
+Anytime note (DESIGN.md): with top-1 routing the "fewer experts" knob
+bottoms out; the knob becomes router capacity (token-grain perforation).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    n_experts=128,
+    moe_topk=1,
+    moe_every_k=2,
+    shared_expert=True,
+    capacity_factor=1.25,
+    param_dtype="bfloat16",
+)
+
+REDUCED = CONFIG.scaled(
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, moe_d_ff=128, vocab_size=512, n_experts=8, moe_topk=1,
+    attn_chunk=16, param_dtype="float32")

@@ -1,0 +1,28 @@
+"""qwen2-vl-72b [vlm]: M-RoPE, dynamic resolution (vision frontend stubbed).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064 [arXiv:2409.12191].
+input_specs supplies precomputed patch embeddings (256 vision tokens on a
+16x16 grid at t=0); M-RoPE splits the 64 rotary frequencies into
+(t=16, h=24, w=24) sections per the Qwen2-VL recipe.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen2-vl-72b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    n_vision_tokens=256,
+    mrope_sections=(16, 24, 24),
+    param_dtype="bfloat16",
+)
+
+REDUCED = CONFIG.scaled(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, n_vision_tokens=16,
+    mrope_sections=(2, 3, 3), attn_chunk=16, param_dtype="float32")

@@ -1,0 +1,27 @@
+"""rwkv6-7b [ssm]: Finch — attention-free, data-dependent decay.
+
+32L d_model=4096 (attn-free) d_ff=14336 vocab=65536 [arXiv:2404.05892].
+WKV heads of size 64 (64 heads). Runs long_500k (O(1) state decode).
+
+Arch-applicability (DESIGN.md): no KV cache -> KV perforation inapplicable;
+anytime knobs are early exit / layer perforation.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="rwkv6-7b",
+    family="ssm",
+    attn_free=True,
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,  # WKV heads
+    n_kv_heads=64,
+    head_dim=64,  # WKV head size
+    d_ff=14336,
+    vocab_size=65536,
+    param_dtype="float32",
+)
+
+REDUCED = CONFIG.scaled(
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512)

@@ -1,0 +1,26 @@
+"""whisper-tiny [audio]: enc-dec, conv frontend stubbed.
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 [arXiv:2212.04356].
+Whisper-tiny has 4 encoder + 4 decoder layers; the 1500-frame encoder input
+comes from the stubbed conv frontend (input_specs supplies embeddings).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-tiny",
+    family="encdec",
+    n_layers=4,
+    n_enc_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    enc_seq=1500,
+    tie_embeddings=True,
+    param_dtype="float32",
+)
+
+REDUCED = CONFIG.scaled(
+    n_layers=2, n_enc_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+    head_dim=32, d_ff=128, vocab_size=512, enc_seq=32, attn_chunk=16)

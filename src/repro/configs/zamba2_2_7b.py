@@ -1,0 +1,29 @@
+"""zamba2-2.7b [hybrid]: Mamba2 stacks + shared attention block.
+
+54L d_model=2560 32H (kv=32) d_ff=10240 vocab=32000, ssm_state=64
+[arXiv:2411.15242]. The shared attention+MLP block runs every 6 Mamba2
+layers with reused weights. Runs long_500k (SSM state decode).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    shared_attn_every=6,
+    param_dtype="float32",
+)
+
+REDUCED = CONFIG.scaled(
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512, ssm_state=16, ssm_headdim=16,
+    shared_attn_every=2, attn_chunk=16)

@@ -1,0 +1,25 @@
+"""Approximate intermittent computing — the paper's contribution.
+
+Public surface:
+- energy: harvester traces, capacitor buffer, device power models
+- budget: hard-ceiling budgets, meters, per-unit cost tables
+- coherence: P(class_p == class_n) analysis (paper Eq. 4-7 + extensions)
+- anytime_svm: anytime OvR linear SVM
+- perforation: loop/tile perforation knobs
+- policies: GREEDY / SMART / FIXED / CONTINUOUS
+- intermittent: power-cycle executor (approximate vs checkpointing runtimes)
+- profile_tables: offline knob->cost profiling
+- anytime_lm: budget->knob resolution for transformer serving/training
+"""
+from repro.core.budget import Budget, BudgetExceeded, BudgetMeter, CostTable
+from repro.core.energy import (Capacitor, EnergyTrace, McuEnergyModel,
+                               TpuWindowModel, get_trace)
+from repro.core.policies import (SKIP, Continuous, Decision, Fixed, Greedy,
+                                 Policy, Smart)
+
+__all__ = [
+    "Budget", "BudgetExceeded", "BudgetMeter", "CostTable",
+    "Capacitor", "EnergyTrace", "McuEnergyModel", "TpuWindowModel",
+    "get_trace", "SKIP", "Continuous", "Decision", "Fixed", "Greedy",
+    "Policy", "Smart",
+]

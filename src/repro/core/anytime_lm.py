@@ -1,0 +1,92 @@
+"""Budget -> knob resolution for anytime transformer inference.
+
+The LM analogue of the anytime SVM's offline tables: enumerate a small
+grid of knob settings (early-exit depth x KV-block keep rate), price each
+setting with the analytic per-knob cost model (validated against the
+dry-run's cost analysis), calibrate each setting's *coherence* — the
+probability its argmax token matches the exact model's, the paper's Eq.-3
+quantity — on a probe set, and at run time resolve a budget to the best
+setting (GREEDY) or the cheapest setting above an accuracy floor (SMART).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.policies import SKIP
+from repro.core.profile_tables import decode_layer_flops
+
+
+@dataclasses.dataclass(frozen=True)
+class KnobSetting:
+    exit_layer: int  # depth prefix
+    kv_keep: float  # fraction of KV blocks kept (1.0 = exact)
+    cost: float  # seconds (or FLOP.s) per decoded token
+    coherence: float  # P(argmax == exact argmax), calibrated
+
+
+def decode_cost_s(cfg: ModelConfig, depth: int, kv_keep: float,
+                  kv_len: int, batch: int, *,
+                  flops_per_second: float = 197e12 * 0.4,
+                  hbm_bw: float = 819e9) -> float:
+    """Per-step decode cost: compute + the memory-bound KV stream."""
+    fl = depth / cfg.n_layers * decode_layer_flops(
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+        int(kv_len * kv_keep), batch,
+        getattr(cfg, "n_experts", 0), getattr(cfg, "moe_topk", 0)
+    ) * cfg.n_layers
+    head = 2 * batch * cfg.d_model * cfg.vocab_size
+    kv_bytes = (depth * 2 * batch * int(kv_len * kv_keep)
+                * cfg.n_kv_heads * cfg.head_dim * 2)
+    w_bytes = 0.0  # weights stream once per step; amortised over batch
+    return max((fl + head) / flops_per_second,
+               (kv_bytes + w_bytes) / hbm_bw)
+
+
+@dataclasses.dataclass
+class AnytimeLmPlanner:
+    settings: list[KnobSetting]  # sorted by cost ascending
+
+    @staticmethod
+    def build(cfg: ModelConfig, kv_len: int, batch: int,
+              depths: list[int], keeps: list[float],
+              coherence_fn=None) -> "AnytimeLmPlanner":
+        """coherence_fn(depth, keep) -> measured coherence; defaults to a
+        smooth proxy (calibrated engines pass the measured table)."""
+        if coherence_fn is None:
+            def coherence_fn(d, k):
+                depth_term = (d / cfg.n_layers) ** 0.5
+                keep_term = 0.5 + 0.5 * k
+                return float(np.clip(depth_term * keep_term, 1e-3, 1.0))
+        settings = []
+        for d in depths:
+            for k in keeps:
+                settings.append(KnobSetting(
+                    d, k, decode_cost_s(cfg, d, k, kv_len, batch),
+                    coherence_fn(d, k)))
+        settings.sort(key=lambda s: s.cost)
+        return AnytimeLmPlanner(settings)
+
+    def greedy(self, budget: float) -> KnobSetting | None:
+        """Max coherence within budget (paper GREEDY)."""
+        best = None
+        for s in self.settings:
+            if s.cost <= budget and (best is None
+                                     or s.coherence > best.coherence):
+                best = s
+        return best
+
+    def smart(self, budget: float, floor: float) -> KnobSetting | int:
+        """Cheapest setting with coherence >= floor, refined greedily with
+        the leftover budget (paper SMART). SKIP if the floor is
+        unattainable within budget."""
+        feasible = [s for s in self.settings
+                    if s.coherence >= floor and s.cost <= budget]
+        if not feasible:
+            return SKIP
+        best = self.greedy(budget)
+        assert best is not None
+        return best if best.coherence >= floor else \
+            min(feasible, key=lambda s: s.cost)

@@ -1,0 +1,185 @@
+"""Anytime one-vs-rest linear SVM (paper §3).
+
+Training: multi-class OvR linear SVM fitted in JAX with squared-hinge loss +
+L2 (the decision function is identical to the paper's; see DESIGN.md §7 for
+why we train in JAX rather than "the scipy SVM library").
+
+Anytime classification: features are ordered by hyperplane-coefficient
+magnitude (the paper's Eq.-6 observation: features with larger |c_j| should
+be processed first), scores are accumulated incrementally over feature
+*prefixes*, and partial scores are cached so refinement never recomputes.
+
+TPU adaptation: the incremental unit is a block of 128 features (MXU lane
+width) rather than a scalar feature; `repro.kernels.anytime_svm` provides
+the Pallas kernel for the blocked prefix-scoring path, and this module is
+the pure-JAX reference implementation the kernel is tested against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class SvmModel:
+    """Learned OvR model. W: (classes, features); b: (classes,).
+
+    ``order`` is the importance permutation; ``W_ordered``/``mu``/``sigma``
+    are pre-permuted/standardized copies so the hot path does no gathers.
+    """
+
+    W: np.ndarray
+    b: np.ndarray
+    order: np.ndarray
+    mu: np.ndarray  # feature standardization (train-set)
+    sigma: np.ndarray
+
+    @property
+    def n_features(self) -> int:
+        return int(self.W.shape[1])
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.W.shape[0])
+
+    def standardize(self, X: np.ndarray) -> np.ndarray:
+        return (X - self.mu) / self.sigma
+
+    def ordered_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        return self.W[:, self.order], self.b
+
+
+def _svm_loss(params, X, Y, l2, l1):
+    W, b = params
+    margins = X @ W.T + b[None, :]  # (m, c)
+    # squared hinge, OvR: y in {-1,+1} per class. The l1 term concentrates
+    # weight on representative features among correlated groups, which is
+    # what makes coefficient-magnitude prefixes informative early (the
+    # paper's Fig.-4 "first features contribute most" regime).
+    loss = jnp.mean(jnp.sum(jnp.maximum(0.0, 1.0 - Y * margins) ** 2, axis=1))
+    return loss + l2 * jnp.sum(W * W) + l1 * jnp.sum(jnp.abs(W))
+
+
+@partial(jax.jit, static_argnames=("steps", "n_classes"))
+def _fit(X, y, n_classes: int, steps: int, lr: float, l2: float, l1: float):
+    m, n = X.shape
+    Y = 2.0 * jax.nn.one_hot(y, n_classes) - 1.0
+    W = jnp.zeros((n_classes, n))
+    b = jnp.zeros((n_classes,))
+    # full-batch Adam on the convex objective
+    mom = jax.tree.map(jnp.zeros_like, (W, b))
+    vel = jax.tree.map(jnp.zeros_like, (W, b))
+    grad_fn = jax.grad(_svm_loss)
+
+    def step(carry, i):
+        params, mom, vel = carry
+        g = grad_fn(params, X, Y, l2, l1)
+        mom = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, mom, g)
+        vel = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_ * g_, vel, g)
+        t = i + 1.0
+        def upd(p, m_, v_):
+            mhat = m_ / (1 - 0.9 ** t)
+            vhat = v_ / (1 - 0.999 ** t)
+            return p - lr * mhat / (jnp.sqrt(vhat) + 1e-8)
+        params = jax.tree.map(upd, params, mom, vel)
+        return (params, mom, vel), None
+
+    (params, _, _), _ = jax.lax.scan(step, ((W, b), mom, vel),
+                                     jnp.arange(steps, dtype=jnp.float32))
+    return params
+
+
+def train_ovr_svm(X: np.ndarray, y: np.ndarray, n_classes: int,
+                  steps: int = 4000, lr: float = 0.05,
+                  l2: float = 1e-4, l1: float = 2.5e-2) -> SvmModel:
+    """Fit the OvR linear SVM and derive the anytime feature order."""
+    mu = X.mean(0)
+    sigma = X.std(0) + 1e-8
+    Xs = (X - mu) / sigma
+    W, b = _fit(jnp.asarray(Xs, jnp.float32), jnp.asarray(y, jnp.int32),
+                n_classes, steps, lr, l2, l1)
+    W = np.asarray(W, np.float64)
+    b = np.asarray(b, np.float64)
+    # importance = L2 norm of the coefficient across classes (multi-class
+    # extension of the paper's |c_j| ordering)
+    importance = np.linalg.norm(W, axis=0)
+    order = np.argsort(-importance)
+    return SvmModel(W=W, b=b, order=order, mu=mu, sigma=sigma)
+
+
+# ---------------------------------------------------------------------------
+# Anytime (incremental, prefix-based) classification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PartialScores:
+    """Cached partial result: scores after the first ``p`` ordered features.
+
+    This is the *entire* cross-refinement state — small enough to live in
+    registers/VMEM, and thrown away at the end of the power cycle (there is
+    nothing to persist; that is the point of the paper).
+    """
+
+    p: int
+    scores: np.ndarray  # (classes,)
+
+
+def init_scores(model: SvmModel) -> PartialScores:
+    return PartialScores(0, model.b.copy())
+
+
+def refine(model: SvmModel, x_std_ordered: np.ndarray,
+           cached: PartialScores, new_p: int) -> PartialScores:
+    """Extend cached scores from cached.p to new_p ordered features."""
+    if new_p < cached.p:
+        raise ValueError("anytime refinement cannot go backwards")
+    Wo = model.W[:, model.order]
+    seg = slice(cached.p, new_p)
+    scores = cached.scores + Wo[:, seg] @ x_std_ordered[seg]
+    return PartialScores(new_p, scores)
+
+
+def classify(scores: PartialScores) -> int:
+    return int(np.argmax(scores.scores))
+
+
+def classify_prefix(model: SvmModel, x: np.ndarray, p: int) -> int:
+    """One-shot prefix classification (standardizes + orders internally)."""
+    xs = model.standardize(x)[model.order]
+    ps = refine(model, xs, init_scores(model), p)
+    return classify(ps)
+
+
+# Batched JAX path (used by tests, the kernel oracle, and the benchmarks).
+
+
+@partial(jax.jit, static_argnames=("p",))
+def prefix_scores_jax(Wo: jax.Array, b: jax.Array, Xo: jax.Array, p: int):
+    """Scores using the first p ordered features. Xo: (m, n) ordered/std."""
+    return Xo[:, :p] @ Wo[:, :p].T + b[None, :]
+
+
+def accuracy_table(model: SvmModel, X: np.ndarray, y: np.ndarray,
+                   ps: np.ndarray) -> np.ndarray:
+    """Measured accuracy vs prefix length — the SMART lookup table.
+
+    Incremental: one pass over feature blocks, reusing partial scores.
+    """
+    Xo = model.standardize(X)[:, model.order]
+    Wo = model.W[:, model.order]
+    scores = np.tile(model.b, (X.shape[0], 1))
+    acc = np.empty(len(ps))
+    prev = 0
+    for k, p in enumerate(ps):
+        p = int(p)
+        if p > prev:
+            scores += Xo[:, prev:p] @ Wo[:, prev:p].T
+            prev = p
+        pred = scores.argmax(1)
+        acc[k] = float(np.mean(pred == y)) if p > 0 else 1.0 / model.n_classes
+    return acc

@@ -1,0 +1,105 @@
+"""Budget abstractions.
+
+The paper reverses the approximate-computing problem: the budget is a *hard
+ceiling* (finite energy buffer), accuracy is whatever is attainable inside
+it. A ``Budget`` is therefore the primary input to every policy decision,
+and a ``BudgetMeter`` enforces the ceiling during execution.
+
+Two currencies, one interface:
+- Joules (embedded prototype; capacitor usable energy),
+- FLOP-seconds (TPU fleet; availability window x fleet throughput).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """An immutable hard ceiling, in an arbitrary cost unit."""
+
+    amount: float
+    unit: str = "J"
+
+    def affordable(self, cost: float) -> bool:
+        return cost <= self.amount
+
+    def minus(self, cost: float) -> "Budget":
+        return Budget(max(self.amount - cost, 0.0), self.unit)
+
+
+class BudgetExceeded(RuntimeError):
+    """Raised when execution would cross the hard ceiling (a power failure)."""
+
+
+@dataclasses.dataclass
+class BudgetMeter:
+    """Tracks spend against a hard ceiling.
+
+    ``charge`` is the only mutation point, so the invariant
+    ``spent <= budget.amount`` (checked by the property tests) holds by
+    construction: a charge that would cross the ceiling raises
+    ``BudgetExceeded`` *before* recording the spend, exactly like the
+    capacitor browning out before an instruction retires.
+    """
+
+    budget: Budget
+    spent: float = 0.0
+
+    def charge(self, cost: float) -> None:
+        if cost < 0:
+            raise ValueError(f"negative cost {cost}")
+        if self.spent + cost > self.budget.amount:
+            raise BudgetExceeded(
+                f"charge {cost:.3e}{self.budget.unit} exceeds remaining "
+                f"{self.remaining:.3e}{self.budget.unit}")
+        self.spent += cost
+
+    @property
+    def remaining(self) -> float:
+        return self.budget.amount - self.spent
+
+    def can_afford(self, cost: float) -> bool:
+        return self.spent + cost <= self.budget.amount
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTable:
+    """Per-unit incremental costs for an approximation knob.
+
+    ``unit_costs[i]`` is the *incremental* cost of adding knob unit ``i``
+    (the i-th feature, i-th KV tile, i-th layer, ...), in budget units.
+    ``emit_cost`` is the cost reserved for returning the result to the user
+    (the paper's BLE packet; our collective/host transfer).
+    """
+
+    unit_costs: np.ndarray
+    emit_cost: float = 0.0
+    fixed_cost: float = 0.0  # sampling / tokenization / setup
+
+    def __post_init__(self):
+        object.__setattr__(self, "unit_costs",
+                           np.asarray(self.unit_costs, dtype=np.float64))
+
+    @property
+    def n_units(self) -> int:
+        return int(self.unit_costs.shape[0])
+
+    def cumulative(self) -> np.ndarray:
+        """cumulative[k] = cost of running k units + fixed + emit."""
+        return (np.concatenate([[0.0], np.cumsum(self.unit_costs)])
+                + self.fixed_cost + self.emit_cost)
+
+    def max_units_within(self, budget: float) -> int:
+        """Largest k such that running k units + emit fits in ``budget``.
+
+        Returns -1 when even k=0 (fixed+emit alone) does not fit.
+        """
+        cum = self.cumulative()
+        k = int(np.searchsorted(cum, budget, side="right") - 1)
+        return k if cum[0] <= budget else -1
+
+    def cost_of(self, k: int) -> float:
+        return float(self.cumulative()[k])

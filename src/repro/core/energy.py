@@ -1,0 +1,310 @@
+"""Energy environment models for intermittent computing.
+
+This module provides the *environment* side of the paper:
+
+- harvested-power traces matching the qualitative families used in the paper
+  (RF from Mementos, and the four EPIC solar traces SOM/SIM/SOR/SIR),
+- a capacitor energy-buffer model (the paper's 1470 uF buffer behind a
+  BQ25505 booster),
+- device power models for the embedded prototype (MSP430-class) and for the
+  scaled TPU-fleet analogue (availability windows).
+
+Everything is deterministic given a seed so experiments are replayable, the
+same property the paper gets from Ekho-style trace replay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Harvested power traces
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyTrace:
+    """Harvested power samples, W, on a fixed grid of ``dt`` seconds."""
+
+    name: str
+    power_w: np.ndarray  # shape (T,)
+    dt: float  # seconds per sample
+
+    @property
+    def duration_s(self) -> float:
+        return float(self.power_w.shape[0] * self.dt)
+
+    @property
+    def total_energy_j(self) -> float:
+        return float(np.sum(self.power_w) * self.dt)
+
+    def mean_power_w(self) -> float:
+        return float(np.mean(self.power_w))
+
+
+def _ou_process(rng: np.random.Generator, n: int, mean: float, theta: float,
+                sigma: float) -> np.ndarray:
+    """Ornstein-Uhlenbeck sample path; the workhorse for slow solar dynamics."""
+    x = np.empty(n)
+    x[0] = mean
+    for i in range(1, n):
+        x[i] = x[i - 1] + theta * (mean - x[i - 1]) + sigma * rng.standard_normal()
+    return x
+
+
+def rf_trace(seed: int = 0, duration_s: float = 600.0, dt: float = 0.01,
+             mean_uw: float = 220.0) -> EnergyTrace:
+    """RF harvesting (Mementos/WISP-like): bursty, least total energy.
+
+    The paper: a CRC over RF sees 16 power failures in 6 s; power arrives in
+    short bursts as the reader beam sweeps. Model: on/off bursts (two-state
+    Markov) with heavy-tailed off durations and jittered burst amplitude.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(duration_s / dt)
+    p = np.zeros(n)
+    i = 0
+    while i < n:
+        burst = int(rng.exponential(0.35) / dt) + 1  # ~0.35 s bursts
+        gap = int(rng.pareto(1.5) * 0.3 / dt) + 1  # heavy-tailed gaps
+        amp = mean_uw * 1e-6 * rng.uniform(2.0, 6.0)
+        p[i:i + burst] = amp * (1.0 + 0.3 * rng.standard_normal(min(burst, n - i)))
+        i += burst + gap
+    np.clip(p, 0.0, None, out=p)
+    # normalise so the configured mean power is exact -> comparable traces
+    p *= (mean_uw * 1e-6) / max(p.mean(), 1e-12)
+    return EnergyTrace("RF", p, dt)
+
+
+def _solar_trace(name: str, seed: int, duration_s: float, dt: float,
+                 mean_uw: float, variability: float,
+                 mobility_hz: float) -> EnergyTrace:
+    rng = np.random.default_rng(seed)
+    n = int(duration_s / dt)
+    base = _ou_process(rng, n, 1.0, theta=0.002, sigma=0.002 * variability)
+    if mobility_hz > 0:  # mobile settings: occlusion events as the user moves
+        occl = np.ones(n)
+        t = 0
+        while t < n:
+            nxt = t + int(rng.exponential(1.0 / mobility_hz) / dt) + 1
+            dur = int(rng.uniform(0.2, 3.0) / dt)
+            occl[nxt:nxt + dur] = rng.uniform(0.05, 0.5)
+            t = nxt + dur
+        base = base * occl
+    p = np.clip(base, 0.0, None)
+    p *= (mean_uw * 1e-6) / max(p.mean(), 1e-12)
+    return EnergyTrace(name, p, dt)
+
+
+def som_trace(seed: int = 1, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
+    """Solar outdoor mobile: most stable family + highest energy content."""
+    return _solar_trace("SOM", seed, duration_s, dt, mean_uw=900.0,
+                        variability=1.0, mobility_hz=0.05)
+
+
+def sim_trace(seed: int = 2, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
+    """Solar indoor mobile: moderate energy, frequent occlusions."""
+    return _solar_trace("SIM", seed, duration_s, dt, mean_uw=450.0,
+                        variability=2.0, mobility_hz=0.2)
+
+
+def sor_trace(seed: int = 3, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
+    """Solar outdoor static: abundant, very stable."""
+    return _solar_trace("SOR", seed, duration_s, dt, mean_uw=650.0,
+                        variability=0.3, mobility_hz=0.0)
+
+
+def sir_trace(seed: int = 4, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
+    """Solar indoor static: stable but scarce.
+
+    Calibrated (per the paper's Fig. 14 observation) to the same *total*
+    energy as the RF trace while being far smoother in time.
+    """
+    return _solar_trace("SIR", seed, duration_s, dt, mean_uw=220.0,
+                        variability=0.4, mobility_hz=0.0)
+
+
+def kinetic_trace(seed: int = 5, duration_s: float = 600.0, dt: float = 0.01,
+                  activity_profile: np.ndarray | None = None) -> EnergyTrace:
+    """ReVibe modelQ-style kinetic harvesting on a wrist.
+
+    Power tracks the wearer's motion intensity: high while walking (resonant
+    excitation near the customised resonance frequency), near zero while
+    sitting/laying. ``activity_profile`` (values in [0,1]) modulates output.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(duration_s / dt)
+    if activity_profile is None:
+        # alternating activity bouts: walk / idle with OU-modulated intensity
+        profile = np.zeros(n)
+        t = 0
+        while t < n:
+            active = rng.random() < 0.55
+            dur = int(rng.uniform(20, 120) / dt)
+            if active:
+                profile[t:t + dur] = np.clip(
+                    _ou_process(rng, min(dur, n - t), 0.8, 0.01, 0.02), 0, 1)
+            t += dur
+    else:
+        profile = np.interp(np.linspace(0, 1, n),
+                            np.linspace(0, 1, activity_profile.shape[0]),
+                            activity_profile)
+    # ~0.22 mW peak: wrist-motion output of a modelQ-class transducer after
+    # the booster; yields the paper's scarce-energy regime where a full
+    # 140-feature classification spans ~ten power cycles (Fig. 6) and the
+    # adaptive checkpointing baseline operates mostly below its energy
+    # headroom (checkpointing nearly every unit).
+    p = 0.22e-3 * profile * (1 + 0.15 * rng.standard_normal(n))
+    return EnergyTrace("KIN", np.clip(p, 0, None), dt)
+
+
+TRACE_FACTORIES: dict[str, Callable[..., EnergyTrace]] = {
+    "RF": rf_trace,
+    "SOM": som_trace,
+    "SIM": sim_trace,
+    "SOR": sor_trace,
+    "SIR": sir_trace,
+    "KIN": kinetic_trace,
+}
+
+
+def get_trace(name: str, **kw) -> EnergyTrace:
+    return TRACE_FACTORIES[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Capacitor energy buffer (the paper's 1470 uF + BQ25505)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Capacitor:
+    """Energy buffer with turn-on / brown-out thresholds.
+
+    The usable energy per power cycle is 0.5*C*(v_on^2 - v_off^2); with the
+    paper's 1470 uF and typical MSP430FR thresholds that is a handful of mJ,
+    which is what forces classification to either fit in a cycle (our
+    approach) or span many cycles (checkpointing baselines).
+    """
+
+    capacitance_f: float = 1470e-6
+    v_on: float = 3.5  # booster releases the load
+    v_off: float = 1.8  # brown-out
+    v_max: float = 3.6
+    booster_eff: float = 0.8  # BQ25505 conversion efficiency
+    v: float = 0.0  # current voltage
+
+    def energy_j(self) -> float:
+        return 0.5 * self.capacitance_f * self.v * self.v
+
+    def usable_energy_j(self) -> float:
+        """Energy available before brown-out, from the current voltage."""
+        e = 0.5 * self.capacitance_f * (self.v ** 2 - self.v_off ** 2)
+        return max(e, 0.0)
+
+    @property
+    def cycle_energy_j(self) -> float:
+        """Usable energy of a fully recharged cycle (v_on -> v_off)."""
+        return 0.5 * self.capacitance_f * (self.v_on ** 2 - self.v_off ** 2)
+
+    def harvest(self, power_w: float, dt: float) -> None:
+        e = self.energy_j() + self.booster_eff * power_w * dt
+        self.v = min(np.sqrt(2.0 * e / self.capacitance_f), self.v_max)
+
+    def draw(self, energy_j: float) -> bool:
+        """Draw ``energy_j``; returns False (brown-out) if not available.
+
+        On brown-out the supervisor cuts the load at ``v_off``; the buffer
+        keeps the residual 0.5*C*v_off^2 and recharges from there.
+        """
+        e = self.energy_j() - energy_j
+        floor = 0.5 * self.capacitance_f * self.v_off ** 2
+        if e < floor:
+            self.v = self.v_off  # load cut; residual charge retained
+            return False
+        self.v = np.sqrt(2.0 * e / self.capacitance_f)
+        return True
+
+    @property
+    def is_on(self) -> bool:
+        return self.v >= self.v_off
+
+
+# ---------------------------------------------------------------------------
+# Device power/energy models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class McuEnergyModel:
+    """MSP430FR5659-class energy model (8 MHz, per the paper's §5 setup).
+
+    All costs in Joules. FRAM costs model the NVM overhead the paper's
+    baselines pay; approximate intermittent computing never touches them.
+    """
+
+    active_power_w: float = 2.4e-3  # 8 MHz active mode, ~300 uA/MHz @3V
+    sleep_power_w: float = 1.2e-6  # LPM3-class standby
+    mcu_hz: float = 8e6
+    # NVM (FRAM) costs: energy per byte written/read, incl. wait states.
+    fram_write_j_per_byte: float = 18e-9
+    fram_read_j_per_byte: float = 7e-9
+    ble_packet_j: float = 120e-6  # 1-byte payload advertisement burst
+    sample_window_j: float = 180e-6  # 2.56 s of accel+gyro SPI sampling
+    image_load_j: float = 90e-6  # load a test picture (corner app)
+
+    def exec_time_s(self, cycles: float) -> float:
+        return cycles / self.mcu_hz
+
+    def exec_energy_j(self, cycles: float) -> float:
+        return self.exec_time_s(cycles) * self.active_power_w
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuWindowModel:
+    """Scaled analogue: a preemptible TPU slice.
+
+    'Power cycle' becomes an availability window; 'energy budget' becomes
+    window_s * chips * peak_flops * mfu (a FLOP.s budget). Checkpoint costs
+    are bytes moved to persistent storage at ``ckpt_bw_gbps``.
+    """
+
+    chips: int = 256
+    peak_flops_per_chip: float = 197e12  # v5e bf16
+    hbm_bw_per_chip: float = 819e9
+    ici_bw_per_link: float = 50e9
+    ckpt_bw_gbps: float = 2.0  # per-host persistent-storage bandwidth
+    hosts: int = 32
+    mfu: float = 0.4
+
+    def window_flops(self, window_s: float) -> float:
+        return window_s * self.chips * self.peak_flops_per_chip * self.mfu
+
+    def ckpt_time_s(self, state_bytes: float) -> float:
+        return state_bytes / (self.ckpt_bw_gbps * 1e9 * self.hosts)
+
+
+def power_cycles(trace: EnergyTrace, cap: Capacitor,
+                 load_w: float = 0.0) -> list[tuple[float, float]]:
+    """Simulate charge/discharge with a constant load; return (t_on, t_off)
+    intervals — the raw power cycles an application would see. Useful for
+    trace statistics; the executor in ``intermittent.py`` interleaves real
+    work instead of a constant load.
+    """
+    out: list[tuple[float, float]] = []
+    on_t = None
+    on = False
+    for i, p in enumerate(trace.power_w):
+        t = i * trace.dt
+        cap.harvest(float(p), trace.dt)
+        if not on and cap.v >= cap.v_on:
+            on, on_t = True, t
+        elif on:
+            if not cap.draw(load_w * trace.dt):
+                out.append((on_t, t))
+                on = False
+    if on:
+        out.append((on_t, trace.duration_s))
+    return out

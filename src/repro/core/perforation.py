@@ -1,0 +1,101 @@
+"""Loop/tile perforation (paper §6).
+
+Loop perforation skips a fraction of loop iterations to save resources; the
+skip set is most often random [26]. On TPU we perforate at *tile*
+granularity (whole (bh, bw) image tiles, whole KV blocks) because scalar
+skips defeat the MXU/VPU — see DESIGN.md "Hardware-adaptation notes".
+
+This module provides the mask machinery; consumers:
+- ``repro.data.images`` / ``repro.kernels.harris``: perforated Harris corner
+  detection (the paper's second application),
+- ``repro.kernels.perforated_attention`` + ``repro.models.attention``:
+  KV-block perforation for approximate attention,
+- ``repro.models.transformer``: layer perforation (depth-wise).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def perforation_mask(n: int, rate: float, key: jax.Array,
+                     always_keep: np.ndarray | None = None) -> jax.Array:
+    """Boolean keep-mask over ``n`` iterations with skip fraction ``rate``.
+
+    Exactly round(rate*n) iterations are dropped (random subset), matching
+    the paper's random perforation policy; ``always_keep`` pins indices that
+    must survive (e.g. the first/last KV block for attention sinks).
+    """
+    n_drop = int(round(float(rate) * n))
+    scores = jax.random.uniform(key, (n,))
+    if always_keep is not None:
+        scores = scores.at[jnp.asarray(always_keep)].set(2.0)
+    # drop exactly the n_drop lowest-scoring iterations (tie/edge safe)
+    order = jnp.argsort(scores)
+    mask = jnp.ones((n,), bool)
+    return mask.at[order[:n_drop]].set(False)
+
+
+def strided_mask(n: int, rate: float) -> np.ndarray:
+    """Deterministic strided perforation (keep-every-k); the low-variance
+    alternative policy. Used where replayability across baselines matters.
+    """
+    keep = np.ones(n, dtype=bool)
+    n_drop = int(round(rate * n))
+    if n_drop > 0:
+        drop_idx = np.linspace(0, n - 1, n_drop).astype(int)
+        keep[drop_idx] = False
+    return keep
+
+
+def tile_mask_2d(h_tiles: int, w_tiles: int, rate: float,
+                 key: jax.Array) -> jax.Array:
+    """2-D tile keep-mask for image kernels."""
+    return perforation_mask(h_tiles * w_tiles, rate, key).reshape(
+        h_tiles, w_tiles)
+
+
+def perforated_sum(fn, xs: jax.Array, keep: jax.Array) -> jax.Array:
+    """sum_i keep[i] * fn(xs[i]) with *compensation*: the kept mass is
+    rescaled by n/kept so expectations are preserved (standard perforation
+    compensation; keeps downstream thresholds calibrated).
+    """
+    vals = jax.vmap(fn)(xs)
+    kept = jnp.maximum(jnp.sum(keep), 1)
+    scale = keep.shape[0] / kept
+    keep_b = keep.reshape((-1,) + (1,) * (vals.ndim - 1))
+    return jnp.sum(jnp.where(keep_b, vals, 0.0), axis=0) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class PerforationPlan:
+    """Budget -> perforation rate resolution.
+
+    ``unit_cost`` is the cost of one loop unit (tile / KV block / layer),
+    profiled offline (paper: EPIC per-iteration energy; here: cost tables
+    from ``profile_tables``). Given a budget, ``rate_for_budget`` returns
+    the smallest skip rate that fits — the paper's GREEDY resolution.
+    """
+
+    n_units: int
+    unit_cost: float
+    fixed_cost: float = 0.0
+    emit_cost: float = 0.0
+
+    def rate_for_budget(self, budget: float) -> float | None:
+        """Smallest skip rate completing within ``budget``; None = infeasible
+        even at 100% skip (the cycle cannot even emit)."""
+        avail = budget - self.fixed_cost - self.emit_cost
+        if avail < 0:
+            return None
+        k_afford = int(avail / self.unit_cost)
+        if k_afford >= self.n_units:
+            return 0.0
+        return 1.0 - k_afford / self.n_units
+
+    def cost_at_rate(self, rate: float) -> float:
+        kept = self.n_units - int(round(rate * self.n_units))
+        return self.fixed_cost + self.emit_cost + kept * self.unit_cost

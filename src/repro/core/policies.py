@@ -1,0 +1,107 @@
+"""Runtime approximation policies (paper §4.3).
+
+A policy answers: *given the current budget and the offline tables, how many
+knob units should this sample get — or should it be skipped?*
+
+- GREEDY: spend everything; emit just before the budget dies. Maximum
+  throughput, accuracy is whatever the budget bought.
+- SMART(A): look up the smallest p with expected accuracy >= A; if the
+  budget cannot afford p, skip the sample (no output, tiny sleep cost);
+  otherwise commit to p and then *refine greedily* with whatever budget
+  remains (the paper: "immediately uses all p' samples and then switches to
+  GREEDY mode").
+- FIXED(p): constant knob, for ablations.
+- CONTINUOUS: all units (the battery-powered reference).
+
+The same objects drive the embedded simulator, the serving engine's
+admission control, and the straggler-mitigation deadline logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.budget import CostTable
+
+SKIP = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """initial_units: commit now; refine_greedily: spend leftover budget."""
+
+    initial_units: int
+    refine_greedily: bool
+
+    @property
+    def skipped(self) -> bool:
+        return self.initial_units == SKIP
+
+
+class Policy:
+    name = "base"
+
+    def decide(self, budget: float, costs: CostTable,
+               accuracy: np.ndarray) -> Decision:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Greedy(Policy):
+    name: str = "GREEDY"
+
+    def decide(self, budget: float, costs: CostTable,
+               accuracy: np.ndarray) -> Decision:
+        k = costs.max_units_within(budget)
+        if k < 0:
+            return Decision(SKIP, False)
+        return Decision(k, True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Smart(Policy):
+    """``min_accuracy`` is the user-defined floor A (e.g. 0.8 or 0.6)."""
+
+    min_accuracy: float = 0.8
+    name: str = "SMART"
+
+    def decide(self, budget: float, costs: CostTable,
+               accuracy: np.ndarray) -> Decision:
+        if accuracy.shape[0] != costs.n_units + 1:
+            raise ValueError("accuracy table must have n_units+1 entries "
+                             "(accuracy[k] = expected accuracy with k units)")
+        ok = np.nonzero(accuracy >= self.min_accuracy)[0]
+        if ok.size == 0:
+            return Decision(SKIP, False)  # floor unattainable at any p
+        p_required = int(ok[0])
+        k_afford = costs.max_units_within(budget)
+        if k_afford < p_required:
+            return Decision(SKIP, False)  # paper: skip this round, sleep
+        return Decision(p_required, True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fixed(Policy):
+    units: int = 0
+    name: str = "FIXED"
+
+    def decide(self, budget: float, costs: CostTable,
+               accuracy: np.ndarray) -> Decision:
+        k = costs.max_units_within(budget)
+        if k < self.units:
+            return Decision(SKIP, False)
+        return Decision(self.units, False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Continuous(Policy):
+    """All units, always. Only meaningful with an unbounded budget (battery)
+    or with a checkpointing runtime that stretches the work across cycles.
+    """
+
+    name: str = "CONTINUOUS"
+
+    def decide(self, budget: float, costs: CostTable,
+               accuracy: np.ndarray) -> Decision:
+        return Decision(costs.n_units, False)

@@ -1,0 +1,171 @@
+"""Offline cost-table construction (the paper's EPIC energy-profiling role).
+
+The paper profiles the energy to add each feature / run each loop iteration
+offline, on a desktop, in a fully automated way. We do the same:
+
+- for the embedded HAR pipeline, per-feature costs come from a cycle-count
+  model of the MSP430 feature extractors (FFT-family features are ~an order
+  of magnitude costlier than time-domain stats, as in the paper);
+- for the TPU layer, per-knob costs (per transformer layer, per KV tile,
+  per expert) come from analytic FLOP counts cross-checked against
+  ``compiled.cost_analysis()`` in the dry-run (see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.budget import CostTable
+from repro.core.energy import McuEnergyModel
+
+# ---------------------------------------------------------------------------
+# Embedded HAR pipeline: per-feature cycle counts
+# ---------------------------------------------------------------------------
+
+# Cycle model for a 128-sample window on MSP430 (fixed-point), per feature
+# family. Derived from instruction-count estimates; absolute scale is
+# calibrated so the full 140-feature pipeline lands at ~4 ms-class active
+# time (continuous executions finish all features between samples).
+_FEATURE_FAMILY_CYCLES = {
+    "mean": 1200.0,
+    "std": 2600.0,
+    "mad": 5200.0,
+    "minmax": 900.0,
+    "energy": 1700.0,
+    "skew": 4200.0,
+    "kurt": 4600.0,
+    "corr": 3800.0,
+    # FFT family: a shared 128-pt radix-2 FFT (~60k cycles) amortised over
+    # the features that consume it, plus per-feature post-processing.
+    "fft_dom": 9500.0,
+    "fft_entropy": 11000.0,
+    "fft_band": 7800.0,
+}
+
+
+def har_feature_costs(feature_families: list[str],
+                      mcu: McuEnergyModel | None = None) -> np.ndarray:
+    """Energy (J) to add each feature, in *pipeline order* (unordered)."""
+    mcu = mcu or McuEnergyModel()
+    cyc = np.array([_FEATURE_FAMILY_CYCLES[f] for f in feature_families])
+    return cyc / mcu.mcu_hz * mcu.active_power_w
+
+
+def har_cost_table(feature_families: list[str], order: np.ndarray,
+                   mcu: McuEnergyModel | None = None,
+                   scale: float = 12.0) -> CostTable:
+    """CostTable in anytime (importance) order, incl. sampling + BLE costs.
+
+    ``scale`` calibrates absolute per-feature cost to the paper's regime
+    (feature extraction includes windowed filtering and fixed-point FFT
+    post-processing; the full 140-feature pipeline must span >1 power
+    cycle of the 1470 uF buffer, as in the paper's Fig. 6, where Chinchilla
+    needs multiple cycles per classification).
+    """
+    mcu = mcu or McuEnergyModel()
+    per_feature = scale * har_feature_costs(feature_families, mcu)[order]
+    return CostTable(unit_costs=per_feature,
+                     emit_cost=mcu.ble_packet_j,
+                     fixed_cost=mcu.sample_window_j)
+
+
+def harris_cost_table(n_taps: int = 25, img_px: int = 128 * 128,
+                      cycles_per_px_tap: float = 50.0,
+                      fixed_cycles_per_px: float = 150.0,
+                      mcu: McuEnergyModel | None = None) -> CostTable:
+    """Corner-detection cost table; the perforated loop is the 25-tap
+    structure-tensor accumulation (one unit = one Gaussian tap pass).
+
+    ~50 cycles/px/tap: three 16-bit MACs on FRAM-resident accumulators
+    plus loop/addressing overhead. Fixed part (Sobel gradients, gradient
+    products, response, NMS) ~150 cycles/px. Total for a 128x128 frame ~7 mJ —
+    just over one power cycle of the 1470 uF buffer: the regime where a
+    freshly-charged buffer affords ~55-70%% of the taps (the Fig.-12
+    operating range) while checkpointing stretches over up to ~10 cycles
+    under scarce traces (Fig. 15).
+    """
+    mcu = mcu or McuEnergyModel()
+    per_tap = cycles_per_px_tap * img_px / mcu.mcu_hz * mcu.active_power_w
+    fixed = fixed_cycles_per_px * img_px / mcu.mcu_hz * mcu.active_power_w
+    return CostTable(unit_costs=np.full(n_taps, per_tap),
+                     emit_cost=mcu.ble_packet_j,
+                     fixed_cost=fixed + mcu.image_load_j)
+
+
+# ---------------------------------------------------------------------------
+# TPU layer: analytic per-knob FLOPs (cross-checked by the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def transformer_layer_flops(d_model: int, n_heads: int, n_kv: int,
+                            d_ff: int, seq: int, batch: int,
+                            moe_experts: int = 0, moe_topk: int = 0,
+                            causal: bool = True) -> float:
+    """Forward FLOPs of one decoder layer on a (batch, seq) slab."""
+    tok = batch * seq
+    d_head = d_model // n_heads
+    qkvo = 2 * tok * d_model * (n_heads * d_head + 2 * n_kv * d_head
+                                + n_heads * d_head)
+    attn = 2 * 2 * batch * n_heads * seq * seq * d_head
+    if causal:
+        attn /= 2
+    if moe_experts:
+        ff = 2 * tok * moe_topk * 3 * d_model * d_ff \
+            + 2 * tok * d_model * moe_experts  # router
+    else:
+        ff = 2 * tok * 3 * d_model * d_ff  # gated (SwiGLU) MLP
+    return float(qkvo + attn + ff)
+
+
+def decode_layer_flops(d_model: int, n_heads: int, n_kv: int, d_ff: int,
+                       kv_len: int, batch: int, moe_experts: int = 0,
+                       moe_topk: int = 0) -> float:
+    """Per-token decode FLOPs of one layer with a kv_len cache."""
+    d_head = d_model // n_heads
+    qkvo = 2 * batch * d_model * (2 * n_heads * d_head + 2 * n_kv * d_head)
+    attn = 2 * 2 * batch * n_heads * kv_len * d_head
+    if moe_experts:
+        ff = 2 * batch * moe_topk * 3 * d_model * d_ff \
+            + 2 * batch * d_model * moe_experts
+    else:
+        ff = 2 * batch * 3 * d_model * d_ff
+    return float(qkvo + attn + ff)
+
+
+def layer_cost_table(cfg, seq: int, batch: int, *, decode: bool = False,
+                     flops_per_second: float) -> CostTable:
+    """Per-layer cost table, in seconds, for early-exit (anytime depth).
+
+    ``cfg`` is a model config (see repro.configs.base). Emission cost covers
+    the final norm + LM head; fixed covers the embedding lookup.
+    """
+    if decode:
+        per_layer = decode_layer_flops(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, seq, batch,
+            getattr(cfg, "moe_experts", 0) or 0,
+            getattr(cfg, "moe_topk", 0) or 0)
+        head = 2 * batch * cfg.d_model * cfg.vocab_size
+        embed = 0.0
+    else:
+        per_layer = transformer_layer_flops(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, seq, batch,
+            getattr(cfg, "moe_experts", 0) or 0,
+            getattr(cfg, "moe_topk", 0) or 0)
+        head = 2 * batch * seq * cfg.d_model * cfg.vocab_size
+        embed = 0.0
+    return CostTable(
+        unit_costs=np.full(cfg.n_layers, per_layer / flops_per_second),
+        emit_cost=head / flops_per_second,
+        fixed_cost=embed)
+
+
+def kv_tile_cost_table(d_model: int, n_heads: int, kv_len: int, batch: int,
+                       tile: int, flops_per_second: float,
+                       hbm_bw: float, n_kv_heads: int) -> CostTable:
+    """Per-KV-tile decode attention cost. Decode attention is memory-bound:
+    the cost of a tile is dominated by streaming its K/V bytes from HBM, so
+    we price tiles at max(flop_time, byte_time)."""
+    d_head = d_model // n_heads
+    n_tiles = int(np.ceil(kv_len / tile))
+    fl = 2 * 2 * batch * n_heads * tile * d_head / flops_per_second
+    by = 2 * batch * n_kv_heads * tile * d_head * 2 / hbm_bw  # bf16 K+V
+    return CostTable(unit_costs=np.full(n_tiles, max(fl, by)))

@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic HAR signals, LM token streams, corner images."""

@@ -1,0 +1,216 @@
+"""Embedded image processing: synthetic test pictures + Harris corners.
+
+The paper's second application (§6): corner detection with loop
+perforation. We synthesize test pictures of graded complexity (the paper's
+"simple test" to "complex pictures"), implement Harris corner response in
+pure JAX, tile-grain perforation (the TPU-native grain, DESIGN.md), and
+the paper's equivalence metric: same corner count AND each corner closer
+to its counterpart than to any other corner.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# synthetic test pictures
+# ---------------------------------------------------------------------------
+
+
+def make_picture(kind: str, size: int = 128, seed: int = 0) -> np.ndarray:
+    """Grayscale [0,1] test pictures of graded corner density."""
+    rng = np.random.default_rng(seed)
+    img = np.zeros((size, size), np.float32)
+    if kind == "simple":  # one bright rectangle: 4 corners
+        img[size // 4:3 * size // 4, size // 3:2 * size // 3] = 1.0
+    elif kind == "shapes":  # several rectangles/triangles
+        for _ in range(6):
+            x0, y0 = rng.integers(0, size - 20, 2)
+            w, h = rng.integers(10, 40, 2)
+            img[y0:min(y0 + h, size), x0:min(x0 + w, size)] += \
+                rng.uniform(0.4, 1.0)
+        img = np.clip(img, 0, 1)
+    elif kind == "checker":
+        t = rng.integers(8, 17)
+        yy, xx = np.mgrid[0:size, 0:size]
+        img = (((yy // t) + (xx // t)) % 2).astype(np.float32)
+    elif kind == "texture":  # complex: shapes + texture noise
+        img = make_picture("shapes", size, seed)
+        img = np.clip(img + 0.05 * rng.standard_normal((size, size)), 0, 1)
+    else:
+        raise ValueError(kind)
+    return img.astype(np.float32)
+
+
+PICTURE_KINDS = ("simple", "shapes", "checker", "texture")
+
+
+# ---------------------------------------------------------------------------
+# Harris corner response (pure JAX; kernels/harris.py is the Pallas twin)
+# ---------------------------------------------------------------------------
+
+
+def _conv2_same(img: jax.Array, k: jax.Array) -> jax.Array:
+    return jax.scipy.signal.convolve2d(img, k, mode="same")
+
+
+_SOBEL_X = jnp.asarray([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], jnp.float32) / 8
+_SOBEL_Y = _SOBEL_X.T
+_GAUSS = jnp.asarray(np.outer([1, 4, 6, 4, 1], [1, 4, 6, 4, 1]),
+                     jnp.float32) / 256.0
+
+
+def harris_response(img: jax.Array, k: float = 0.05) -> jax.Array:
+    """R = det(M) - k tr(M)^2 with a 5x5 Gaussian structure window."""
+    ix = _conv2_same(img, _SOBEL_X)
+    iy = _conv2_same(img, _SOBEL_Y)
+    sxx = _conv2_same(ix * ix, _GAUSS)
+    syy = _conv2_same(iy * iy, _GAUSS)
+    sxy = _conv2_same(ix * iy, _GAUSS)
+    det = sxx * syy - sxy * sxy
+    tr = sxx + syy
+    return det - k * tr * tr
+
+
+def harris_response_perforated(img: jax.Array, tile_keep: jax.Array,
+                               tile: int = 16, k: float = 0.05) -> jax.Array:
+    """Tile-perforated Harris: response computed only on kept tiles.
+
+    Skipped tiles output 0 response (no corners detected there) — the
+    paper's random-iteration skip, at TPU tile grain. Gradients still see
+    the full image (cheap); the structure-tensor accumulation (the
+    expensive loop) is what perforation skips.
+    """
+    resp = harris_response(img, k)
+    H, W = img.shape
+    mask = jnp.repeat(jnp.repeat(tile_keep, tile, 0), tile, 1)[:H, :W]
+    return jnp.where(mask, resp, 0.0)
+
+
+def harris_response_perforated_rows(img: jax.Array, row_keep: jax.Array,
+                                    k: float = 0.05) -> jax.Array:
+    """Row-grain loop perforation (the paper's actual grain).
+
+    Corner detection iterates over image rows; skipping a row means its
+    response is reconstructed from the nearest computed row (standard
+    output interpolation for perforated loops [26]). Interpolated rows are
+    damped slightly so NMS ties resolve to computed rows. This is the
+    paper-faithful scalar-grain knob; the Pallas kernel uses tile grain
+    (TPU-native) and the benchmarks quantify the accuracy difference
+    between the two grains (DESIGN.md "What did NOT transfer").
+    """
+    resp = harris_response(img, k)
+    H = img.shape[0]
+    idx = jnp.arange(H)
+    kept_idx = jnp.where(row_keep, idx, -1)
+    # nearest kept row at or before each row; fall back to next kept row
+    before = jax.lax.associative_scan(jnp.maximum, kept_idx)
+    after_rev = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(row_keep, H - 1 - idx, -1)[::-1])
+    after = (H - 1 - after_rev)[::-1]
+    use_before = before >= 0
+    src = jnp.where(use_before, before, after)
+    damp = jnp.where(row_keep, 1.0, 0.98)
+    return resp[src] * damp[:, None]
+
+
+def harris_response_perforated_px(img: jax.Array, keep: jax.Array,
+                                  k: float = 0.05) -> jax.Array:
+    """Pixel-grain loop perforation (the paper's scalar iteration grain).
+
+    The corner-response loop skips a fraction of pixels; skipped outputs
+    are reconstructed from the nearest computed pixel to the left (output
+    interpolation [26]), damped slightly so NMS ties resolve to computed
+    pixels. Leading skipped pixels of a row fall back to the first
+    computed pixel on its right.
+    """
+    resp = harris_response(img, k)
+    H, W = resp.shape
+    keep = keep.reshape(H, W)
+    col = jnp.arange(W)[None, :]
+    before = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(keep, col, -1), axis=1)
+    after_rev = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(keep, W - 1 - col, -1)[:, ::-1], axis=1)
+    after = (W - 1 - after_rev)[:, ::-1]
+    b = jnp.where(before >= 0, before, after)
+    a = jnp.where(after <= W - 1, after, before)
+    vb = jnp.take_along_axis(resp, b, axis=1)
+    va = jnp.take_along_axis(resp, a, axis=1)
+    # LINEAR interpolation across each dropped run: values are monotone
+    # between the bounding computed pixels, so interpolation can never
+    # manufacture an interior local maximum (no spurious corners below
+    # heavy perforation — matching the paper's Fig.-12 behaviour).
+    span = jnp.maximum(a - b, 1)
+    w = (col - b) / span
+    vi = vb * (1 - w) + va * w
+    return jnp.where(keep, resp, vi * (1.0 - 1e-3))
+
+
+def harris_response_perforated_window(img: jax.Array, tap_keep: jax.Array,
+                                      k: float = 0.05) -> jax.Array:
+    """Perforate the structure-tensor accumulation loop (25 Gaussian taps).
+
+    The dominant iterative work in Harris is the windowed accumulation of
+    Ixx/Iyy/Ixy: 25 taps per pixel. Skipping taps (with kept-mass
+    compensation, core.perforation style) saves work proportionally while
+    every output pixel stays computed — responses get noisier but peaks
+    stay put, which is why equivalence survives ~40-50% skip (Fig. 12).
+    ``tap_keep``: (25,) bool.
+    """
+    ix = _conv2_same(img, _SOBEL_X)
+    iy = _conv2_same(img, _SOBEL_Y)
+    g = jnp.where(tap_keep.reshape(5, 5), _GAUSS, 0.0)
+    norm = jnp.sum(_GAUSS) / jnp.maximum(jnp.sum(g), 1e-9)
+    g = g * norm
+    sxx = _conv2_same(ix * ix, g)
+    syy = _conv2_same(iy * iy, g)
+    sxy = _conv2_same(ix * iy, g)
+    return sxx * syy - sxy * sxy - k * (sxx + syy) ** 2
+
+
+def detect_corners(resp: jax.Array, max_corners: int = 64,
+                   rel_thresh: float = 0.06) -> np.ndarray:
+    """3x3 NMS + threshold; returns (n, 2) corner coordinates (y, x)."""
+    r = np.asarray(resp)
+    H, W = r.shape
+    thresh = rel_thresh * max(r.max(), 1e-9)
+    pad = np.pad(r, 1, constant_values=-np.inf)
+    # NMS with raster-order tie-breaking: a plateau yields exactly one
+    # corner (strict > against later-in-raster neighbours, >= earlier)
+    is_max = r > thresh
+    for dy in range(3):
+        for dx in range(3):
+            if (dy, dx) == (1, 1):
+                continue
+            n = pad[dy:dy + H, dx:dx + W]
+            if (dy, dx) > (1, 1):
+                is_max &= r > n
+            else:
+                is_max &= r >= n
+    ys, xs = np.nonzero(is_max)
+    if len(ys) > max_corners:
+        order = np.argsort(-r[ys, xs])[:max_corners]
+        ys, xs = ys[order], xs[order]
+    return np.stack([ys, xs], axis=1) if len(ys) else np.zeros((0, 2), int)
+
+
+def corners_equivalent(ref: np.ndarray, approx: np.ndarray) -> bool:
+    """Paper §6.3 equivalence: same corner count, and each approximate
+    corner closer to its reference counterpart than to any other corner."""
+    if ref.shape[0] != approx.shape[0]:
+        return False
+    if ref.shape[0] == 0:
+        return True
+    d = np.linalg.norm(ref[:, None, :] - approx[None, :, :], axis=-1)
+    # greedy matching: approx corner j matched to nearest ref i
+    nearest = d.argmin(0)
+    if len(set(nearest.tolist())) != ref.shape[0]:
+        return False  # two approx corners claim the same reference corner
+    for j, i in enumerate(nearest):
+        others = np.delete(d[:, j], i)
+        if others.size and d[i, j] > others.min():
+            return False
+    return True

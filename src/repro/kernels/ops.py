@@ -1,0 +1,55 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (kernels validated against ref.py
+oracles) and False on TPU (compiled kernels). The model zoo calls these
+when cfg.use_pallas is set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.anytime_svm import anytime_svm_scores
+from repro.kernels.harris import harris_pallas
+from repro.kernels.perforated_attention import perforated_attention
+from repro.kernels.rwkv6_wkv import rwkv6_wkv
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, block_keep=None, *, causal=True, block_q=128,
+              block_k=128, interpret=None):
+    """(B, H, S, Dh) attention with optional KV-block perforation."""
+    if block_keep is None:
+        block_keep = jnp.ones((k.shape[2] // block_k,), jnp.int32)
+    return perforated_attention(
+        q, k, v, block_keep, causal=causal, block_q=block_q,
+        block_k=block_k,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def svm_scores(x, w, b, p, *, interpret=None):
+    return anytime_svm_scores(
+        x, w, b, p,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def wkv(r, k, v, logw, u, *, chunk=32, interpret=None):
+    return rwkv6_wkv(
+        r, k, v, logw, u, chunk=chunk,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def ssd(x, dt, A, B_mat, C_mat, *, chunk=64, interpret=None):
+    return ssd_scan_pallas(
+        x, dt, A, B_mat, C_mat, chunk=chunk,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def harris(img, tile_keep, *, tile=16, k_harris=0.05, interpret=None):
+    return harris_pallas(
+        img, tile_keep, tile=tile, k_harris=k_harris,
+        interpret=_default_interpret() if interpret is None else interpret)

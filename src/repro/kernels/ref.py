@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def perforated_attention_ref(q, k, v, block_keep, *, causal: bool,
+                             block: int) -> jax.Array:
+    """q: (B, H, Sq, Dh); k/v: (B, H, Sk, Dh); block_keep: (Sk//block,).
+
+    Reference semantics of the kernel: dropped KV blocks never enter the
+    softmax; kept mass is renormalised implicitly.
+    """
+    B, H, Sq, Dh = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(Dh)
+    keep_tok = jnp.repeat(block_keep, block, total_repeat_length=Sk)
+    mask = keep_tok[None, None, None, :]
+    if causal:
+        mask = jnp.logical_and(
+            mask, (jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+                   )[None, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def anytime_svm_ref(x, w, b, p_features: int) -> jax.Array:
+    """x: (B, F) standardized+ordered; w: (C, F) ordered; b: (C,).
+
+    Scores using only the first ``p_features`` columns.
+    """
+    F = x.shape[1]
+    mask = (jnp.arange(F) < p_features).astype(x.dtype)
+    return (x * mask[None]) @ w.T + b[None]
+
+
+def rwkv6_chunk_ref(r, k, v, logw, u, s0):
+    """Single chunk WKV. r/k/v/logw: (Q, N); u: (N,); s0: (N, N).
+
+    Returns (y (Q, N), s_end (N, N)). Sequential reference recurrence.
+    """
+    Q, N = r.shape
+    s = s0.astype(jnp.float32)
+    ys = []
+    for t in range(Q):
+        kv = jnp.outer(k[t], v[t]).astype(jnp.float32)
+        ys.append((r[t].astype(jnp.float32)
+                   @ (s + u[:, None] * kv)).astype(jnp.float32))
+        s = jnp.exp(logw[t].astype(jnp.float32))[:, None] * s + kv
+    return jnp.stack(ys), s
+
+
+def ssd_chunk_ref(x, dt, a, B_mat, C_mat, h0):
+    """Single chunk SSD. x: (Q, H, P); dt/a: (Q, H); B/C: (Q, N);
+    h0: (H, N, P). Returns (y (Q, H, P), h_end)."""
+    Q, H, P = x.shape
+    N = B_mat.shape[-1]
+    h = h0.astype(jnp.float32)
+    ys = []
+    for t in range(Q):
+        decay = jnp.exp(a[t]).astype(jnp.float32)  # (H,)
+        upd = jnp.einsum("n,hp,h->hnp", B_mat[t].astype(jnp.float32),
+                         x[t].astype(jnp.float32), dt[t])
+        h = decay[:, None, None] * h + upd
+        ys.append(jnp.einsum("n,hnp->hp", C_mat[t].astype(jnp.float32), h))
+    return jnp.stack(ys), h
+
+
+def harris_ref(img, tile_keep, *, tile: int, k_harris: float = 0.05):
+    """Tile-perforated Harris response (same math as data.images)."""
+    from repro.data.images import harris_response_perforated
+
+    return harris_response_perforated(img, tile_keep, tile=tile, k=k_harris)

@@ -1,0 +1,229 @@
+"""Post-SPMD HLO analysis: loop-aware FLOP and collective-byte accounting.
+
+``compiled.cost_analysis()`` on the CPU backend visits each while-loop body
+ONCE, so scanned-layer models under-report FLOPs by ~n_layers x. This
+module re-derives the numbers from the optimized HLO text with a call-graph
+walk that multiplies while bodies by their trip counts:
+
+- dot flops: 2 * prod(output dims) * prod(lhs contracting dims),
+- collective bytes: output bytes per op (all-reduce counted 2x),
+- trip counts: parsed from the loop-condition computation's
+  ``compare(..., constant(N)), direction=LT`` pattern (the form XLA emits
+  for jax.lax.scan), falling back to 1 with a "bounded" flag.
+
+All numbers are PER-DEVICE (the post-SPMD module is the per-device
+program), which is the natural unit for the roofline terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(r"(pred|[a-z]+[0-9]+[a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s*([a-z][\w\-]*)\(")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",") if d]
+
+
+def _first_array_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            n = 1
+            for d in _dims(dims):
+                n *= d
+            total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    coll_bytes: dict | None = None
+    calls: list | None = None  # (callee, multiplier_kind)
+    lines: list | None = None
+
+
+def _parse_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # computation headers: "%name (params...) -> type {" (params may
+        # contain nested tuple parens) or "ENTRY %name (...) -> ... {"
+        if (s.endswith("{") and "->" in s
+                and (s.startswith("%") or s.startswith("ENTRY"))):
+            m = re.match(r"(?:ENTRY\s+)?%([\w\.\-]+)", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if s.startswith("ENTRY"):
+                    comps["__entry__"] = [cur]
+                continue
+        if cur is not None:
+            if s == "}":
+                cur = None
+                continue
+            comps[cur].append(s)
+    return comps
+
+
+def _dot_flops(line: str, shapes: dict[str, list[int]]) -> float:
+    """2 * output_elems * contraction_size for one dot line."""
+    rhs = line.split("=", 1)[1]
+    out_m = _ARRAY_RE.search(rhs)
+    if not out_m:
+        return 0.0
+    out_elems = 1
+    for d in _dims(out_m.group(2)):
+        out_elems *= d
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    # lhs operand: first %name inside dot(...), resolved via the
+    # computation-local shape table (operands are names, not typed)
+    inner = rhs[rhs.index("dot(") + 4:].split(")")[0]
+    lhs_dims: list[int] | None = None
+    lhs_m = _ARRAY_RE.search(inner)
+    if lhs_m:
+        lhs_dims = _dims(lhs_m.group(2))
+    else:
+        nm = re.search(r"%([\w\.\-]+)", inner)
+        if nm and nm.group(1) in shapes:
+            lhs_dims = shapes[nm.group(1)]
+    if lhs_dims is None or not cm:
+        return 2.0 * out_elems  # vector-ish fallback
+    contract = 1
+    for i in _dims(cm.group(1)):
+        if i < len(lhs_dims):
+            contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(cond_lines: list[str],
+                comps: dict[str, list[str]] | None = None
+                ) -> tuple[int, bool]:
+    """Parse scan loop bounds from the condition computation.
+
+    XLA lowers jax scans to `while(cond: i < constant(N))`; post-fusion the
+    compare usually lives in a fused computation called from the condition,
+    with the bound constant materialised in the condition itself. Heuristic:
+    if a compare (direct or one call level down) exists, the trip count is
+    the largest integer constant in the condition computation.
+    """
+    consts: list[int] = []
+    has_compare = False
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+        if "compare(" in line and "direction=" in line:
+            has_compare = True
+        if comps is not None and not has_compare:
+            for key in ("calls=", "to_apply="):
+                for cname in re.findall(key + r"%?([\w\.\-]+)", line):
+                    for cl in comps.get(cname, ()):
+                        if "compare(" in cl and "direction=" in cl:
+                            has_compare = True
+    if has_compare and consts:
+        return max(consts), True
+    return 1, False
+
+
+def analyze(hlo: str) -> dict:
+    comps = _parse_computations(hlo)
+    entry_name = None
+    if "__entry__" in comps:
+        entry_name = comps.pop("__entry__")[0]
+    stats: dict[str, CompStats] = {}
+    for name, lines in comps.items():
+        st = CompStats(coll_bytes={c: 0.0 for c in _COLLECTIVES}, calls=[],
+                       lines=lines)
+        shapes: dict[str, list[int]] = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            oname, out_sig, _ = m.groups()
+            am = _ARRAY_RE.search(out_sig)
+            if am:
+                shapes[oname] = _dims(am.group(2))
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, out_sig, op = m.groups()
+            if op == "dot":
+                st.flops += _dot_flops(line, shapes)
+            elif op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if bm:
+                    st.calls.append((bm.group(1), cm.group(1) if cm else None))
+            elif op in ("fusion", "call", "map", "reduce", "reduce-window",
+                        "scatter", "select-and-scatter", "sort",
+                        "conditional"):
+                for key in ("calls=", "to_apply=", "true_computation=",
+                            "false_computation="):
+                    for cname in re.findall(
+                            key.rstrip("=") + r"=%?([\w\.\-]+)", line):
+                        st.calls.append((cname, None))
+            else:
+                base = op.split(".")[0]
+                for c in _COLLECTIVES:
+                    if base == c or base == c + "-start":
+                        factor = 2 if c == "all-reduce" else 1
+                        st.coll_bytes[c] += factor * _first_array_bytes(
+                            out_sig)
+        stats[name] = st
+
+    memo: dict[str, tuple[float, dict]] = {}
+    unbounded: list[str] = []
+
+    def total(name: str, depth=0) -> tuple[float, dict]:
+        if name in memo:
+            return memo[name]
+        st = stats.get(name)
+        if st is None or depth > 64:
+            return 0.0, {c: 0.0 for c in _COLLECTIVES}
+        fl = st.flops
+        cb = dict(st.coll_bytes)
+        for callee, cond in st.calls:
+            cfl, ccb = total(callee, depth + 1)
+            mult = 1
+            if cond is not None:  # while loop: multiply by trip count
+                mult, bounded = _trip_count(comps.get(cond, []), comps)
+                if not bounded:
+                    unbounded.append(name)
+                cfl2, ccb2 = total(cond, depth + 1)
+                cfl, ccb = cfl + cfl2, {
+                    c: ccb[c] + ccb2[c] for c in _COLLECTIVES}
+            fl += mult * cfl
+            for c in _COLLECTIVES:
+                cb[c] += mult * ccb[c]
+        memo[name] = (fl, cb)
+        return memo[name]
+
+    entry = entry_name
+    if entry is None:
+        # pick the largest computation as entry fallback
+        entry = max(stats, key=lambda n: len(stats[n].lines or []))
+    flops, coll = total(entry)
+    return {
+        "flops_per_device": flops,
+        "collective_bytes_per_device": coll,
+        "collective_total_bytes_per_device": sum(coll.values()),
+        "entry": entry,
+        "n_computations": len(comps),
+        "unbounded_loops": len(unbounded),
+    }

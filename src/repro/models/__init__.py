@@ -1,0 +1,1 @@
+"""Model zoo: pure-functional JAX implementations of the assigned archs."""

@@ -1,0 +1,145 @@
+"""Attention: GQA with flash-style chunked softmax (pure JAX) + decode path.
+
+Default execution is pure JAX (lax.scan over query/KV chunks with an online
+softmax), so every assigned arch lowers and compiles on any backend — the
+multi-pod dry-run requirement. On TPU, ``use_pallas=True`` swaps in
+``repro.kernels.perforated_attention``.
+
+The paper's technique surfaces as *KV-block perforation*: an optional keep
+mask over KV chunks drops whole blocks (tile-grain loop perforation, see
+DESIGN.md). Kept blocks are softmax-renormalised automatically (dropped
+blocks simply never enter the running denominator).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+_PAD_POS = 2 ** 30  # sentinel position marking padded KV entries
+
+
+def _chunk(x: jax.Array, size: int, axis: int) -> jax.Array:
+    """(..., S, ...) -> (..., S//size, size, ...) moving chunk axis to 0."""
+    s = x.shape[axis]
+    assert s % size == 0, f"seq {s} not divisible by chunk {size}"
+    shape = x.shape[:axis] + (s // size, size) + x.shape[axis + 1:]
+    return jnp.moveaxis(x.reshape(shape), axis, 0)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool, chunk: int = 512,
+                    q_positions: jax.Array | None = None,
+                    kv_positions: jax.Array | None = None,
+                    kv_block_keep: jax.Array | None = None) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, Kv, Dh) with H % Kv == 0.
+    kv_block_keep: optional (num_kv_chunks,) bool — KV-block perforation.
+    Returns (B, Sq, H, Dh).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, Kv, _ = k.shape
+    G = H // Kv  # query heads per kv head
+    qc = min(chunk, Sq)
+    kc = min(chunk, Sk)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq)[None, :], (B, Sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Sk)[None, :], (B, Sk))
+    # pad ragged sequence lengths (e.g. whisper's 1500 frames) to the chunk
+    # grid; padded KV is masked out via a sentinel position, padded Q rows
+    # are sliced off the output.
+    sq_orig = Sq
+    if Sq % qc:
+        pad = qc - Sq % qc
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)))
+        Sq += pad
+    if Sk % kc:
+        pad = kc - Sk % kc
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=_PAD_POS)
+        Sk += pad
+    n_q = Sq // qc
+    n_k = Sk // kc
+    scale = 1.0 / (Dh ** 0.5)
+    if kv_block_keep is None:
+        kv_block_keep = jnp.ones((n_k,), bool)
+
+    qs = _chunk(q, qc, 1)  # (n_q, B, qc, H, Dh)
+    ks = _chunk(k, kc, 1)  # (n_k, B, kc, Kv, Dh)
+    vs = _chunk(v, kc, 1)
+    qpos = _chunk(q_positions, qc, 1)  # (n_q, B, qc)
+    kpos = _chunk(kv_positions, kc, 1)  # (n_k, B, kc)
+
+    def q_block(args):
+        qb, qp = args  # (B, qc, H, Dh), (B, qc)
+        qb = qb.reshape(B, qc, Kv, G, Dh)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, kp, keep = inp  # (B, kc, Kv, Dh), ..., (B, kc), scalar
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kp[:, None, None, None, :] <= qp[:, None, None, :, None] \
+                if causal else (kp < _PAD_POS)[:, None, None, None, :]
+            mask = jnp.logical_and(mask, keep)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kv, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, qc, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (ks, vs, kpos, kv_block_keep))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, Dh)
+
+    outs = jax.lax.map(q_block, (qs, qpos))  # (n_q, B, qc, H, Dh)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, Dh)
+    return out[:, :sq_orig].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *,
+                     kv_block_keep: jax.Array | None = None,
+                     block: int = 512) -> jax.Array:
+    """Single-token decode attention against a (possibly perforated) cache.
+
+    q: (B, H, Dh); k_cache/v_cache: (B, Smax, Kv, Dh);
+    cache_len: scalar or (B,) number of valid cache entries.
+    kv_block_keep: optional (Smax//block,) bool keep mask (KV perforation —
+    the anytime decode knob). Always keeps the final partial block (the
+    newest tokens; the paper: newer inputs matter more).
+    """
+    B, Smax, Kv, Dh = k_cache.shape
+    H = q.shape[1]
+    G = H // Kv
+    scale = 1.0 / (Dh ** 0.5)
+    qb = q.reshape(B, Kv, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qb, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax)[None, :]
+    if jnp.ndim(cache_len) == 0:
+        cache_len = jnp.full((B,), cache_len)
+    valid = pos < cache_len[:, None]  # (B, Smax)
+    if kv_block_keep is not None:
+        keep_tok = jnp.repeat(kv_block_keep, block, total_repeat_length=Smax)
+        # pin the newest block: tokens within `block` of the cache tail
+        newest = pos >= (cache_len[:, None] - block)
+        valid = jnp.logical_and(valid, jnp.logical_or(keep_tok[None], newest))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, Dh).astype(q.dtype)

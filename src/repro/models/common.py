@@ -1,0 +1,111 @@
+"""Shared building blocks: norms, embeddings, RoPE/M-RoPE, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def fanin_init(key, shape, dtype):
+    """Scaled init for projection matrices: N(0, 1/fan_in)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)  # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions_thw: jax.Array,
+                sections: tuple[int, int, int],
+                theta: float = 1e4) -> jax.Array:
+    """Multi-axis RoPE (qwen2-vl): head_dim/2 freqs split into t/h/w sections.
+
+    x: (..., S, H, Dh). positions_thw: (..., S, 3) int32 — temporal, height,
+    width positions per token (text tokens carry t=h=w=index, so M-RoPE
+    degenerates to RoPE on pure text).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    s_t, s_h, s_w = sections
+    assert s_t + s_h + s_w == half, "mrope sections must cover head_dim/2"
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)  # (half,)
+    sec_id = jnp.asarray([0] * s_t + [1] * s_h + [2] * s_w)  # (half,)
+    # select the position stream (t/h/w) driving each frequency section
+    pos = jnp.where(sec_id == 0, positions_thw[..., :, None, 0],
+                    jnp.where(sec_id == 1, positions_thw[..., :, None, 1],
+                              positions_thw[..., :, None, 2])
+                    ).astype(jnp.float32)
+    ang = pos * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """(..., S) -> (..., S, 3) with t=h=w (text tokens)."""
+    return jnp.stack([positions] * 3, axis=-1)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)

@@ -1,0 +1,194 @@
+"""Zamba2-style hybrid: Mamba2 stacks with a SHARED attention block.
+
+54 Mamba2 layers in groups of ``shared_attn_every``; after each group the
+single shared attention+MLP block runs on (hidden + embedding residual).
+Weights of the shared block are reused at every invocation (that is the
+zamba2 trick: attention quality at ~1/9th the attention parameter cost);
+each invocation keeps its own KV cache.
+
+Anytime mapping: layer perforation applies to the Mamba groups; KV
+perforation applies to the shared block's caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.common import (apply_rope, dtype_of, fanin_init,
+                                 normal_init, rms_norm, split_keys)
+from repro.models.mlp import init_mlp, mlp
+from repro.models.ssm import init_mamba2, mamba2_block
+from repro.models.transformer import Knobs, chunked_ce
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = split_keys(key, 8)
+    G, K = _n_groups(cfg), cfg.shared_attn_every
+    mamba = init_mamba2(ks[0], cfg.d_model, state=cfg.ssm_state,
+                        expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+                        conv=cfg.ssm_conv, dtype=dtype, stack=(G, K))
+    mamba["ln"] = jnp.ones((G, K, cfg.d_model), dtype)
+    H, Kv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ka = split_keys(ks[1], 4)
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": {
+            "wq": fanin_init(ka[0], (cfg.d_model, H * Dh), dtype),
+            "wk": fanin_init(ka[1], (cfg.d_model, Kv * Dh), dtype),
+            "wv": fanin_init(ka[2], (cfg.d_model, Kv * Dh), dtype),
+            "wo": fanin_init(ka[3], (H * Dh, cfg.d_model), dtype),
+        },
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+    return {
+        "embed": normal_init(ks[3], (cfg.vocab_size, cfg.d_model), dtype),
+        "mamba": mamba,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "unembed": normal_init(ks[4], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def _shared_attn(h, x0, p, cfg: ModelConfig, positions, knobs: Knobs,
+                 cache=None, cache_len=None):
+    """The shared attention+MLP block; input gets the embedding residual."""
+    B, S, D = h.shape
+    cd = h.dtype
+    xin = rms_norm(h + x0, p["ln1"], cfg.norm_eps)
+    H, Kv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (xin @ p["attn"]["wq"].astype(cd)).reshape(B, S, H, Dh)
+    k = (xin @ p["attn"]["wk"].astype(cd)).reshape(B, S, Kv, Dh)
+    v = (xin @ p["attn"]["wv"].astype(cd)).reshape(B, S, Kv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        out = attn_mod.flash_attention(q, k, v, causal=True,
+                                       chunk=cfg.attn_chunk,
+                                       kv_block_keep=knobs.kv_block_keep)
+        new_kv = (k, v)
+    else:
+        k_c, v_c = cache
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            k_c, k.astype(k_c.dtype), cache_len, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            v_c, v.astype(v_c.dtype), cache_len, axis=1)
+        out = attn_mod.decode_attention(
+            q[:, 0], k_c, v_c, cache_len + 1,
+            kv_block_keep=knobs.kv_block_keep, block=cfg.attn_chunk)[:, None]
+        new_kv = (k_c, v_c)
+    a = out.reshape(B, S, H * Dh) @ p["attn"]["wo"].astype(cd)
+    h = h + a
+    h = h + mlp(rms_norm(h, p["ln2"], cfg.norm_eps), p["mlp"], cd)
+    return h, new_kv
+
+
+def _forward(params, tokens, cfg: ModelConfig, knobs: Knobs,
+             states=None, cache_len=None, collect_states: bool = False):
+    """states: None (train) or dict with 'ssm', 'conv', 'attn_kv'."""
+    cd = dtype_of(cfg.compute_dtype)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x0 = h
+    B, S = tokens.shape
+    decode = states is not None
+    if decode:
+        positions = jnp.broadcast_to(
+            jnp.asarray(cache_len, jnp.int32)[None, None], (B, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    G = _n_groups(cfg)
+    new_states = {"ssm": [], "conv": [], "attn_kv": []}
+    keep_states = decode or collect_states
+
+    for g in range(G):
+        gp = jax.tree.map(lambda a: a[g], params["mamba"])
+
+        def body(carry, xs):
+            hh = carry
+            lp, st = xs
+            y, (ssm_s, conv_s) = mamba2_block(
+                rms_norm(hh, lp["ln"], cfg.norm_eps), lp, cfg,
+                ssm_state=st["ssm"] if decode else None,
+                conv_state=st["conv"] if decode else None,
+                decode=decode)
+            st_out = ({"ssm": ssm_s, "conv": conv_s} if keep_states
+                      else None)
+            return hh + y, st_out
+
+        if decode:
+            xs = (gp, {"ssm": states["ssm"][g], "conv": states["conv"][g]})
+        else:
+            xs = (gp, {"ssm": jnp.zeros((cfg.shared_attn_every,), jnp.int8),
+                       "conv": jnp.zeros((cfg.shared_attn_every,), jnp.int8)})
+        body_fn = jax.checkpoint(body) if cfg.remat and not decode else body
+        h, sts = jax.lax.scan(body_fn, h, xs)
+        new_states["ssm"].append(sts["ssm"] if keep_states else None)
+        new_states["conv"].append(sts["conv"] if keep_states else None)
+        h, kv = _shared_attn(h, x0, params["shared"], cfg, positions, knobs,
+                             cache=states["attn_kv"][g] if decode else None,
+                             cache_len=cache_len)
+        new_states["attn_kv"].append(kv)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, new_states
+
+
+def train_loss(params, batch, cfg: ModelConfig, knobs: Knobs = Knobs()):
+    h, _ = _forward(params, batch["tokens"], cfg, knobs)
+    loss = chunked_ce(h, params["unembed"], batch["labels"], cfg,
+                      batch.get("loss_mask"))
+    return loss, {"ce": loss, "router_aux": jnp.zeros((), jnp.float32)}
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode state: per-group stacked SSM/conv states + shared-attn caches."""
+    dtype = dtype_of(cfg.compute_dtype)
+    G, K = _n_groups(cfg), cfg.shared_attn_every
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    ssm = [jnp.zeros((K, batch, H, cfg.ssm_state, cfg.ssm_headdim),
+                     jnp.float32) for _ in range(G)]
+    conv = [jnp.zeros((K, batch, cfg.ssm_conv - 1,
+                       d_inner + 2 * cfg.ssm_state), dtype)
+            for _ in range(G)]
+    kv = [(jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+           jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype))
+          for _ in range(G)]
+    return {"ssm": ssm, "conv": conv, "attn_kv": kv}
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int,
+            knobs: Knobs = Knobs()):
+    """Run the prompt, materialising SSM/conv states + shared-attn caches."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h, sts = _forward(params, tokens, cfg, knobs, collect_states=True)
+    logits = h[:, -1] @ params["unembed"].astype(h.dtype)
+    # place full-seq shared-attn K/V into fixed-size caches
+    dtype = dtype_of(cfg.compute_dtype)
+    kv_caches = []
+    for (k, v) in sts["attn_kv"]:
+        k_c = jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        v_c = jnp.zeros_like(k_c)
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            k_c, k.astype(dtype), 0, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            v_c, v.astype(dtype), 0, axis=1)
+        kv_caches.append((k_c, v_c))
+    state = {"ssm": sts["ssm"], "conv": sts["conv"], "attn_kv": kv_caches}
+    return logits.astype(jnp.float32), state, S
+
+
+def decode_step(params, states, token, cache_len, cfg: ModelConfig,
+                knobs: Knobs = Knobs()):
+    h, new_states = _forward(params, token[:, None], cfg, knobs,
+                             states=states, cache_len=cache_len)
+    logits = h[:, 0] @ params["unembed"].astype(h.dtype)
+    return logits.astype(jnp.float32), new_states

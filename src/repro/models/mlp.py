@@ -1,0 +1,42 @@
+"""Gated (SwiGLU) MLP used by all dense archs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fanin_init, silu
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, stack: tuple[int, ...] = ()):
+    k1, k2 = jax.random.split(key)
+    return {
+        # gate and up projections fused on the output dim
+        "wi": fanin_init(k1, (*stack, d_model, 2 * d_ff), dtype),
+        "wo": fanin_init(k2, (*stack, d_ff, d_model), dtype),
+    }
+
+
+def mlp(x: jax.Array, p, compute_dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(compute_dtype))
+    g, u = jnp.split(h, 2, axis=-1)
+    return jnp.einsum("bsf,fd->bsd", silu(g) * u,
+                      p["wo"].astype(compute_dtype))
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype,
+                  stack: tuple[int, ...] = ()):
+    """Whisper-style (non-gated, GELU) MLP with biases."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": fanin_init(k1, (*stack, d_model, d_ff), dtype),
+        "bi": jnp.zeros((*stack, d_ff), dtype),
+        "wo": fanin_init(k2, (*stack, d_ff, d_model), dtype),
+        "bo": jnp.zeros((*stack, d_model), dtype),
+    }
+
+
+def gelu_mlp(x: jax.Array, p, compute_dtype) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(compute_dtype))
+    h = jax.nn.gelu(h + p["bi"].astype(compute_dtype), approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(compute_dtype)) \
+        + p["bo"].astype(compute_dtype)

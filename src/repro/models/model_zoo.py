@@ -1,0 +1,169 @@
+"""Uniform model API across the ten assigned architectures.
+
+Every family exposes:
+- init_params(cfg, key)
+- train_loss(params, batch, cfg, knobs) -> (loss, metrics)
+- decode_step(params, state, token, cache_len, cfg, knobs) -> (logits, state)
+- init_decode_state(cfg, batch, max_len)
+- prefill(params, batch, cfg, max_len, knobs) (transformer/encdec families)
+
+plus ``input_specs(cfg, shape)``: ShapeDtypeStruct stand-ins for every model
+input of an (arch x shape) cell — weak-type-correct, shardable, and never
+allocating device memory (the dry-run contract).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, rwkv, transformer
+from repro.models.common import dtype_of
+from repro.models.transformer import Knobs
+
+
+def family_of(cfg: ModelConfig) -> str:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return "transformer"
+    if cfg.family == "encdec":
+        return "encdec"
+    if cfg.family == "ssm":
+        return "rwkv"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key):
+    fam = family_of(cfg)
+    if fam == "transformer":
+        return transformer.init_params(cfg, key)
+    if fam == "encdec":
+        return encdec.init_params(cfg, key)
+    if fam == "rwkv":
+        return rwkv.init_lm_params(cfg, key)
+    return hybrid.init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def train_loss(params, batch, cfg: ModelConfig, knobs: Knobs = Knobs()):
+    fam = family_of(cfg)
+    if fam == "transformer":
+        return transformer.train_loss(params, batch, cfg, knobs)
+    if fam == "encdec":
+        return encdec.train_loss(params, batch, cfg, knobs)
+    if fam == "rwkv":
+        return rwkv.lm_train_loss(params, batch, cfg, knobs)
+    return hybrid.train_loss(params, batch, cfg, knobs)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    fam = family_of(cfg)
+    if fam == "transformer":
+        return transformer.init_cache(cfg, batch, max_len)
+    if fam == "encdec":
+        return encdec.init_cache(cfg, batch, max_len)
+    if fam == "rwkv":
+        return rwkv.lm_init_state(cfg, batch)
+    return hybrid.init_state(cfg, batch, max_len)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_len))
+
+
+def decode_step(params, state, token, cache_len, cfg: ModelConfig,
+                knobs: Knobs = Knobs()):
+    fam = family_of(cfg)
+    if fam == "transformer":
+        return transformer.decode_step(params, state, token, cache_len, cfg,
+                                       knobs)
+    if fam == "encdec":
+        return encdec.decode_step(params, state, token, cache_len, cfg,
+                                  knobs)
+    if fam == "rwkv":
+        return rwkv.lm_decode_step(params, state, token, cache_len, cfg,
+                                   knobs)
+    return hybrid.decode_step(params, state, token, cache_len, cfg, knobs)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int,
+            knobs: Knobs = Knobs()):
+    fam = family_of(cfg)
+    if fam == "transformer":
+        return transformer.prefill(params, batch["tokens"], cfg, max_len,
+                                   batch.get("vision_embeds"), knobs)
+    if fam == "encdec":
+        return encdec.prefill(params, batch, cfg, max_len, knobs)
+    if fam == "rwkv":
+        return rwkv.lm_prefill(params, batch, cfg, max_len, knobs)
+    return hybrid.prefill(params, batch, cfg, max_len, knobs)
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train/prefill: token batch (+ modality-stub embeddings);
+    decode: one new token + the populated decode state + cache_len.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cd = dtype_of(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), cd)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds(
+                (B, cfg.n_vision_tokens, cfg.d_model), cd)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), cd)
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds(
+                (B, cfg.n_vision_tokens, cfg.d_model), cd)
+        return {"batch": batch}
+    # decode: one token against a seq_len-deep cache/state
+    state = jax.tree.map(
+        lambda x: _sds(x.shape, x.dtype),
+        abstract_decode_state(cfg, B, S))
+    return {
+        "state": state,
+        "token": _sds((B,), jnp.int32),
+        "cache_len": _sds((), jnp.int32),
+    }
+
+
+def make_train_batch(cfg: ModelConfig, B: int, S: int, key) -> dict:
+    """Concrete synthetic batch (smoke tests / examples)."""
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            k2, (B, cfg.enc_seq, cfg.d_model), cd)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            k2, (B, cfg.n_vision_tokens, cfg.d_model), cd)
+    return batch

@@ -1,0 +1,246 @@
+"""RWKV6 (Finch) block — data-dependent decay linear attention, pure JAX.
+
+The WKV recurrence is computed with a chunked formulation whose exponents
+are all <= 0 (decay products over suffix windows), so it is numerically
+stable in fp32 at any sequence length; the chunk loop is a lax.scan (O(1)
+HLO — long_500k compiles). ``repro.kernels.rwkv6_wkv`` is the Pallas TPU
+counterpart of the inner chunk computation.
+
+Per the paper mapping (DESIGN.md §Arch-applicability): rwkv6 has no KV
+cache, so KV perforation is inapplicable; the anytime knobs for this arch
+are early exit and layer perforation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fanin_init, rms_norm, silu
+
+
+def init_rwkv6(key, d_model: int, *, head_dim: int, d_ff: int, dtype,
+               lora_r: int = 64, stack: tuple[int, ...] = ()):
+    H = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift interpolation factors for r/k/v/w/g
+        "mu": 0.5 * jnp.ones((*stack, 5, d_model), dtype),
+        "wr": fanin_init(ks[0], (*stack, d_model, d_model), dtype),
+        "wk": fanin_init(ks[1], (*stack, d_model, d_model), dtype),
+        "wv": fanin_init(ks[2], (*stack, d_model, d_model), dtype),
+        "wg": fanin_init(ks[3], (*stack, d_model, d_model), dtype),
+        "wo": fanin_init(ks[4], (*stack, d_model, d_model), dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((*stack, d_model), -1.0, jnp.float32),
+        "wA": fanin_init(ks[5], (*stack, d_model, lora_r), dtype),
+        "wB": fanin_init(ks[6], (*stack, lora_r, d_model), dtype),
+        "u": jnp.zeros((*stack, H, head_dim), jnp.float32),  # bonus
+        "ln_x": jnp.ones((*stack, d_model), dtype),  # per-head group norm
+        # channel-mix
+        "ck": fanin_init(ks[7], (*stack, d_model, d_ff), dtype),
+        "cv": fanin_init(ks[8], (*stack, d_ff, d_model), dtype),
+        "cr": fanin_init(ks[9], (*stack, d_model, d_model), dtype),
+        "mu_c": 0.5 * jnp.ones((*stack, 2, d_model), dtype),
+    }
+
+
+def _wkv_chunk(r, k, v, logw, u, S0):
+    """One WKV chunk. r/k/v: (B, Q, H, N); logw: (B, Q, H, N) (<0);
+    u: (H, N); S0: (B, H, N, N). Returns (y (B,Q,H,N), S_end).
+
+    Recurrence: S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+                y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T).
+    """
+    Q = r.shape[1]
+    cum = jnp.cumsum(logw, axis=1)  # (B, Q, H, N), decreasing
+    cum_prev = cum - logw  # cum_{t-1} (exclusive)
+    # A[t,s] = sum_n r_t[n] k_s[n] exp(cum_prev_t - cum_s)[n], s < t
+    diff = cum_prev[:, :, None] - cum[:, None, :, :]  # (B, Q, S, H, N) <= 0
+    q_idx = jnp.arange(Q)
+    strict = (q_idx[:, None] > q_idx[None, :])[None, :, :, None, None]
+    amat = jnp.sum(jnp.where(strict, jnp.exp(diff), 0.0)
+                   * r[:, :, None].astype(jnp.float32)
+                   * k[:, None, :].astype(jnp.float32), axis=-1)  # (B,Q,S,H)
+    y = jnp.einsum("bqsh,bshn->bqhn", amat, v.astype(jnp.float32))
+    # s == t bonus term
+    bonus = jnp.sum(r.astype(jnp.float32) * u[None, None]
+                    * k.astype(jnp.float32), axis=-1)  # (B, Q, H)
+    y = y + bonus[..., None] * v.astype(jnp.float32)
+    # state contribution: r_t decayed to chunk start
+    y = y + jnp.einsum("bqhn,bhnm->bqhm",
+                       r.astype(jnp.float32) * jnp.exp(cum_prev), S0)
+    # chunk-end state
+    last = cum[:, -1:]  # (B, 1, H, N)
+    sdecay = jnp.exp(last - cum)  # (B, Q, H, N) <= 1
+    S_end = jnp.exp(last[:, 0, :, :, None]) * S0 + jnp.einsum(
+        "bqhn,bqhm->bhnm", k.astype(jnp.float32) * sdecay,
+        v.astype(jnp.float32))
+    return y, S_end
+
+
+def wkv_scan(r, k, v, logw, u, *, chunk: int = 32,
+             S0: jax.Array | None = None):
+    """Full-sequence WKV. All of r/k/v/logw: (B, L, H, N)."""
+    B, L, H, N = r.shape
+    Q = min(chunk, L)
+    assert L % Q == 0
+    n_chunks = L // Q
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, n_chunks, Q, H, N), 1, 0)
+
+    xs = (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(logw))
+    if S0 is None:
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, inp):
+        rc, kc, vc, wc = inp
+        y, S_new = _wkv_chunk(rc, kc, vc, wc, u, S)
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, L, H, N), S_final
+
+
+def _token_shift(x, last):
+    """shift(x)[t] = x[t-1]; position 0 takes ``last`` (decode carry)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(x, p, cfg, *, state=None, shift_last=None):
+    """x: (B, L, D). state: (B, H, N, N) WKV state. Returns (y, state, xlast)."""
+    B, L, D = x.shape
+    N = cfg.head_dim if cfg.head_dim else 64
+    H = D // N
+    cd = x.dtype
+    xs = _token_shift(x, shift_last)
+    dx = xs - x
+    mu = p["mu"].astype(cd)
+    xr, xk, xv, xw, xg = (x + dx * mu[i] for i in range(5))
+    r = (xr @ p["wr"].astype(cd)).reshape(B, L, H, N)
+    k = (xk @ p["wk"].astype(cd)).reshape(B, L, H, N)
+    v = (xv @ p["wv"].astype(cd)).reshape(B, L, H, N)
+    g = silu(xg @ p["wg"].astype(cd))
+    lora = jnp.tanh(xw @ p["wA"].astype(cd)) @ p["wB"].astype(cd)
+    logw = -jnp.exp(p["w0"][None, None].astype(jnp.float32)
+                    + lora.astype(jnp.float32))  # < 0
+    logw = logw.reshape(B, L, H, N)
+    if L == 1 and state is not None:
+        # decode: one recurrence step
+        kv = jnp.einsum("bhn,bhm->bhnm", k[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnm->bhm", r[:, 0].astype(jnp.float32),
+                       state + p["u"][None, :, :, None] * kv)[:, None]
+        state = jnp.exp(logw[:, 0])[..., None] * state + kv
+    else:
+        y, state = wkv_scan(r, k, v, logw, p["u"],
+                            chunk=min(32, L), S0=state)
+    y = y.reshape(B, L, D).astype(cd)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    return y @ p["wo"].astype(cd), state, x[:, -1:]
+
+
+def init_lm_params(cfg, key):
+    """Full RWKV6 LM: embed + L scanned blocks + head."""
+    from repro.models.common import dtype_of, normal_init
+
+    dtype = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    L = cfg.n_layers
+    blocks = init_rwkv6(k1, cfg.d_model, head_dim=cfg.head_dim,
+                        d_ff=cfg.d_ff, dtype=dtype, stack=(L,))
+    blocks["ln1"] = jnp.ones((L, cfg.d_model), dtype)
+    blocks["ln2"] = jnp.ones((L, cfg.d_model), dtype)
+    return {
+        "embed": normal_init(k2, (cfg.vocab_size, cfg.d_model), dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "unembed": normal_init(k3, (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def lm_forward(params, tokens, cfg, *, states=None,
+               collect_states: bool = False):
+    """states: None (train) or {'wkv', 'tm_last', 'cm_last'} stacked (L, ...)
+    for single-token decode. ``collect_states``: emit per-layer final
+    states in full-sequence mode (prefill). Returns (h_final, new_states)."""
+    from repro.models.common import dtype_of
+
+    cd = dtype_of(cfg.compute_dtype)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    decode = states is not None
+
+    def body(carry, xs):
+        hh = carry
+        lp, st = xs
+        y, wkv, tm_last = rwkv6_time_mix(
+            rms_norm(hh, lp["ln1"], cfg.norm_eps), lp, cfg,
+            state=st["wkv"] if decode else None,
+            shift_last=st["tm_last"] if decode else None)
+        hh = hh + y
+        y, cm_last = rwkv6_channel_mix(
+            rms_norm(hh, lp["ln2"], cfg.norm_eps), lp,
+            shift_last=st["cm_last"] if decode else None)
+        hh = hh + y
+        new_st = ({"wkv": wkv, "tm_last": tm_last, "cm_last": cm_last}
+                  if (decode or collect_states) else None)
+        return hh, new_st
+
+    xs = (params["blocks"], states if decode
+          else jnp.zeros((cfg.n_layers,), jnp.int8))
+    body_fn = jax.checkpoint(body) if (cfg.remat and not decode) else body
+    h, new_states = jax.lax.scan(body_fn, h, xs)
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), new_states
+
+
+def lm_prefill(params, batch, cfg, max_len: int, knobs=None):
+    """Run the prompt, materialising per-layer WKV/shift states."""
+    del max_len  # state-based: no fixed-size cache
+    tokens = batch["tokens"]
+    h, states = lm_forward(params, tokens, cfg, collect_states=True)
+    logits = h[:, -1] @ params["unembed"].astype(h.dtype)
+    return logits.astype(jnp.float32), states, tokens.shape[1]
+
+
+def lm_train_loss(params, batch, cfg, knobs=None):
+    from repro.models.transformer import chunked_ce
+
+    h, _ = lm_forward(params, batch["tokens"], cfg)
+    loss = chunked_ce(h, params["unembed"], batch["labels"], cfg,
+                      batch.get("loss_mask"))
+    return loss, {"ce": loss, "router_aux": jnp.zeros((), jnp.float32)}
+
+
+def lm_init_state(cfg, batch: int):
+    from repro.models.common import dtype_of
+
+    dtype = dtype_of(cfg.compute_dtype)
+    L, D = cfg.n_layers, cfg.d_model
+    N = cfg.head_dim
+    H = D // N
+    return {
+        "wkv": jnp.zeros((L, batch, H, N, N), jnp.float32),
+        "tm_last": jnp.zeros((L, batch, 1, D), dtype),
+        "cm_last": jnp.zeros((L, batch, 1, D), dtype),
+    }
+
+
+def lm_decode_step(params, states, token, cache_len, cfg, knobs=None):
+    del cache_len  # state-based; no positional cache
+    h, new_states = lm_forward(params, token[:, None], cfg, states=states)
+    logits = h[:, 0] @ params["unembed"].astype(h.dtype)
+    return logits.astype(jnp.float32), new_states
+
+
+def rwkv6_channel_mix(x, p, *, shift_last=None):
+    cd = x.dtype
+    xs = _token_shift(x, shift_last)
+    dx = xs - x
+    mu = p["mu_c"].astype(cd)
+    xk = x + dx * mu[0]
+    xr = x + dx * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["ck"].astype(cd)))
+    return jax.nn.sigmoid(xr @ p["cr"].astype(cd)) * (
+        kk @ p["cv"].astype(cd)), x[:, -1:]

@@ -1,0 +1,150 @@
+"""Mamba2 (SSD) block — chunked parallel scan, pure JAX.
+
+Used by zamba2-2.7b. The chunked state-space-dual formulation computes
+intra-chunk contributions with causal decay matrices (all exponents <= 0,
+numerically safe) and carries the (H, N, P) state across chunks with
+``lax.scan`` — O(1) HLO size at any sequence length, which is what lets the
+long_500k decode cell compile. ``repro.kernels.ssd_scan`` is the TPU Pallas
+counterpart of the inner chunk computation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import fanin_init, rms_norm, silu
+
+
+def init_mamba2(key, d_model: int, *, state: int, expand: int, headdim: int,
+                conv: int, dtype, stack: tuple[int, ...] = ()):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * state + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": fanin_init(ks[0], (*stack, d_model, d_in_proj), dtype),
+        "conv_w": fanin_init(ks[1], (*stack, conv, d_inner + 2 * state),
+                             dtype),
+        "A_log": jnp.zeros((*stack, n_heads), jnp.float32),
+        "D": jnp.ones((*stack, n_heads), jnp.float32),
+        "dt_bias": jnp.full((*stack, n_heads), -2.0, jnp.float32),
+        "norm": jnp.ones((*stack, d_inner), dtype),
+        "out_proj": fanin_init(ks[2], (*stack, d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, L, C); w: (K, C).
+
+    Returns (y, new_state) where state is the trailing K-1 inputs.
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, xp[:, -(K - 1):] if K > 1 else state
+
+
+def _ssd_chunk(x, dt, a, B_mat, C_mat, h0):
+    """One chunk of the SSD recurrence.
+
+    x: (B, Q, H, P); dt: (B, Q, H); a: (B, Q, H) (= -exp(A_log)*dt <= 0);
+    B_mat, C_mat: (B, Q, N); h0: (B, H, N, P).
+    Returns (y (B, Q, H, P), h_end).
+    """
+    cum = jnp.cumsum(a, axis=1)  # (B, Q, H), decreasing
+    # intra-chunk: y_t += sum_{s<=t} exp(cum_t - cum_s + a-correction) ...
+    # using h_t = exp(a_t) h_{t-1} + dt_t B_t x_t: the s-term decay within
+    # the chunk is exp(cum_t - cum_s) for s < t and 1 for s == t.
+    decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,S,H)
+    q_idx = jnp.arange(x.shape[1])
+    causal = (q_idx[:, None] >= q_idx[None, :])[None, :, :, None]
+    diag = (q_idx[:, None] == q_idx[None, :])[None, :, :, None]
+    # replace s==t decay with exact 1 and zero out s>t
+    decay = jnp.where(diag, 1.0, jnp.where(causal, decay, 0.0))
+    cb = jnp.einsum("bqn,bsn->bqs", C_mat.astype(jnp.float32),
+                    B_mat.astype(jnp.float32))
+    m = cb[:, :, :, None] * decay * dt.astype(jnp.float32)[:, None, :, :]
+    y = jnp.einsum("bqsh,bshp->bqhp", m,
+                   x.astype(jnp.float32))
+    # state contribution: y_t += exp(cum_t) * C_t . h0
+    y = y + jnp.einsum("bqn,bhnp,bqh->bqhp", C_mat.astype(jnp.float32),
+                       h0, jnp.exp(cum))
+    # chunk-end state
+    last = cum[:, -1:, :]  # (B, 1, H)
+    sdecay = jnp.exp(last - cum)  # (B, Q, H) <= 1
+    h_end = jnp.exp(last[:, 0, :, None, None]) * h0 + jnp.einsum(
+        "bqn,bqhp,bqh->bhnp", B_mat.astype(jnp.float32),
+        x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None], sdecay)
+    return y, h_end
+
+
+def ssd_scan(x, dt, A, B_mat, C_mat, *, chunk: int = 64,
+             h0: jax.Array | None = None):
+    """Full-sequence SSD. x: (B, L, H, P); dt: (B, L, H); A: (H,) (>0);
+    B_mat/C_mat: (B, L, N). Returns (y, h_final)."""
+    Bsz, L, H, P = x.shape
+    N = B_mat.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    n_chunks = L // Q
+    a = -A[None, None, :] * dt  # (B, L, H) <= 0
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(Bsz, n_chunks, Q, *t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(a), to_chunks(B_mat),
+          to_chunks(C_mat))
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def step(h, inp):
+        xc, dtc, ac, bc, cc = inp
+        y, h_new = _ssd_chunk(xc, dtc, ac, bc, cc, h)
+        return h_new, y
+
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, H, P)
+    return y, h_final
+
+
+def mamba2_block(x: jax.Array, p, cfg, *, ssm_state=None, conv_state=None,
+                 decode: bool = False):
+    """Full Mamba2 block. x: (B, L, D) (L==1 for decode).
+
+    Returns (y, (ssm_state, conv_state)).
+    """
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    N = cfg.ssm_state
+    cd = x.dtype
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(cd))
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])  # (B, L, H)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(cd), conv_state)
+    xbc = silu(xbc)
+    xs, B_mat, C_mat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    xh = xs.reshape(*xs.shape[:2], H, cfg.ssm_headdim)
+    A = jnp.exp(p["A_log"])  # (H,) positive
+    if decode:
+        # single-step recurrence
+        a = jnp.exp(-A[None, :] * dt[:, 0])  # (B, H)
+        if ssm_state is None:
+            ssm_state = jnp.zeros((x.shape[0], H, N, cfg.ssm_headdim),
+                                  jnp.float32)
+        upd = jnp.einsum("bn,bhp,bh->bhnp", B_mat[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32), dt[:, 0])
+        ssm_state = a[:, :, None, None] * ssm_state + upd
+        y = jnp.einsum("bn,bhnp->bhp", C_mat[:, 0].astype(jnp.float32),
+                       ssm_state)[:, None]
+    else:
+        y, ssm_state = ssd_scan(xh, dt, A, B_mat, C_mat,
+                                chunk=min(64, xs.shape[1]), h0=ssm_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xs.shape[:2], d_inner).astype(cd)
+    y = rms_norm(y * silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(cd))
+    return out, (ssm_state, conv_state)

@@ -1,0 +1,430 @@
+"""Decoder-only transformer LM (dense / MoE / VLM variants).
+
+Layers are scanned over stacked parameters ("segments"), so HLO size is
+O(1) in depth even for 80-layer models. Segment plan per config:
+
+- dense:            [(dense, L)]
+- kimi-style MoE:   [(dense, first_k_dense), (moe, L - first_k_dense)]
+- llama4-style MoE: [(pair, L // 2)]  — pair = dense layer + MoE layer
+
+Anytime knobs (the paper's technique, first-class):
+- ``truncate_params``: early exit at depth k (prefix of segments),
+- ``perforate_params``: depth-wise layer perforation (keep an index set),
+- ``Knobs.kv_block_keep``: KV-block-perforated attention,
+- ``Knobs.moe_topk``: fewer experts per token.
+Each knob produces a *smaller program that completes within the budget*,
+never a checkpoint of a bigger one — the paper's design point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (apply_mrope, apply_rope, dtype_of,
+                                 fanin_init, normal_init, rms_norm,
+                                 split_keys, text_mrope_positions)
+from repro.models.mlp import init_mlp, mlp
+from repro.sharding import shard_hint
+from repro.sharding.context import batch_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Knobs:
+    """Runtime approximation knobs (None = exact)."""
+
+    kv_block_keep: jax.Array | None = None
+    moe_topk: int | None = None
+
+    def __hash__(self):  # static arg in jit when kv_block_keep is None
+        return hash((self.kv_block_keep is None, self.moe_topk))
+
+
+# ---------------------------------------------------------------------------
+# segment plan
+# ---------------------------------------------------------------------------
+
+
+def segment_plan(cfg: ModelConfig) -> list[tuple[str, int]]:
+    if not cfg.is_moe:
+        return [("dense", cfg.n_layers)]
+    if cfg.moe_every_k == 2:
+        assert cfg.n_layers % 2 == 0
+        return [("pair", cfg.n_layers // 2)]
+    plan = []
+    if cfg.first_k_dense:
+        plan.append(("dense", cfg.first_k_dense))
+    plan.append(("moe", cfg.n_layers - cfg.first_k_dense))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ModelConfig, dtype, stack):
+    D, H, Kv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    return {
+        "wq": fanin_init(ks[0], (*stack, D, H * Dh), dtype),
+        "wk": fanin_init(ks[1], (*stack, D, Kv * Dh), dtype),
+        "wv": fanin_init(ks[2], (*stack, D, Kv * Dh), dtype),
+        "wo": fanin_init(ks[3], (*stack, H * Dh, D), dtype),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype, stack):
+    ks = split_keys(key, 4)
+    p = {
+        "ln1": jnp.ones((*stack, cfg.d_model), dtype),
+        "ln2": jnp.ones((*stack, cfg.d_model), dtype),
+        "attn": _init_attn(ks[0], cfg, dtype, stack),
+    }
+    if kind == "dense":
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, stack)
+    elif kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.moe_d_ff,
+                                    cfg.n_experts, dtype, stack,
+                                    cfg.shared_expert)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = split_keys(key, 8)
+    params: dict = {
+        "embed": normal_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "segments": {},
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = normal_init(
+            ks[1], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.exit_every:
+        params["exit_norm"] = jnp.ones((cfg.d_model,), dtype)
+    for i, (kind, count) in enumerate(segment_plan(cfg)):
+        kseg = jax.random.fold_in(ks[2], i)
+        if kind == "pair":
+            ka, kb = jax.random.split(kseg)
+            params["segments"][f"seg{i}"] = {
+                "a": _init_block(ka, cfg, "dense", dtype, (count,)),
+                "b": _init_block(kb, cfg, "moe", dtype, (count,)),
+            }
+        else:
+            params["segments"][f"seg{i}"] = _init_block(
+                kseg, cfg, kind, dtype, (count,))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _rope_qk(q, k, positions, cfg):
+    if cfg.mrope_sections != (0, 0, 0):
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _attention(x, p, cfg: ModelConfig, positions, *, knobs: Knobs,
+               cache=None, cache_len=None):
+    """Returns (out, new_kv): new_kv is (k, v) in train/prefill mode, or the
+    updated (k_cache, v_cache) in decode mode."""
+    B, S, D = x.shape
+    H, Kv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = x.dtype
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, Dh)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, Kv, Dh)
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, Kv, Dh)
+    q = shard_hint(q, batch_spec()[0], None, "model", None)
+    q, k = _rope_qk(q, k, positions, cfg)
+    if cache is None:
+        out = attn_mod.flash_attention(
+            q, k, v, causal=True, chunk=cfg.attn_chunk,
+            kv_block_keep=knobs.kv_block_keep)
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
+        out = attn_mod.decode_attention(
+            q[:, 0], k_cache, v_cache, cache_len + 1,
+            kv_block_keep=knobs.kv_block_keep, block=cfg.attn_chunk)
+        out = out[:, None]  # (B, 1, H, Dh)
+        new_kv = (k_cache, v_cache)
+    out = out.reshape(B, S, H * Dh)
+    return out @ p["wo"].astype(cd), new_kv
+
+
+def _block(h, p, cfg: ModelConfig, kind: str, positions, *, knobs: Knobs,
+           cache=None, cache_len=None):
+    """One transformer layer. Returns (h, new_kv, aux)."""
+    a, new_kv = _attention(rms_norm(h, p["ln1"], cfg.norm_eps), p["attn"],
+                           cfg, positions, knobs=knobs, cache=cache,
+                           cache_len=cache_len)
+    h = h + a
+    hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if kind == "dense":
+        f = mlp(hn, p["mlp"], h.dtype)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        f, aux = moe_mod.moe_ffn_distributed(
+            hn, p["moe"], cfg, compute_dtype=h.dtype,
+            topk_override=knobs.moe_topk)
+    h = h + f
+    h = shard_hint(h, batch_spec()[0], None, None)
+    return h, new_kv, aux
+
+
+def _run_segments(h, params, cfg: ModelConfig, positions, *, knobs: Knobs,
+                  caches=None, cache_len=None, plan=None,
+                  collect_kv: bool = False):
+    """Scan every segment. Returns (h, new_caches, aux_sum).
+
+    ``collect_kv``: in prefill mode, emit per-layer K/V as scan outputs to
+    seed the decode cache. Train mode keeps scan outputs empty (emitting
+    every layer's K/V would materialise the full activation stack).
+    """
+    plan = plan or segment_plan(cfg)
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    decode = caches is not None
+
+    for i, (kind, count) in enumerate(plan):
+        seg_p = params["segments"][f"seg{i}"]
+        seg_cache = caches[f"seg{i}"] if decode else None
+
+        def body(carry, xs, _kind=kind):
+            hh, aux = carry
+            if _kind == "pair":
+                lp, lc = xs
+                hh, kv_a, aux_a = _block(
+                    hh, lp["a"], cfg, "dense", positions, knobs=knobs,
+                    cache=lc["a"] if decode else None, cache_len=cache_len)
+                hh, kv_b, aux_b = _block(
+                    hh, lp["b"], cfg, "moe", positions, knobs=knobs,
+                    cache=lc["b"] if decode else None, cache_len=cache_len)
+                kv = {"a": kv_a, "b": kv_b}
+                if not (decode or collect_kv):
+                    kv = None
+                return (hh, aux + aux_a + aux_b), kv
+            lp, lc = xs
+            hh, kv, aux_l = _block(
+                hh, lp, cfg, _kind, positions, knobs=knobs,
+                cache=lc if decode else None, cache_len=cache_len)
+            if not (decode or collect_kv):
+                kv = None
+            return (hh, aux + aux_l), kv
+
+        xs = (seg_p, seg_cache if decode
+              else jnp.zeros((count,), jnp.int8))
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (h, aux_total), ys = jax.lax.scan(body_fn, (h, aux_total), xs)
+        new_caches[f"seg{i}"] = ys
+    return h, new_caches, aux_total
+
+
+def _embed(params, tokens, cfg: ModelConfig, vision_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h.astype(dtype_of(cfg.compute_dtype))
+    if cfg.n_vision_tokens and vision_embeds is not None:
+        # clip to the sequence (short prompts in tests/serving may be
+        # shorter than the full vision prefix)
+        v = vision_embeds[:, :min(vision_embeds.shape[1],
+                                  h.shape[1])].astype(h.dtype)
+        h = jax.lax.dynamic_update_slice_in_dim(h, v, 0, axis=1)
+    return h
+
+
+def _positions(cfg: ModelConfig, B: int, S: int, offset=0):
+    pos = jnp.arange(S)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections == (0, 0, 0):
+        return pos
+    if not cfg.n_vision_tokens:
+        return text_mrope_positions(pos)
+    # M-RoPE with a vision prefix: vision tokens at t=0 on a (g x g) grid
+    nv = cfg.n_vision_tokens
+    g = max(int(nv ** 0.5), 1)
+    vis_idx = jnp.arange(nv)
+    vis = jnp.stack([jnp.zeros((nv,), jnp.int32), vis_idx // g,
+                     vis_idx % g], axis=-1)  # (nv, 3)
+    txt = text_mrope_positions(pos)  # (B, S, 3)
+    vis = jnp.pad(vis[:S], ((0, max(S - min(nv, S), 0)), (0, 0)))
+    mixed = jnp.where((jnp.arange(S) < nv)[None, :, None], vis[None], txt)
+    return mixed
+
+
+def _unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def chunked_ce(h, unembed, labels, cfg: ModelConfig, mask=None):
+    """Cross-entropy without materialising full (T, V) logits: lax.map over
+    token chunks; each chunk's logits are recomputed in the backward pass.
+    """
+    B, S, D = h.shape
+    T = B * S
+    n_chunks = 16 if T % 16 == 0 else (8 if T % 8 == 0 else 1)
+    hc = h.reshape(n_chunks, T // n_chunks, D)
+    lc = labels.reshape(n_chunks, T // n_chunks)
+    mc = (mask.reshape(n_chunks, T // n_chunks) if mask is not None
+          else jnp.ones_like(lc, jnp.float32))
+    w = unembed.astype(h.dtype)
+
+    def one(args):
+        hh, ll, mm = args
+        logits = (hh @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[:, None], axis=-1)[:, 0]
+        return jnp.sum((lse - gold) * mm), jnp.sum(mm)
+
+    body = jax.checkpoint(one) if cfg.remat else one
+    losses, counts = jax.lax.map(body, (hc, lc, mc))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, batch, cfg: ModelConfig,
+               knobs: Knobs = Knobs()) -> tuple[jax.Array, dict]:
+    """batch: {tokens (B, S), labels (B, S), [loss_mask (B, S)],
+    [vision_embeds (B, nv, D)]}."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed(params, tokens, cfg, batch.get("vision_embeds"))
+    h = shard_hint(h, batch_spec()[0], None, None)
+    pos = _positions(cfg, B, S)
+    h, _, aux = _run_segments(h, params, cfg, pos, knobs=knobs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    loss = chunked_ce(h, _unembed_matrix(params, cfg), batch["labels"], cfg,
+                      batch.get("loss_mask"))
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "router_aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               plan=None) -> dict:
+    """KV caches per segment, stacked like the scanned params."""
+    dtype = dtype_of(cfg.compute_dtype)
+    Kv, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def kv(count):
+        shape = (count, batch, max_len, Kv, Dh)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    caches = {}
+    for i, (kind, count) in enumerate(plan or segment_plan(cfg)):
+        caches[f"seg{i}"] = ({"a": kv(count), "b": kv(count)}
+                             if kind == "pair" else kv(count))
+    return caches
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            vision_embeds=None, knobs: Knobs = Knobs()):
+    """Run the prompt; returns (last-token logits, filled cache, length)."""
+    B, S = tokens.shape
+    h = _embed(params, tokens, cfg, vision_embeds)
+    pos = _positions(cfg, B, S)
+    h, kvs, _ = _run_segments(h, params, cfg, pos, knobs=knobs,
+                              collect_kv=True)
+    h = rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0] @ _unembed_matrix(params, cfg).astype(h.dtype))
+    # place prompt K/V into fixed-size caches
+    caches = init_cache(cfg, B, max_len)
+    filled = jax.tree.map(
+        lambda c, kv_: jax.lax.dynamic_update_slice_in_dim(
+            c, kv_.astype(c.dtype), 0, axis=2),
+        caches, kvs)
+    return logits.astype(jnp.float32), filled, S
+
+
+def decode_step(params, caches, token, cache_len, cfg: ModelConfig,
+                knobs: Knobs = Knobs(), plan=None):
+    """One decode step. token: (B,) int32; cache_len: scalar int32.
+
+    Returns (logits (B, V) fp32, new caches).
+    """
+    B = token.shape[0]
+    h = _embed(params, token[:, None], cfg)
+    pos_scalar = jnp.full((B, 1), cache_len, jnp.int32)
+    if cfg.mrope_sections != (0, 0, 0):
+        pos = text_mrope_positions(pos_scalar)
+    else:
+        pos = pos_scalar
+    h, new_caches, _ = _run_segments(h, params, cfg, pos, knobs=knobs,
+                                     caches=caches, cache_len=cache_len,
+                                     plan=plan)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0] @ _unembed_matrix(params, cfg).astype(h.dtype)
+    return logits.astype(jnp.float32), new_caches
+
+
+# ---------------------------------------------------------------------------
+# anytime transformations (early exit / layer perforation)
+# ---------------------------------------------------------------------------
+
+
+def _slice_plan(cfg: ModelConfig, k: int):
+    """Split depth budget k across the segment plan."""
+    plan = segment_plan(cfg)
+    out = []
+    left = k
+    for kind, count in plan:
+        step = 2 if kind == "pair" else 1
+        take = min(count, max(left // step, 0))
+        if take > 0:
+            out.append((kind, take))
+        left -= count * step
+    return out
+
+
+def truncate_params(params, cfg: ModelConfig, exit_layer: int):
+    """Early exit at depth ``exit_layer``: returns (params', plan') where the
+    scanned stacks are sliced to the first k layers. The final norm / head
+    are reused (trained with exit heads when cfg.exit_every > 0)."""
+    plan = segment_plan(cfg)
+    new_plan = _slice_plan(cfg, exit_layer)
+    new_params = dict(params)
+    new_params["segments"] = {}
+    for i, (kind, count) in enumerate(new_plan):
+        seg = params["segments"][f"seg{i}"]
+        take = count
+        new_params["segments"][f"seg{i}"] = jax.tree.map(
+            lambda a: a[:take], seg)
+    del plan
+    return new_params, new_plan
+
+
+def perforate_params(params, cfg: ModelConfig, keep_idx):
+    """Depth-wise layer perforation: keep an arbitrary (sorted, static)
+    subset of layers. Only meaningful for single-segment plans."""
+    plan = segment_plan(cfg)
+    assert len(plan) == 1, "layer perforation supports single-segment plans"
+    kind, _ = plan[0]
+    import numpy as np
+    idx = jnp.asarray(np.asarray(keep_idx, dtype=np.int32))
+    new_params = dict(params)
+    new_params["segments"] = {
+        "seg0": jax.tree.map(lambda a: a[idx], params["segments"]["seg0"])}
+    return new_params, [(kind, int(idx.shape[0]))]

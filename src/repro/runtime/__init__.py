@@ -1,0 +1,2 @@
+"""Fault-tolerance runtime: preemption traces, window-bounded training,
+elastic re-sharding, straggler mitigation."""

@@ -1,0 +1,38 @@
+"""Elastic re-sharding: continue training on a smaller/larger mesh.
+
+When a pod is lost, the framework re-builds the mesh without it and
+re-shards the live state. Because parameters/moments are named-sharded
+with pure PartitionSpecs, re-sharding is a device_put to the new
+shardings; the data pipeline re-splits by the new dp rank count
+(deterministic content — see repro.data.tokens), and the window-bounded
+step semantics make the transition safe at any step boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.context import MeshContext
+from repro.sharding.partition import state_shardings
+
+
+def reshard_state(state, old_ctx: MeshContext | None,
+                  new_ctx: MeshContext, fsdp: bool = False):
+    """Move a TrainState to a new mesh (possibly different axis sizes)."""
+    del old_ctx
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    new_sh = state_shardings(abstract, new_ctx, fsdp)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, new_sh)
+
+
+def shrink_batch_for_mesh(global_batch: int, old_dp: int,
+                          new_dp: int) -> int:
+    """Keep per-device batch constant: scale the global batch with dp size.
+
+    The optimizer's effective batch changes; the anytime framing treats
+    this as another accuracy/throughput knob (smaller, noisier steps on a
+    degraded fleet instead of stopping — the paper's GREEDY).
+    """
+    per_dev = global_batch // old_dp
+    return per_dev * new_dp

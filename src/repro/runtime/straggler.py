@@ -1,0 +1,72 @@
+"""Straggler mitigation = the SMART policy applied to microbatches.
+
+In synchronous data parallelism one slow host stalls the step. The
+paper's admission rule transfers directly: set a per-step DEADLINE; a
+shard that cannot deliver its gradient contribution by the deadline is
+SKIPPED for that step (its tokens are dropped — token-grain perforation)
+and the gradient is rescaled by the surviving fraction, instead of the
+whole fleet waiting. Bounded accuracy loss, bounded latency — accuracy
+traded for throughput under a hard ceiling, which is the paper's exact
+inversion.
+
+This module provides the (host-side, simulation-friendly) bookkeeping;
+the collective itself remains a plain psum over surviving shards with a
+weight, so it lowers to XLA without custom runtime support.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    deadline_factor: float = 1.5  # x median step time
+    min_quorum: float = 0.75  # never commit below this shard fraction
+
+    def deadline_s(self, median_step_s: float) -> float:
+        return self.deadline_factor * median_step_s
+
+    def decide(self, shard_times: np.ndarray,
+               median_step_s: float) -> dict:
+        """Which shards make the cut; returns mask + rescale factor."""
+        deadline = self.deadline_s(median_step_s)
+        ok = shard_times <= deadline
+        frac = float(ok.mean())
+        if frac < self.min_quorum:
+            # SMART skip: below quorum the step would be too inaccurate;
+            # wait for everyone instead (fall back to synchronous)
+            return {"mask": np.ones_like(ok), "rescale": 1.0,
+                    "skipped": 0, "fallback_sync": True,
+                    "step_time_s": float(shard_times.max())}
+        return {"mask": ok, "rescale": 1.0 / max(frac, 1e-9),
+                "skipped": int((~ok).sum()), "fallback_sync": False,
+                "step_time_s": float(min(deadline, shard_times.max()))}
+
+
+def simulate_stragglers(n_steps: int, n_shards: int, seed: int = 0,
+                        policy: StragglerPolicy | None = None,
+                        slow_prob: float = 0.03,
+                        slow_factor: float = 4.0) -> dict:
+    """Throughput of deadline-skip vs fully synchronous steps."""
+    rng = np.random.default_rng(seed)
+    policy = policy or StragglerPolicy()
+    base = 1.0
+    t_sync = 0.0
+    t_smart = 0.0
+    skipped_total = 0
+    for _ in range(n_steps):
+        times = base * rng.lognormal(0, 0.08, n_shards)
+        slow = rng.random(n_shards) < slow_prob
+        times = np.where(slow, times * slow_factor, times)
+        t_sync += times.max()
+        d = policy.decide(times, base)
+        t_smart += d["step_time_s"]
+        skipped_total += d["skipped"]
+    return {
+        "sync_time": t_sync,
+        "smart_time": t_smart,
+        "speedup": t_sync / t_smart,
+        "dropped_shard_fraction": skipped_total / (n_steps * n_shards),
+    }

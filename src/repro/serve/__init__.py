@@ -1,0 +1,1 @@
+"""Serving: anytime deadline-driven decode engine + admission control."""

@@ -1,0 +1,169 @@
+"""Anytime serving engine: deadline-driven approximate decode.
+
+Mirrors the paper's runtime structure end to end:
+- offline: calibrate (depth x kv-keep) -> coherence on probe prompts (the
+  Fig.-4 table), price each setting with the analytic cost model,
+- online: per decode step, resolve the remaining deadline budget to a knob
+  setting (GREEDY) or skip/queue the request (SMART admission) — the
+  result is always produced within the deadline "power cycle", never by
+  checkpointing generation state across it.
+
+Compiled buckets: each depth gets its own truncated parameter stack (the
+early-exit transformation), so a knob choice is a dispatch between
+ahead-of-time compiled functions, not a recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.anytime_lm import AnytimeLmPlanner, KnobSetting
+from repro.core.policies import SKIP
+from repro.models import model_zoo as zoo
+from repro.models.transformer import (Knobs, decode_step, prefill,
+                                      truncate_params)
+from repro.serve.kvcache import cache_blocks, keep_mask_for_rate
+
+
+@dataclasses.dataclass
+class EngineStats:
+    served: int = 0
+    skipped: int = 0
+    tokens: int = 0
+    deadline_misses: int = 0
+    mean_depth: float = 0.0
+    mean_keep: float = 0.0
+
+
+class AnytimeEngine:
+    """Batched decode with anytime knobs. Transformer-family archs."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 depths: list[int] | None = None,
+                 keeps: list[float] | None = None,
+                 probe_prompts: jax.Array | None = None,
+                 flops_per_second: float = 5e9):
+        assert cfg.family in ("dense", "moe", "vlm")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.depths = depths or sorted({max(1, cfg.n_layers // 4),
+                                        max(1, cfg.n_layers // 2),
+                                        max(1, 3 * cfg.n_layers // 4),
+                                        cfg.n_layers})
+        self.keeps = keeps or [0.25, 0.5, 1.0]
+        self.flops_per_second = flops_per_second
+        self._bucket = {}
+        for d in self.depths:
+            p_d, plan_d = truncate_params(params, cfg, d)
+            self._bucket[d] = (p_d, plan_d)
+        self.n_blocks = cache_blocks(max_len, cfg.attn_chunk)
+        self._coherence: dict[tuple[int, float], float] = {}
+        if probe_prompts is not None:
+            self._calibrate(probe_prompts)
+        self.planner = AnytimeLmPlanner.build(
+            cfg, kv_len=max_len, batch=1, depths=self.depths,
+            keeps=self.keeps,
+            coherence_fn=(self._measured_coherence
+                          if self._coherence else None))
+        # re-price with the engine's actual throughput
+        self.planner = AnytimeLmPlanner([
+            dataclasses.replace(
+                s, cost=s.cost * (197e12 * 0.4) / flops_per_second)
+            for s in self.planner.settings])
+        self.stats = EngineStats()
+
+    # -- calibration (offline "energy profiling + Fig. 4" phase) ----------
+
+    def _decode_with(self, depth: int, keep: float, token, cache, pos):
+        p_d, plan_d = self._bucket[depth]
+        mask = (None if keep >= 1.0
+                else keep_mask_for_rate(self.n_blocks, keep))
+        knobs = Knobs(kv_block_keep=mask)
+        # truncate the cache stack to the bucket's depth
+        cache_d = self._truncate_cache(cache, plan_d)
+        logits, _ = decode_step(p_d, cache_d, token, pos, self.cfg,
+                                knobs, plan=plan_d)
+        return logits
+
+    def _truncate_cache(self, cache, plan):
+        out = {}
+        for i, (kind, count) in enumerate(plan):
+            seg = cache[f"seg{i}"]
+            out[f"seg{i}"] = jax.tree.map(lambda a: a[:count], seg)
+        return out
+
+    def _calibrate(self, prompts: jax.Array) -> None:
+        """Measured coherence: argmax agreement vs the exact model."""
+        B, S = prompts.shape
+        _, cache, pos = prefill(self.params, prompts, self.cfg,
+                                self.max_len)
+        last = prompts[:, -1]
+        exact = np.asarray(
+            self._decode_with(self.cfg.n_layers, 1.0, last, cache,
+                              jnp.int32(pos)).argmax(-1))
+        for d in self.depths:
+            for k in self.keeps:
+                pred = np.asarray(
+                    self._decode_with(d, k, last, cache,
+                                      jnp.int32(pos)).argmax(-1))
+                self._coherence[(d, k)] = float((pred == exact).mean())
+
+    def _measured_coherence(self, d, k):
+        return self._coherence.get((d, k), 0.0)
+
+    # -- online serving -----------------------------------------------------
+
+    def decode(self, prompts: jax.Array, n_tokens: int, *,
+               budget_per_token_s: float,
+               policy: str = "greedy", floor: float = 0.8,
+               measure_wall_clock: bool = False) -> dict:
+        """Generate n_tokens for a batch of prompts under a per-token
+        budget. Returns tokens + knob trace."""
+        cfg = self.cfg
+        _, cache, pos = prefill(self.params, prompts, cfg, self.max_len)
+        token = prompts[:, -1]
+        out_tokens = []
+        knob_trace: list[KnobSetting] = []
+        full_cache = cache
+        for _ in range(n_tokens):
+            if policy == "greedy":
+                setting = self.planner.greedy(budget_per_token_s)
+            else:
+                setting = self.planner.smart(budget_per_token_s, floor)
+            if setting is SKIP or setting is None:
+                self.stats.skipped += 1
+                break
+            t0 = time.perf_counter()
+            logits = self._decode_with(setting.exit_layer, setting.kv_keep,
+                                       token, full_cache, jnp.int32(pos))
+            if measure_wall_clock:
+                jax.block_until_ready(logits)
+                if time.perf_counter() - t0 > budget_per_token_s:
+                    self.stats.deadline_misses += 1
+            token = jnp.asarray(logits.argmax(-1), jnp.int32)
+            # the FULL cache is appended with the exact-path K/V of the
+            # emitted token so later steps may use any depth bucket
+            _, full_cache = decode_step(self.params, full_cache, token,
+                                        jnp.int32(pos), cfg)
+            pos += 1
+            out_tokens.append(np.asarray(token))
+            knob_trace.append(setting)
+            self.stats.tokens += int(token.shape[0])
+        self.stats.served += 1
+        if knob_trace:
+            self.stats.mean_depth = float(
+                np.mean([s.exit_layer for s in knob_trace]))
+            self.stats.mean_keep = float(
+                np.mean([s.kv_keep for s in knob_trace]))
+        return {
+            "tokens": (np.stack(out_tokens, 1)
+                       if out_tokens else np.zeros((prompts.shape[0], 0))),
+            "knobs": knob_trace,
+            "stats": self.stats,
+        }

@@ -1,0 +1,31 @@
+"""KV-cache helpers: perforation masks + cache bookkeeping."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def keep_mask_for_rate(n_blocks: int, keep: float,
+                       pin_first: bool = True,
+                       pin_last: bool = True) -> jnp.ndarray:
+    """Deterministic strided KV-block keep mask.
+
+    Pins the first block (attention sink) and the last (newest tokens —
+    the paper: newer inputs matter more). Deterministic striding keeps the
+    mask static so each (depth, keep) bucket compiles once.
+    """
+    n_keep = max(int(round(keep * n_blocks)), 1)
+    if n_keep >= n_blocks:
+        return jnp.ones((n_blocks,), bool)
+    idx = np.unique(np.linspace(0, n_blocks - 1, n_keep).astype(int))
+    mask = np.zeros(n_blocks, bool)
+    mask[idx] = True
+    if pin_first:
+        mask[0] = True
+    if pin_last:
+        mask[-1] = True
+    return jnp.asarray(mask)
+
+
+def cache_blocks(seq_len: int, block: int) -> int:
+    return (seq_len + block - 1) // block

@@ -1,0 +1,87 @@
+"""Ambient mesh context.
+
+Model code is written once and runs either on a single device (smoke tests,
+no context) or under a production mesh (dry-run/launch). The context carries
+the mesh and the axis-name conventions:
+
+- ``dp_axes``: data-parallel axes (('pod', 'data') multi-pod, ('data',)
+  single-pod) — batch is sharded over these,
+- ``tp_axis``: tensor/model-parallel axis — attention heads, MLP hidden,
+  vocab, MoE experts (expert parallelism), and sequence-parallel segments
+  are sharded over this one.
+
+``shard_hint`` is a no-op without a context so the pure model code never
+depends on distribution being configured.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    # False: the model axis is folded into data parallelism (pure-DP/FSDP
+    # layouts); activation hints drop their tp entries and partition rules
+    # skip TP sharding.
+    tp_enabled: bool = True
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return tuple(self.dp_axes) + (self.tp_axis,)
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def current_mesh_context() -> MeshContext | None:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(ctx: MeshContext):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        with ctx.mesh:
+            yield ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def shard_hint(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint if a mesh context is active, else identity."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        return x
+    if not ctx.tp_enabled:
+        spec = tuple(None if s == ctx.tp_axis else s for s in spec)
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(*spec))
+
+
+def batch_spec() -> tuple:
+    """PartitionSpec entry for the global-batch axis."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        return (None,)
+    return (ctx.dp_axes,)

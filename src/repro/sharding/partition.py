@@ -1,0 +1,188 @@
+"""Name-based parameter/state partition rules (Megatron-style TP + EP).
+
+Rules map parameter paths to PartitionSpecs over the mesh axes of the
+ambient MeshContext. Leading stacked-layer axes (L / group / pair) are
+never sharded; divisibility is checked and falls back to replication so
+odd head counts (whisper's 6 heads on a 16-way axis) lower cleanly.
+
+``fsdp``: additionally shards the big 2D+ weights over the data axes on
+their first non-TP dimension (ZeRO-3-flavoured), used by the §Perf
+iterations for the 1T-param cells.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.context import MeshContext
+
+# suffix-matched rules: (path contains, spec builder over (tp, n_stack_dims))
+# spec entries index the *trailing* dims of the parameter.
+
+
+def _rule_for(path: str) -> tuple[int, ...] | None:
+    """Returns trailing-dim spec pattern: 1 = shard on tp, 0 = replicate.
+
+    Patterns index from the right: e.g. (0, 1) = shard last dim on tp.
+    """
+    # order matters: first match wins
+    rules = [
+        ("unembed", (0, 1)),        # (D, V): vocab on tp — before "embed"!
+        ("dec_pos", (0, 0)),
+        ("enc_pos", (0, 0)),
+        ("embed", (1, 0)),          # (V, D): vocab on tp
+        ("attn/wq", (0, 1)),
+        ("attn/wk", (0, 1)),
+        ("attn/wv", (0, 1)),
+        ("attn/wo", (1, 0)),
+        ("moe/router", (0, 0)),
+        ("moe/wi", (1, 0, 0)),      # (E, D, 2F): experts on tp (EP)
+        ("moe/wo", (1, 0, 0)),
+        ("shared_wi", (0, 1)),
+        ("shared_wo", (1, 0)),
+        ("mlp/wi", (0, 1)),
+        ("mlp/wo", (1, 0)),
+        ("mlp/bi", (1,)),
+        ("mlp/bo", (0,)),
+        ("in_proj", (0, 1)),        # mamba2
+        ("out_proj", (1, 0)),
+        ("conv_w", (0, 0)),
+        # rwkv6 time-mix / channel-mix
+        ("/wr", (0, 1)),
+        ("/wk", (0, 1)),
+        ("/wv", (0, 1)),
+        ("/wg", (0, 1)),
+        ("/wo", (1, 0)),
+        ("/wA", (0, 0)),
+        ("/wB", (0, 0)),
+        ("/ck", (0, 1)),
+        ("/cv", (1, 0)),
+        ("/cr", (0, 0)),
+    ]
+    for frag, pat in rules:
+        if frag in path:
+            return pat
+    return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(path, leaf, ctx: MeshContext, fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter."""
+    shape = leaf.shape
+    tp = ctx.tp_axis
+    tp_size = ctx.tp_size
+    pat = _rule_for("/" + _path_str(path))
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    if pat is not None and ctx.tp_enabled:
+        k = len(pat)
+        if k <= ndim:
+            for i, flag in enumerate(pat):
+                dim = ndim - k + i
+                if flag and shape[dim] % tp_size == 0 and shape[dim] > 0:
+                    spec[dim] = tp
+    if fsdp and ndim >= 2 and int(np.prod(shape)) >= (1 << 22):
+        # shard the largest remaining dim over the data axes
+        dp = tuple(ctx.dp_axes)
+        dp_size = ctx.dp_size
+        cand = sorted(range(ndim), key=lambda d: -shape[d])
+        if "moe/wo" in _path_str(path):
+            # 2-D EP convention: down-projection shards its F (input) dim
+            # so it matches the up-projection's psum'ed output layout
+            cand = [ndim - 2] + cand
+        for d in cand:
+            if spec[d] is None and shape[d] % dp_size == 0:
+                spec[d] = dp
+                break
+    return P(*spec)
+
+
+def params_shardings(abstract_params, ctx: MeshContext, fsdp: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(ctx.mesh, param_spec(p, x, ctx, fsdp)),
+        abstract_params)
+
+
+def state_shardings(abstract_state, ctx: MeshContext, fsdp: bool = False):
+    """TrainState shardings: moments follow their parameters; scalars
+    replicate."""
+
+    def spec(path, x):
+        if x.ndim == 0:
+            return NamedSharding(ctx.mesh, P())
+        # strip the leading "params"/"opt_state"/"m"/"v" path components
+        # so optimizer moments match their parameter rules
+        return NamedSharding(ctx.mesh, param_spec(path, x, ctx, fsdp))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_state)
+
+
+# ---------------------------------------------------------------------------
+# decode-state rules
+# ---------------------------------------------------------------------------
+
+
+def decode_state_shardings(abstract_state, ctx: MeshContext, batch: int):
+    """KV caches / SSM states. Heuristics:
+
+    - KV caches (.., B, S, Kv, Dh): batch over dp if divisible, sequence
+      over tp (Kv is usually < tp_size, sequence is the shardable axis),
+    - SSM/WKV states (.., B, H, N, ...): batch over dp, heads over tp,
+    - token-shift carries (.., B, 1, D): batch over dp, D over tp.
+    """
+    dp = tuple(ctx.dp_axes)
+    dp_size = ctx.dp_size
+    tp = ctx.tp_axis
+    tp_size = ctx.tp_size
+
+    def spec(path, x):
+        name = _path_str(path)
+        shape = x.shape
+        s: list = [None] * x.ndim
+        # find the batch dim: the first dim equal to `batch`
+        bdim = next((i for i, d in enumerate(shape) if d == batch), None)
+        if bdim is not None and batch % dp_size == 0:
+            s[bdim] = dp
+        if ("attn_kv" in name or "self" in name or "cross" in name
+                or "seg" in name):
+            # (.., B, S, Kv, Dh): shard S (dim bdim+1) on tp
+            if bdim is not None and bdim + 1 < x.ndim \
+                    and shape[bdim + 1] % tp_size == 0 \
+                    and shape[bdim + 1] > 1:
+                s[bdim + 1] = tp
+        elif "wkv" in name or "ssm" in name:
+            # heads dim right after batch
+            if bdim is not None and bdim + 1 < x.ndim \
+                    and shape[bdim + 1] % tp_size == 0:
+                s[bdim + 1] = tp
+        elif x.ndim >= 1 and shape[-1] % tp_size == 0 and (
+                "tm_last" in name or "cm_last" in name or "conv" in name):
+            s[-1] = tp
+        return NamedSharding(ctx.mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_state)
+
+
+def batch_shardings(abstract_batch, ctx: MeshContext):
+    dp = tuple(ctx.dp_axes)
+    dp_size = ctx.dp_size
+
+    def spec(x):
+        s: list = [None] * x.ndim
+        if x.ndim >= 1 and x.shape[0] % dp_size == 0 and x.shape[0] > 1:
+            s[0] = dp
+        return NamedSharding(ctx.mesh, P(*s))
+
+    return jax.tree.map(spec, abstract_batch)

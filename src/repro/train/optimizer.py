@@ -1,0 +1,135 @@
+"""Optimizers from scratch (no optax): AdamW, Lion, SGD-momentum.
+
+AdamW supports bf16 moment storage (``moment_dtype``) — at 1T-param scale
+fp32 moments alone exceed a pod's HBM (DESIGN.md "Memory honesty"), and the
+precision loss is acceptable for the moments (not for the update math,
+which is done in fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, opt_state, params) -> (updates, opt_state)
+    name: str = "opt"
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32,
+          clip_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {
+            "m": _cast(jax.tree.map(jnp.zeros_like, params), moment_dtype),
+            "v": _cast(jax.tree.map(jnp.zeros_like, params), moment_dtype),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / (1 - b1 ** t)
+            vhat = v32 / (1 - b2 ** t)
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr_fn(count) * step).astype(p.dtype), \
+                m32.astype(moment_dtype), v32.astype(moment_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v, "count": count}, gnorm
+
+    return Optimizer(init, update, "adamw")
+
+
+def lion(lr: Callable | float = 1e-4, b1: float = 0.9, b2: float = 0.99,
+         weight_decay: float = 0.1, clip_norm: float = 1.0) -> Optimizer:
+    """Lion: sign-based update, single bf16-able moment — the cheap-memory
+    optimizer option for the 1T-param cells."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {"m": _cast(jax.tree.map(jnp.zeros_like, params),
+                           jnp.bfloat16),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32)
+            step = jnp.sign(b1 * m32 + (1 - b1) * g32) \
+                + weight_decay * p.astype(jnp.float32)
+            m_new = b2 * m32 + (1 - b2) * g32
+            return (-lr_fn(count) * step).astype(p.dtype), \
+                m_new.astype(jnp.bfloat16)
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "count": count}, gnorm
+
+    return Optimizer(init, update, "lion")
+
+
+def sgdm(lr: Callable | float = 1e-2, momentum: float = 0.9,
+         clip_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(m_.dtype),
+                         state["m"], grads)
+        updates = jax.tree.map(
+            lambda m_, p: (-lr_fn(count) * m_).astype(p.dtype), m, params)
+        return updates, {"m": m, "count": count}, gnorm
+
+    return Optimizer(init, update, "sgdm")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

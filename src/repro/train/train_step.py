@@ -1,0 +1,97 @@
+"""Train-step builder: grads + microbatch accumulation + optimizer apply.
+
+The step is the *window-bounded unit* of the approximate-intermittent
+training runtime: a committed optimizer step is idempotent (re-running it
+from the same inputs yields the same state), so a step that fits in the
+availability window never needs a mid-step checkpoint — the paper's design
+point lifted to training (DESIGN.md §2).
+
+``microbatches > 1`` accumulates gradients over a lax.scan; the anytime
+trainer resolves the microbatch count against the window budget (fewer
+microbatches = smaller, noisier step — the accuracy/energy knob).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_zoo as zoo
+from repro.models.transformer import Knobs
+from repro.train.optimizer import Optimizer, apply_updates
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def init_train_state(cfg: ModelConfig, optimizer: Optimizer,
+                     key) -> TrainState:
+    params = zoo.init_params(cfg, key)
+    return TrainState(params, optimizer.init(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer: Optimizer):
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, optimizer, k), jax.random.key(0))
+
+
+def build_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                     microbatches: int = 1,
+                     knobs: Knobs = Knobs()) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch tokens: (B, S) when microbatches == 1, else (M, B/M, S)-style
+    leading microbatch axis on every batch leaf.
+    """
+
+    def loss_fn(params, batch):
+        return zoo.train_loss(params, batch, cfg, knobs)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            def acc(carry, mb):
+                g_sum, l_sum = carry
+                (l, _), g = grad_fn(state.params, mb)
+                g_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_sum, g)
+                return (g_sum, l_sum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {}
+        updates, opt_state, gnorm = optimizer.update(
+            grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        out_metrics = {"loss": loss, "grad_norm": gnorm,
+                       "step": state.step + 1}
+        out_metrics.update({k: v for k, v in metrics.items()})
+        return TrainState(params, opt_state, state.step + 1), out_metrics
+
+    return train_step

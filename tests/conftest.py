@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: never set xla_force_host_platform_device_count here — smoke tests
+# and benchmarks must see 1 device (the dry-run sets its own flags in a
+# separate process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,240 @@
+"""Core-library invariants: budgets, policies, coherence, perforation,
+the intermittent executor. Property-based where the invariant is global."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.budget import Budget, BudgetExceeded, BudgetMeter, CostTable
+from repro.core.coherence import (ContributionStats,
+                                  binary_coherence_correlated,
+                                  binary_coherence_independent,
+                                  empirical_coherence,
+                                  multiclass_coherence_mc)
+from repro.core.energy import Capacitor, get_trace, kinetic_trace
+from repro.core.intermittent import IntermittentExecutor
+from repro.core.perforation import (PerforationPlan, perforation_mask,
+                                    strided_mask)
+from repro.core.policies import SKIP, Continuous, Fixed, Greedy, Smart
+
+
+# ---------------------------------------------------------------------------
+# budget
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.001, 10.0), min_size=1, max_size=50),
+       st.floats(0.0, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_budget_meter_never_exceeds(costs, cap):
+    """INVARIANT: spent <= budget, no matter the charge sequence."""
+    meter = BudgetMeter(Budget(cap))
+    for c in costs:
+        try:
+            meter.charge(c)
+        except BudgetExceeded:
+            pass
+        assert meter.spent <= cap + 1e-9
+
+
+@given(st.integers(1, 200), st.floats(0.01, 2.0), st.floats(0.0, 500.0))
+@settings(max_examples=50, deadline=None)
+def test_cost_table_max_units_affordable(n, unit, budget):
+    t = CostTable(np.full(n, unit), emit_cost=0.1, fixed_cost=0.05)
+    k = t.max_units_within(budget)
+    if k >= 0:
+        assert t.cost_of(k) <= budget + 1e-9
+        if k < n:
+            assert t.cost_of(k + 1) > budget
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+def _table(n=20, unit=1.0):
+    return CostTable(np.full(n, unit), emit_cost=0.5, fixed_cost=0.2)
+
+
+def test_greedy_spends_maximally():
+    t = _table()
+    acc = np.linspace(1 / 6, 0.9, 21)
+    d = Greedy().decide(10.0, t, acc)
+    assert d.initial_units == t.max_units_within(10.0)
+    assert d.refine_greedily
+
+
+@given(st.floats(0.1, 0.95), st.floats(0.0, 30.0))
+@settings(max_examples=60, deadline=None)
+def test_smart_floor_invariant(floor, budget):
+    """INVARIANT: SMART never commits to a p below its accuracy floor."""
+    t = _table()
+    acc = np.linspace(1 / 6, 0.9, 21)
+    d = Smart(floor).decide(budget, t, acc)
+    if not d.skipped:
+        assert acc[d.initial_units] >= floor
+        assert t.cost_of(d.initial_units) <= budget + 1e-9
+
+
+def test_smart_skips_when_floor_unattainable():
+    t = _table()
+    acc = np.linspace(1 / 6, 0.9, 21)
+    assert Smart(0.99).decide(1e9, t, acc).skipped  # no p reaches 0.99
+    assert Smart(0.5).decide(0.0, t, acc).skipped  # no budget
+    assert Fixed(30).decide(5.0, t, acc).skipped
+    assert Continuous().decide(0.0, t, acc).initial_units == 20
+
+
+# ---------------------------------------------------------------------------
+# coherence analysis
+# ---------------------------------------------------------------------------
+
+
+def test_coherence_limits():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=64)
+    X = rng.normal(size=(512, 64))
+    cs = ContributionStats.from_data(w, X)
+    assert binary_coherence_independent(cs, 0) == 0.5
+    assert binary_coherence_independent(cs, 64) == 1.0
+    p_mid = binary_coherence_independent(cs, 32)
+    assert 0.5 <= p_mid <= 1.0
+
+
+@given(st.integers(0, 64))
+@settings(max_examples=20, deadline=None)
+def test_coherence_bounded(p):
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=64)
+    X = rng.normal(size=(256, 64)) + 0.3
+    cs = ContributionStats.from_data(w, X, full_cov=True)
+    ci = binary_coherence_independent(cs, p)
+    cc = binary_coherence_correlated(cs, p)
+    assert 0.0 <= ci <= 1.0 and 0.0 <= cc <= 1.0
+
+
+def test_coherence_analytic_tracks_empirical():
+    """Fig.-4 property: expected coherence within ~0.1 of measured."""
+    rng = np.random.default_rng(2)
+    n, c = 32, 4
+    W = rng.normal(size=(c, n)) * np.linspace(2, 0.1, n)[None, :]
+    X = rng.normal(size=(2000, n))
+    mean, cov = X.mean(0), np.cov(X, rowvar=False)
+    order = np.arange(n)
+    for p in (8, 16, 24):
+        exp = multiclass_coherence_mc(W, mean, cov, p, n_samples=4000)
+        meas = empirical_coherence(W, X, order, np.array([p]))[0]
+        assert abs(exp - meas) < 0.1
+
+
+def test_empirical_coherence_monotone_tail():
+    """Coherence at p=n is exactly 1 (same classifier)."""
+    rng = np.random.default_rng(3)
+    W = rng.normal(size=(6, 40))
+    X = rng.normal(size=(300, 40))
+    c = empirical_coherence(W, X, np.arange(40), np.array([40]))
+    assert c[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# perforation
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 256), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_perforation_mask_drop_count(n, rate):
+    key = jax.random.key(0)
+    mask = perforation_mask(n, rate, key)
+    dropped = int(n - jnp.sum(mask))
+    assert dropped == int(round(rate * n))
+
+
+@given(st.integers(1, 256), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_strided_mask_drop_count(n, rate):
+    m = strided_mask(n, rate)
+    assert (~m).sum() == int(round(rate * n))
+
+
+@given(st.integers(1, 100), st.floats(0.001, 1.0), st.floats(0.0, 200.0))
+@settings(max_examples=60, deadline=None)
+def test_perforation_plan_budget_respected(n, unit, budget):
+    """INVARIANT: the chosen rate's cost fits the budget."""
+    plan = PerforationPlan(n_units=n, unit_cost=unit, fixed_cost=0.1,
+                           emit_cost=0.1)
+    rate = plan.rate_for_budget(budget)
+    if rate is not None:
+        assert plan.cost_at_rate(rate) <= budget + 1e-9
+        assert 0.0 <= rate <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# energy + intermittent executor
+# ---------------------------------------------------------------------------
+
+
+def test_capacitor_brownout_keeps_residual():
+    cap = Capacitor()
+    cap.v = cap.v_on
+    assert not cap.draw(1.0)  # way more than the buffer holds
+    assert cap.v == cap.v_off
+
+
+@pytest.mark.parametrize("name", ["RF", "SOM", "SIM", "SOR", "SIR"])
+def test_trace_families_exist(name):
+    tr = get_trace(name, duration_s=60.0)
+    assert tr.power_w.shape[0] == 6000
+    assert tr.mean_power_w() > 0
+
+
+def test_trace_energy_ordering():
+    """Paper: SOM richest; RF ~ SIR in total energy, different dynamics."""
+    som = get_trace("SOM", duration_s=120.0)
+    rf = get_trace("RF", duration_s=120.0)
+    sir = get_trace("SIR", duration_s=120.0)
+    assert som.total_energy_j > 3 * rf.total_energy_j
+    assert abs(rf.total_energy_j - sir.total_energy_j) \
+        < 0.25 * rf.total_energy_j
+    assert np.std(np.diff(rf.power_w)) > 5 * np.std(np.diff(sir.power_w))
+
+
+def _run(mode, policy, costs, acc, seed=7, duration=900.0, **kw):
+    tr = kinetic_trace(seed=seed, duration_s=duration)
+    ex = IntermittentExecutor(tr, costs, policy, acc, mode=mode,
+                              sampling_period_s=60.0, **kw)
+    return ex.run()
+
+
+def test_approximate_always_same_cycle():
+    """THE paper invariant: approximate results emit within the same power
+    cycle as acquisition — latency is 0 cycles by design."""
+    costs = CostTable(np.full(40, 2e-4), emit_cost=1.2e-4, fixed_cost=1e-4)
+    acc = np.linspace(1 / 6, 0.9, 41)
+    st_ = _run("approximate", Greedy(), costs, acc)
+    assert len(st_.results) > 0
+    assert (st_.latency_cycles == 0).all()
+    assert st_.energy_on_nvm_j == 0.0  # no NVM, ever
+
+
+def test_checkpoint_mode_uses_nvm_and_stretches():
+    costs = CostTable(np.full(40, 6e-4), emit_cost=1.2e-4, fixed_cost=1e-4)
+    acc = np.linspace(1 / 6, 0.9, 41)
+    st_ = _run("checkpoint", Greedy(), costs, acc, state_bytes=16384)
+    assert st_.energy_on_nvm_j > 0
+    if len(st_.results):
+        assert st_.latency_cycles.max() >= 1  # crosses power cycles
+        # checkpointing always completes ALL units per sample
+        assert all(r.units_used == 40 for r in st_.results)
+
+
+def test_approximate_beats_checkpoint_throughput():
+    costs = CostTable(np.full(40, 6e-4), emit_cost=1.2e-4, fixed_cost=1e-4)
+    acc = np.linspace(1 / 6, 0.9, 41)
+    st_a = _run("approximate", Greedy(), costs, acc, duration=1800.0)
+    st_c = _run("checkpoint", Greedy(), costs, acc, duration=1800.0,
+                state_bytes=16384)
+    assert len(st_a.results) > len(st_c.results)

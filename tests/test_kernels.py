@@ -1,0 +1,125 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.images import harris_response_perforated, make_picture
+from repro.kernels import ref
+from repro.kernels.anytime_svm import anytime_svm_scores
+from repro.kernels.harris import harris_pallas
+from repro.kernels.perforated_attention import perforated_attention
+from repro.kernels.rwkv6_wkv import rwkv6_wkv
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.models.rwkv import wkv_scan
+from repro.models.ssm import ssd_scan
+
+
+@pytest.mark.parametrize("B,H,S,D,bq,bk", [
+    (1, 2, 256, 64, 128, 128),
+    (2, 1, 512, 128, 128, 128),
+    (1, 1, 256, 64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_perforated_attention(B, H, S, D, bq, bk, dtype, causal):
+    ks = jax.random.split(jax.random.key(S + D + causal), 4)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, H, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, H, S, D), dtype)
+    nk = S // bk
+    keep = (jax.random.uniform(ks[3], (nk,)) > 0.4).astype(jnp.int32)
+    keep = keep.at[0].set(1)
+    out = perforated_attention(q, k, v, keep, causal=causal,
+                               block_q=bq, block_k=bk, interpret=True)
+    want = ref.perforated_attention_ref(q, k, v, keep.astype(bool),
+                                        causal=causal, block=bk)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_perforated_attention_keep_all_matches_exact():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    keep = jnp.ones((2,), jnp.int32)
+    out = perforated_attention(q, k, v, keep, causal=True, interpret=True)
+    want = ref.perforated_attention_ref(q, k, v, keep.astype(bool),
+                                        causal=True, block=128)
+    np.testing.assert_allclose(out, want, atol=2e-6)
+
+
+@pytest.mark.parametrize("B,F,C", [(8, 128, 6), (16, 256, 6), (8, 512, 3)])
+@pytest.mark.parametrize("p_frac", [0.0, 0.3, 0.77, 1.0])
+def test_anytime_svm_kernel(B, F, C, p_frac):
+    ks = jax.random.split(jax.random.key(F + C), 3)
+    x = jax.random.normal(ks[0], (B, F))
+    w = jax.random.normal(ks[1], (C, F))
+    b = jax.random.normal(ks[2], (C,))
+    p = int(round(p_frac * F))
+    out = anytime_svm_scores(x, w, b, p, interpret=True)
+    want = ref.anytime_svm_ref(x, w, b, p)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=1e-5)
+
+
+def test_anytime_svm_incremental_consistency():
+    """Scores at p2 == scores at p1 + contribution of features (p1, p2]."""
+    ks = jax.random.split(jax.random.key(7), 3)
+    x = jax.random.normal(ks[0], (8, 256))
+    w = jax.random.normal(ks[1], (6, 256))
+    b = jnp.zeros((6,))
+    s1 = anytime_svm_scores(x, w, b, 100, interpret=True)
+    s2 = anytime_svm_scores(x, w, b, 200, interpret=True)
+    delta = (x[:, 100:200] @ w[:, 100:200].T)
+    np.testing.assert_allclose(s2 - s1, delta, atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,L,N,chunk", [(2, 2, 128, 64, 32),
+                                           (1, 4, 64, 32, 16)])
+def test_rwkv6_wkv_kernel(B, H, L, N, chunk):
+    ks = jax.random.split(jax.random.key(L + N), 5)
+    r = jax.random.normal(ks[0], (B, L, H, N))
+    k = jax.random.normal(ks[1], (B, L, H, N))
+    v = jax.random.normal(ks[2], (B, L, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, L, H, N)))
+    u = jax.random.normal(ks[4], (H, N))
+    want, _ = wkv_scan(r, k, v, logw, u, chunk=chunk)
+    got = rwkv6_wkv(r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                    v.transpose(0, 2, 1, 3), logw.transpose(0, 2, 1, 3),
+                    u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(got.transpose(0, 2, 1, 3), want,
+                               atol=5e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,L,H,P,N,chunk", [(2, 128, 3, 32, 16, 32),
+                                             (1, 64, 2, 16, 8, 16)])
+def test_ssd_kernel(B, L, H, P, N, chunk):
+    ks = jax.random.split(jax.random.key(L + P), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    want, _ = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    got = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=1e-4)
+
+
+def test_harris_kernel_interior():
+    img = jnp.asarray(make_picture("shapes", 128, seed=3))
+    keep = (jax.random.uniform(jax.random.key(0), (8, 8)) > 0.3)
+    got = harris_pallas(img, keep, tile=16, interpret=True)
+    want = harris_response_perforated(img, keep, tile=16)
+    np.testing.assert_allclose(got[16:-16, 16:-16],
+                               want[16:-16, 16:-16], atol=1e-6)
+
+
+def test_harris_kernel_dropped_tiles_zero():
+    img = jnp.asarray(make_picture("checker", 64, seed=1))
+    keep = np.ones((4, 4), bool)
+    keep[1, 2] = False
+    got = harris_pallas(img, jnp.asarray(keep), tile=16, interpret=True)
+    assert float(jnp.abs(got[16:32, 32:48]).max()) == 0.0

@@ -1,0 +1,229 @@
+"""Distribution tests.
+
+Partition-rule unit tests run in-process (no devices needed); the
+multi-device lower/compile test runs the real dryrun machinery in a
+subprocess with 8 forced host devices (device count is locked at first
+jax use, so it must not happen in the test process).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import analyze
+from repro.models import model_zoo as zoo
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _fake_ctx(tp=4):
+    """A MeshContext-shaped stub for rule tests (no devices touched)."""
+
+    class _Mesh:
+        shape = {"data": 2, "model": tp}
+
+    class _Ctx:
+        mesh = _Mesh()
+        dp_axes = ("data",)
+        tp_axis = "model"
+        tp_size = tp
+        dp_size = 2
+        tp_enabled = True
+
+    return _Ctx()
+
+
+def test_partition_rules_megatron_pattern():
+    from repro.sharding.partition import param_spec
+
+    ctx = _fake_ctx(4)
+    cfg = get_config("glm4-9b", reduced=True)
+    params = zoo.abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {"/".join(str(getattr(p, "key", p)) for p in path):
+             param_spec(path, leaf, ctx) for path, leaf in flat}
+    assert specs["embed"] == P("model", None)
+    assert specs["unembed"] == P(None, "model")
+    attn_wq = [v for k, v in specs.items() if k.endswith("attn/wq")][0]
+    assert attn_wq == P(None, None, "model")  # (L, D, H*Dh)
+    attn_wo = [v for k, v in specs.items() if k.endswith("attn/wo")][0]
+    assert attn_wo == P(None, "model", None)
+    mlp_wi = [v for k, v in specs.items() if k.endswith("mlp/wi")][0]
+    assert mlp_wi == P(None, None, "model")
+
+
+def test_partition_rules_moe_expert_parallel():
+    from repro.sharding.partition import param_spec
+
+    ctx = _fake_ctx(4)
+    cfg = get_config("kimi-k2-1t-a32b", reduced=True)
+    params = zoo.abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        if key.endswith("moe/wi"):
+            assert param_spec(path, leaf, ctx) == P(
+                None, "model", None, None)  # (L, E, D, 2F): EP on experts
+        if key.endswith("moe/router"):
+            assert param_spec(path, leaf, ctx) == P(None, None, None)
+
+
+def test_partition_rules_indivisible_falls_back_to_replication():
+    from repro.sharding.partition import param_spec
+
+    ctx = _fake_ctx(16)
+    cfg = get_config("whisper-tiny")  # 6 heads: 384-dim attn not % 16 == 0
+    params = zoo.abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "attn/wq" in key:
+            spec = param_spec(path, leaf, ctx)
+            assert spec[-1] == "model"  # 384 % 16 == 0 -> sharded
+        if key == "embed":
+            # vocab 51865 is odd -> falls back to replication
+            assert param_spec(path, leaf, ctx)[0] is None
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, {src!r})
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell
+from pathlib import Path
+
+# shrink the production mesh to fit 8 host devices
+import repro.launch.mesh as mesh_mod
+def small_mesh(*, multi_pod=False):
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+mesh_mod.make_production_mesh = small_mesh
+from repro.sharding.context import MeshContext
+def small_ctx(*, multi_pod=False):
+    m = small_mesh(multi_pod=multi_pod)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return MeshContext(mesh=m, dp_axes=dp, tp_axis="model")
+mesh_mod.make_context = small_ctx
+import repro.launch.dryrun as dr
+dr.make_context = small_ctx
+
+# ALSO shrink the shapes so reduced configs divide evenly
+import repro.configs.base as base
+base.SHAPES["train_4k"] = base.ShapeConfig("train_4k", 64, 8, "train")
+base.SHAPES["decode_32k"] = base.ShapeConfig("decode_32k", 64, 8, "decode")
+
+out = Path({out!r})
+recs = []
+for arch in ["glm4-9b", "kimi-k2-1t-a32b", "rwkv6-7b"]:
+    for shape in ["train_4k", "decode_32k"]:
+        for mp in (False, True):
+            rec = run_cell(arch, shape, mp, out, reduced=True)
+            recs.append({{"arch": arch, "shape": shape, "mp": mp,
+                         "status": rec["status"],
+                         "err": rec.get("error", "")}})
+print(json.dumps(recs))
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_lower_compile(tmp_path):
+    """The dry-run machinery compiles reduced cells on an 8-device mesh,
+    single- and multi-pod, for dense + MoE(shard_map EP) + rwkv."""
+    code = _SUBPROC.format(src=SRC, out=str(tmp_path))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    recs = json.loads(proc.stdout.strip().splitlines()[-1])
+    bad = [r for r in recs if r["status"] != "ok"]
+    assert not bad, bad
+
+
+_EP_NUMERIC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, {src!r})
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import model_zoo as zoo
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import mesh_context
+cfg = get_config('kimi-k2-1t-a32b', reduced=True).scaled(
+    compute_dtype='float32', capacity_factor=8.0)
+params = zoo.init_params(cfg, jax.random.key(0))
+state = zoo.init_decode_state(cfg, 8, 32)
+tok = jnp.arange(8, dtype=jnp.int32)
+ref, _ = zoo.decode_step(params, state, tok, jnp.int32(3), cfg)
+ctx = make_host_mesh(8, model=4)
+errs = []
+for c in (cfg, cfg.scaled(ep_dp_shard=True)):
+    with mesh_context(ctx):
+        got, _ = jax.jit(lambda p, s, t: zoo.decode_step(
+            p, s, t, jnp.int32(3), c))(params, state, tok)
+    errs.append(float(jnp.abs(ref - got).max()))
+assert all(e < 1e-4 for e in errs), errs
+print("OK", errs)
+"""
+
+
+@pytest.mark.slow
+def test_moe_ep_decode_numerics_match_single_device(tmp_path):
+    """Replicated-EP partial combine and 2-D EP decode paths must match the
+    single-device MoE bit-for-bit (fp32 tolerance)."""
+    code = _EP_NUMERIC.format(src=SRC)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert proc.stdout.startswith("OK")
+
+
+def test_hlo_analyzer_on_synthetic_module():
+    hlo = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,8]{1,0} all-gather(%d), dimensions={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %ag)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main () -> f32[8,8] {
+  %init = (s32[], f32[8,8]) tuple(), sharding={replicated}
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    res = analyze(hlo)
+    # dot: 2*8*8*8 = 1024 flops x 10 trips
+    assert res["flops_per_device"] == 1024 * 10
+    assert res["collective_bytes_per_device"]["all-gather"] == 256 * 10
+    assert res["unbounded_loops"] == 0

@@ -1,0 +1,198 @@
+"""Substrate tests: checkpointing, runtime, optimizer, data pipelines."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.chinchilla import AdaptiveCheckpointPolicy
+from repro.configs import get_config
+from repro.data.images import (corners_equivalent, detect_corners,
+                               harris_response, make_picture)
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models import model_zoo as zoo
+from repro.runtime.preemption import WindowedTrainer, spot_trace
+from repro.runtime.straggler import StragglerPolicy, simulate_stragglers
+from repro.train.optimizer import adamw, apply_updates, global_norm, lion, sgdm
+from repro.train.train_step import build_train_step, init_train_state
+
+
+# ---------------------------------------------------------------------------
+# optimizer + train step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("opt_fn", [adamw, lion, sgdm])
+def test_optimizer_reduces_quadratic(opt_fn):
+    opt = opt_fn(1e-1) if opt_fn is not adamw else opt_fn(
+        1e-1, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        updates, state, _ = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_train_step_decreases_loss():
+    cfg = get_config("stablelm-1.6b", reduced=True)
+    opt = adamw(3e-3, weight_decay=0.0)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    step = jax.jit(build_train_step(cfg, opt))
+    pipe = TokenPipeline(TokenPipelineConfig(cfg.vocab_size, 32, 8))
+    first = last = None
+    for i in range(8):
+        batch = jax.tree.map(jnp.asarray, pipe.batch(0))  # same batch
+        state, metrics = step(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first
+
+
+def test_grad_accumulation_matches_big_batch():
+    cfg = get_config("stablelm-1.6b", reduced=True).scaled(
+        compute_dtype="float32", remat=False)
+    opt = sgdm(1e-2, momentum=0.0, clip_norm=1e9)
+    state0 = init_train_state(cfg, opt, jax.random.key(0))
+    pipe = TokenPipeline(TokenPipelineConfig(cfg.vocab_size, 16, 4))
+    batch = jax.tree.map(jnp.asarray, pipe.batch(0))
+    s1, m1 = build_train_step(cfg, opt)(state0, batch)
+    micro = jax.tree.map(lambda x: x.reshape(2, 2, *x.shape[1:]), batch)
+    s2, m2 = build_train_step(cfg, opt, microbatches=2)(state0, micro)
+    g1 = jax.tree.leaves(s1.params)
+    g2 = jax.tree.leaves(s2.params)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("whisper-tiny", reduced=True)
+    opt = adamw(1e-3)
+    state = init_train_state(cfg, opt, jax.random.key(0))
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(state, 7)
+    restored, step = mgr.restore(state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_last_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    state = {"x": jnp.arange(4)}
+    for s in (1, 2, 3):
+        mgr.save(state, s)
+    assert mgr.latest_step() == 3
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=1)
+    state = {"x": jnp.arange(1000)}
+    mgr.save(state, 1, async_save=True)
+    mgr.wait()
+    restored, _ = mgr.restore(state)
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.arange(1000))
+
+
+def test_adaptive_policy_young_daly():
+    pol = AdaptiveCheckpointPolicy(ckpt_cost_s=10.0, mtbf_guess_s=2000.0)
+    tau = pol.interval_s()
+    assert abs(tau - np.sqrt(2 * 10 * 2000)) < 1e-6
+    # more failures -> shorter interval ("scarcity -> checkpoint more")
+    for t in (100, 200, 300, 400):
+        pol.observe_failure(t)
+    assert pol.interval_s() < tau
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance runtime
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_trainer_approximate_beats_checkpoint():
+    tr = spot_trace(seed=3, horizon_s=12 * 3600, mtbf_s=1800.0)
+    kw = dict(step_time_s=30.0, ckpt_time_s=45.0, restore_time_s=60.0,
+              tokens_per_step=1 << 20)
+    a = WindowedTrainer(tr, mode="approximate", **kw).run()
+    c = WindowedTrainer(tr, mode="checkpoint", **kw).run()
+    n = WindowedTrainer(tr, mode="naive_checkpoint", **kw).run()
+    assert a.committed_steps > c.committed_steps > 0
+    assert c.committed_steps > n.committed_steps  # adaptive beats naive
+    assert a.lost_step_time_s == 0.0  # window-bounded: nothing ever lost
+    assert a.ckpt_time_s == 0.0
+
+
+def test_straggler_smart_speedup():
+    out = simulate_stragglers(300, 64, seed=1)
+    assert out["speedup"] > 1.2
+    assert out["dropped_shard_fraction"] < 0.1
+
+
+def test_straggler_quorum_fallback():
+    pol = StragglerPolicy(min_quorum=0.9)
+    times = np.ones(10)
+    times[:3] = 100.0  # 30% stragglers, below quorum
+    d = pol.decide(times, 1.0)
+    assert d["fallback_sync"]
+    assert d["rescale"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_token_pipeline_deterministic_and_sharded():
+    cfg = TokenPipelineConfig(1000, 16, 8, seed=5, n_shards=2)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    b1 = p1.batch(3, shard=1)
+    b2 = p2.batch(3, shard=1)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch(3, shard=0)["tokens"], b1["tokens"])
+    g = p1.global_batch(3)
+    assert g["tokens"].shape == (8, 16)
+    np.testing.assert_array_equal(g["tokens"][4:], b1["tokens"])
+
+
+def test_labels_shift_by_one():
+    cfg = TokenPipelineConfig(1000, 16, 2, seed=5)
+    b = TokenPipeline(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_corner_detection_finds_rectangle_corners():
+    img = jnp.asarray(make_picture("simple", 128))
+    corners = detect_corners(harris_response(img))
+    assert corners.shape[0] >= 4  # at least the 4 rectangle corners
+
+
+def test_corner_equivalence_metric():
+    ref = np.array([[10, 10], [10, 50], [50, 10], [50, 50]])
+    same = ref + np.array([[1, 0], [0, 1], [-1, 0], [0, -1]])
+    assert corners_equivalent(ref, same)
+    assert not corners_equivalent(ref, ref[:3])  # count differs
+    far = ref.copy()
+    far[0] = [45, 45]  # closer to corner 3 than to its own
+    assert not corners_equivalent(ref, far)
+
+
+def test_har_feature_count():
+    from repro.data import har
+    assert har.N_FEATURES == 140
+    assert len(har.FEATURE_FAMILIES) == 140
+    X, y = har.generate_windows(4, seed=0)
+    F = har.extract_features(jnp.asarray(X[:8]))
+    assert F.shape == (8, 140)
+    assert np.isfinite(np.asarray(F)).all()
