@@ -17,14 +17,15 @@ def main() -> None:
     from benchmarks import (bench_kernels, fig4_expected_accuracy,
                             fig5_accuracy_throughput, fig6_latency,
                             fig13_corner_equivalence,
-                            fig14_corner_throughput, roofline,
-                            scaled_training, serve_quality)
+                            fig14_corner_throughput, fleet_throughput,
+                            roofline, scaled_training, serve_quality)
 
     results["fig4"] = fig4_expected_accuracy.main()
     results["fig5"] = fig5_accuracy_throughput.main()
     results["fig6"] = fig6_latency.main()
     results["fig13"] = fig13_corner_equivalence.main()
     results["fig14_15"] = fig14_corner_throughput.main()
+    results["fleet"] = fleet_throughput.main()
     bench_kernels.main()
     results["scaled"] = scaled_training.main()
     results["serve_quality"] = serve_quality.main()

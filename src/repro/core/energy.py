@@ -200,8 +200,13 @@ class Capacitor:
         return 0.5 * self.capacitance_f * self.v * self.v
 
     def usable_energy_j(self) -> float:
-        """Energy available before brown-out, from the current voltage."""
-        e = 0.5 * self.capacitance_f * (self.v ** 2 - self.v_off ** 2)
+        """Energy available before brown-out, from the current voltage.
+
+        Written as ``v*v`` (not ``v**2``) so the vectorized fleet worker
+        pool can reproduce the scalar arithmetic bit-for-bit.
+        """
+        e = 0.5 * self.capacitance_f * (self.v * self.v
+                                        - self.v_off * self.v_off)
         return max(e, 0.0)
 
     @property
@@ -220,7 +225,7 @@ class Capacitor:
         keeps the residual 0.5*C*v_off^2 and recharges from there.
         """
         e = self.energy_j() - energy_j
-        floor = 0.5 * self.capacitance_f * self.v_off ** 2
+        floor = 0.5 * self.capacitance_f * self.v_off * self.v_off
         if e < floor:
             self.v = self.v_off  # load cut; residual charge retained
             return False

@@ -77,6 +77,30 @@ class _Work:
     ckpt_units: int = -1  # units persisted on NVM (-1: nothing persisted)
 
 
+@dataclasses.dataclass
+class DeviceState:
+    """Everything ``step`` reads or writes: the resumable simulation state.
+
+    Owning the state separately from the executor lets callers advance the
+    simulation one trace tick at a time (pause/resume, request injection,
+    co-simulation with a fleet scheduler) and lets the vectorized worker
+    pool in ``repro.fleet.worker`` mirror the exact same transition
+    function as a struct-of-arrays over N devices.
+    """
+
+    on: bool = False
+    cycles: int = 0
+    acquired: int = 0
+    skipped: int = 0
+    e_work: float = 0.0
+    e_nvm: float = 0.0
+    next_sample_t: float = 0.0
+    sample_counter: int = 0
+    work: _Work | None = None
+    decision: Decision | None = None
+    results: list[EmittedResult] = dataclasses.field(default_factory=list)
+
+
 class IntermittentExecutor:
     """Steps a device model through an energy trace.
 
@@ -116,156 +140,167 @@ class IntermittentExecutor:
         """Clip a draw to what the capacitor can supply before brown-out."""
         return min(e, self.cap.usable_energy_j())
 
+    # -- resumable step API --------------------------------------------------
+    #
+    # ``reset()`` -> fresh DeviceState; ``step(state, i)`` advances exactly
+    # one trace tick; ``stats(state)`` packages results. ``run()`` is the
+    # convenience loop over all ticks. The fleet worker pool
+    # (repro.fleet.worker) vectorizes the approximate-mode branch of
+    # ``step`` over N devices; tests pin the two implementations together.
+
+    def reset(self) -> DeviceState:
+        """Fresh simulation state. The capacitor keeps its current charge
+        (a device joining mid-trace starts from whatever is banked)."""
+        return DeviceState()
+
+    def step(self, state: DeviceState, i: int) -> None:
+        """Advance one trace tick (``dt`` seconds at trace index ``i``)."""
+        st = state
+        dt = self.trace.dt
+        t = i * dt
+        self.cap.harvest(float(self.trace.power_w[i]), dt)
+        if not st.on:
+            if self.cap.v >= self.cap.v_on:
+                st.on = True
+                st.cycles += 1
+                if self.mode in ("checkpoint", "naive_checkpoint"):
+                    if st.work is not None and st.work.ckpt_units >= 0:
+                        # restore persisted progress from NVM
+                        if self.cap.draw(self.restore_cost_j):
+                            st.e_nvm += self.restore_cost_j
+                            st.work.units_done = st.work.ckpt_units
+                            st.work.unit_energy_left = 0.0
+                        else:
+                            st.on = False
+                            return
+                    elif st.work is not None:
+                        # nothing persisted: sample lost entirely
+                        st.work = None
+            else:
+                return
+
+        # device is ON; give it one dt of activity --------------------------
+        if st.work is None:
+            # acquire the newest pending sample, if due
+            if t >= st.next_sample_t:
+                st.sample_counter += int((t - st.next_sample_t)
+                                         // self.sampling_period_s) + 1
+                st.next_sample_t = (st.next_sample_t +
+                                    self.sampling_period_s *
+                                    ((t - st.next_sample_t) //
+                                     self.sampling_period_s + 1))
+                if self.mode == "approximate":
+                    # decide BEFORE spending anything: SMART skips the
+                    # whole round (incl. sensor sampling) when the floor
+                    # is unattainable, and goes to the lowest-power mode
+                    st.decision = self.policy.decide(
+                        self.cap.usable_energy_j(),
+                        self.costs, self.accuracy_table)
+                    if st.decision.skipped:
+                        st.skipped += 1
+                        return
+                cost_fix = self.costs.fixed_cost
+                if not self.cap.draw(self._drawable(cost_fix)):
+                    st.on = False
+                    return
+                st.e_work += cost_fix
+                st.acquired += 1
+                st.work = _Work(st.sample_counter - 1, t, st.cycles)
+                if self.mode in ("checkpoint", "naive_checkpoint"):
+                    # persist the acquired input right away: a rebooted
+                    # device cannot re-sample the past, so any fair
+                    # checkpointing baseline checkpoints the window first
+                    if self.cap.draw(self._drawable(self.ckpt_cost_j)):
+                        st.e_nvm += self.ckpt_cost_j
+                        st.work.ckpt_units = 0
+                    else:
+                        st.on = False
+                        return
+            return  # acquisition consumed this dt
+
+        # progress the in-flight work by one dt of active execution
+        unit_costs = self.costs.unit_costs
+        n_units = self.costs.n_units
+        work = st.work
+        e_step = self.mcu.active_power_w * dt
+        target_units = n_units
+        emit_now = False
+        if self.mode == "approximate":
+            assert st.decision is not None
+            target_units = (n_units if st.decision.refine_greedily
+                            else st.decision.initial_units)
+        while e_step > 0 and work.units_done < target_units:
+            if work.unit_energy_left <= 0:
+                # about to START a new unit. In approximate mode, only
+                # start it if unit + emit-reserve are affordable now —
+                # this is the paper's "until just the right amount of
+                # energy is left to send out a BLE packet".
+                next_cost = float(unit_costs[work.units_done])
+                if self.mode == "approximate" and (
+                        self.cap.usable_energy_j()
+                        < next_cost + self.costs.emit_cost):
+                    emit_now = True
+                    break
+                work.unit_energy_left = next_cost
+            take = min(e_step, work.unit_energy_left)
+            if not self.cap.draw(take):
+                # ---- power failure mid-work ----
+                if self.mode == "approximate":
+                    st.work = None  # volatile by design; sample lost
+                st.on = False
+                break
+            st.e_work += take
+            work.unit_energy_left -= take
+            e_step -= take
+            if work.unit_energy_left <= 1e-18:
+                work.units_done += 1
+                work.unit_energy_left = 0.0
+                if self.mode == "naive_checkpoint" or (
+                        self.mode == "checkpoint"
+                        and self._should_checkpoint()):
+                    if self.cap.draw(self.ckpt_cost_j):
+                        st.e_nvm += self.ckpt_cost_j
+                        work.ckpt_units = work.units_done
+                    else:
+                        st.on = False
+                        break
+        if not st.on:
+            return
+        if st.work is not None and (st.work.units_done >= target_units
+                                    or emit_now):
+            # emit the result (BLE packet / host transfer)
+            if self.mode == "approximate":
+                can_emit = self.cap.draw(self.costs.emit_cost)
+            else:
+                can_emit = self.cap.draw(
+                    self._drawable(self.costs.emit_cost))
+            if can_emit:
+                st.e_work += self.costs.emit_cost
+                st.results.append(EmittedResult(
+                    st.work.sample_id, st.work.units_done,
+                    st.work.t_acquired, t,
+                    st.cycles - st.work.cycle_acquired))
+                st.work = None
+            else:
+                if self.mode == "approximate":
+                    st.work = None
+                st.on = False
+
+    def stats(self, state: DeviceState) -> RunStats:
+        return RunStats(state.results, state.acquired, state.skipped,
+                        state.cycles,
+                        self.trace.total_energy_j * self.cap.booster_eff,
+                        state.e_work, state.e_nvm, self.trace.duration_s)
+
     # -- main loop ----------------------------------------------------------
 
     def run(self) -> RunStats:
         if self.mode == "continuous":
             return self._run_continuous()
-        tr, dt = self.trace, self.trace.dt
-        n_steps = tr.power_w.shape[0]
-        results: list[EmittedResult] = []
-        work: _Work | None = None
-        on = False
-        cycles = 0
-        acquired = 0
-        skipped = 0
-        e_work = 0.0
-        e_nvm = 0.0
-        next_sample_t = 0.0
-        sample_counter = 0
-        unit_costs = self.costs.unit_costs
-        n_units = self.costs.n_units
-        decision: Decision | None = None
-
-        for i in range(n_steps):
-            t = i * dt
-            self.cap.harvest(float(tr.power_w[i]), dt)
-            if not on:
-                if self.cap.v >= self.cap.v_on:
-                    on = True
-                    cycles += 1
-                    if self.mode in ("checkpoint", "naive_checkpoint"):
-                        if work is not None and work.ckpt_units >= 0:
-                            # restore persisted progress from NVM
-                            if self.cap.draw(self.restore_cost_j):
-                                e_nvm += self.restore_cost_j
-                                work.units_done = work.ckpt_units
-                                work.unit_energy_left = 0.0
-                            else:
-                                on = False
-                                continue
-                        elif work is not None:
-                            # nothing persisted: sample lost entirely
-                            work = None
-                else:
-                    continue
-
-            # device is ON; give it one dt of activity ----------------------
-            budget_now = self.cap.usable_energy_j()
-            if work is None:
-                # acquire the newest pending sample, if due
-                if t >= next_sample_t:
-                    sample_counter += int((t - next_sample_t)
-                                          // self.sampling_period_s) + 1
-                    next_sample_t = (next_sample_t + self.sampling_period_s *
-                                     ((t - next_sample_t) //
-                                      self.sampling_period_s + 1))
-                    if self.mode == "approximate":
-                        # decide BEFORE spending anything: SMART skips the
-                        # whole round (incl. sensor sampling) when the floor
-                        # is unattainable, and goes to the lowest-power mode
-                        decision = self.policy.decide(
-                            self.cap.usable_energy_j(),
-                            self.costs, self.accuracy_table)
-                        if decision.skipped:
-                            skipped += 1
-                            continue
-                    cost_fix = self.costs.fixed_cost
-                    if not self.cap.draw(self._drawable(cost_fix)):
-                        on = False
-                        continue
-                    e_work += cost_fix
-                    acquired += 1
-                    work = _Work(sample_counter - 1, t, cycles)
-                    if self.mode in ("checkpoint", "naive_checkpoint"):
-                        # persist the acquired input right away: a rebooted
-                        # device cannot re-sample the past, so any fair
-                        # checkpointing baseline checkpoints the window first
-                        if self.cap.draw(self._drawable(self.ckpt_cost_j)):
-                            e_nvm += self.ckpt_cost_j
-                            work.ckpt_units = 0
-                        else:
-                            on = False
-                            continue
-                continue  # acquisition consumed this dt
-
-            # progress the in-flight work by one dt of active execution
-            e_step = self.mcu.active_power_w * dt
-            target_units = n_units
-            emit_now = False
-            if self.mode == "approximate":
-                assert decision is not None
-                target_units = (n_units if decision.refine_greedily
-                                else decision.initial_units)
-            while e_step > 0 and work.units_done < target_units:
-                if work.unit_energy_left <= 0:
-                    # about to START a new unit. In approximate mode, only
-                    # start it if unit + emit-reserve are affordable now —
-                    # this is the paper's "until just the right amount of
-                    # energy is left to send out a BLE packet".
-                    next_cost = float(unit_costs[work.units_done])
-                    if self.mode == "approximate" and (
-                            self.cap.usable_energy_j()
-                            < next_cost + self.costs.emit_cost):
-                        emit_now = True
-                        break
-                    work.unit_energy_left = next_cost
-                take = min(e_step, work.unit_energy_left)
-                if not self.cap.draw(take):
-                    # ---- power failure mid-work ----
-                    if self.mode == "approximate":
-                        work = None  # volatile by design; sample lost
-                    on = False
-                    break
-                e_work += take
-                work.unit_energy_left -= take
-                e_step -= take
-                if work.unit_energy_left <= 1e-18:
-                    work.units_done += 1
-                    work.unit_energy_left = 0.0
-                    if self.mode == "naive_checkpoint" or (
-                            self.mode == "checkpoint"
-                            and self._should_checkpoint()):
-                        if self.cap.draw(self.ckpt_cost_j):
-                            e_nvm += self.ckpt_cost_j
-                            work.ckpt_units = work.units_done
-                        else:
-                            on = False
-                            break
-            if not on:
-                continue
-            if work is not None and (work.units_done >= target_units
-                                     or emit_now):
-                # emit the result (BLE packet / host transfer)
-                if self.mode == "approximate":
-                    can_emit = self.cap.draw(self.costs.emit_cost)
-                else:
-                    can_emit = self.cap.draw(
-                        self._drawable(self.costs.emit_cost))
-                if can_emit:
-                    e_work += self.costs.emit_cost
-                    results.append(EmittedResult(
-                        work.sample_id, work.units_done, work.t_acquired, t,
-                        cycles - work.cycle_acquired))
-                    work = None
-                else:
-                    if self.mode == "approximate":
-                        work = None
-                    on = False
-
-        return RunStats(results, acquired, skipped, cycles,
-                        tr.total_energy_j * self.cap.booster_eff,
-                        e_work, e_nvm, tr.duration_s)
+        state = self.reset()
+        for i in range(self.trace.power_w.shape[0]):
+            self.step(state, i)
+        return self.stats(state)
 
     def _should_checkpoint(self) -> bool:
         """Chinchilla-style adaptivity: persist only when energy is scarce."""

@@ -27,6 +27,14 @@ from repro.core.budget import CostTable
 SKIP = -1
 
 
+def _max_units_within_batch(costs: CostTable,
+                            budgets: np.ndarray) -> np.ndarray:
+    """Vectorized ``CostTable.max_units_within`` (same boundary semantics)."""
+    cum = costs.cumulative()
+    k = np.searchsorted(cum, budgets, side="right").astype(np.int64) - 1
+    return np.where(cum[0] <= budgets, k, -1)
+
+
 @dataclasses.dataclass(frozen=True)
 class Decision:
     """initial_units: commit now; refine_greedily: spend leftover budget."""
@@ -46,6 +54,24 @@ class Policy:
                accuracy: np.ndarray) -> Decision:
         raise NotImplementedError
 
+    def decide_batch(self, budgets: np.ndarray, costs: CostTable,
+                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``decide`` over a budget vector.
+
+        Returns ``(initial_units, refine_greedily)`` arrays; entry ``j`` is
+        exactly ``self.decide(budgets[j], ...)``. The built-in policies
+        override this with closed forms (no per-budget Python loop) for the
+        fleet worker pool; custom policies inherit this loop fallback.
+        """
+        budgets = np.asarray(budgets, dtype=np.float64)
+        init = np.empty(budgets.shape[0], dtype=np.int64)
+        refine = np.zeros(budgets.shape[0], dtype=bool)
+        for j in range(budgets.shape[0]):
+            d = self.decide(float(budgets[j]), costs, accuracy)
+            init[j] = d.initial_units
+            refine[j] = d.refine_greedily
+        return init, refine
+
 
 @dataclasses.dataclass(frozen=True)
 class Greedy(Policy):
@@ -57,6 +83,12 @@ class Greedy(Policy):
         if k < 0:
             return Decision(SKIP, False)
         return Decision(k, True)
+
+    def decide_batch(self, budgets: np.ndarray, costs: CostTable,
+                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        budgets = np.asarray(budgets, dtype=np.float64)
+        k = _max_units_within_batch(costs, budgets)
+        return np.where(k < 0, SKIP, k), k >= 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +112,21 @@ class Smart(Policy):
             return Decision(SKIP, False)  # paper: skip this round, sleep
         return Decision(p_required, True)
 
+    def decide_batch(self, budgets: np.ndarray, costs: CostTable,
+                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        if accuracy.shape[0] != costs.n_units + 1:
+            raise ValueError("accuracy table must have n_units+1 entries "
+                             "(accuracy[k] = expected accuracy with k units)")
+        budgets = np.asarray(budgets, dtype=np.float64)
+        ok = np.nonzero(accuracy >= self.min_accuracy)[0]
+        if ok.size == 0:
+            return (np.full(budgets.shape[0], SKIP, dtype=np.int64),
+                    np.zeros(budgets.shape[0], dtype=bool))
+        p_required = int(ok[0])
+        k = _max_units_within_batch(costs, budgets)
+        good = k >= p_required
+        return np.where(good, p_required, SKIP), good
+
 
 @dataclasses.dataclass(frozen=True)
 class Fixed(Policy):
@@ -93,6 +140,13 @@ class Fixed(Policy):
             return Decision(SKIP, False)
         return Decision(self.units, False)
 
+    def decide_batch(self, budgets: np.ndarray, costs: CostTable,
+                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        budgets = np.asarray(budgets, dtype=np.float64)
+        k = _max_units_within_batch(costs, budgets)
+        return (np.where(k >= self.units, self.units, SKIP),
+                np.zeros(budgets.shape[0], dtype=bool))
+
 
 @dataclasses.dataclass(frozen=True)
 class Continuous(Policy):
@@ -105,3 +159,9 @@ class Continuous(Policy):
     def decide(self, budget: float, costs: CostTable,
                accuracy: np.ndarray) -> Decision:
         return Decision(costs.n_units, False)
+
+    def decide_batch(self, budgets: np.ndarray, costs: CostTable,
+                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        budgets = np.asarray(budgets, dtype=np.float64)
+        return (np.full(budgets.shape[0], costs.n_units, dtype=np.int64),
+                np.zeros(budgets.shape[0], dtype=bool))

@@ -1,0 +1,94 @@
+"""Fleet-level accounting: request lifecycle counters + energy books.
+
+One ``RequestRecord`` per completed request; counters for every other way
+a request can leave the system (rejected at admission, shed while queued,
+lost to brown-outs past the retry budget, evicted by the straggler
+deadline). ``summary`` folds in the worker pool's energy ledger so a
+single dict answers throughput / latency / accuracy / energy — the four
+axes the paper trades against each other.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    workload: int
+    t_arrival: float
+    t_assigned: float
+    t_done: float
+    units: int
+    worker: int
+    batch: int
+    expected_accuracy: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    completed: list[RequestRecord] = dataclasses.field(default_factory=list)
+    submitted: int = 0
+    rejected: int = 0  # admission control (queue full)
+    shed: int = 0  # stale in queue past shed_after_s
+    lost: int = 0  # brown-out losses past the retry budget
+    evicted: int = 0  # straggler-deadline evictions
+    requeued: int = 0  # retries granted after a loss/eviction
+
+    def observe_completion(self, rec: RequestRecord) -> None:
+        self.completed.append(rec)
+
+    def summary(self, duration_s: float, pool=None,
+                workload_names: list[str] | None = None) -> dict:
+        lat = np.array([r.latency_s for r in self.completed])
+        out: dict = {
+            "submitted": self.submitted,
+            "completed": len(self.completed),
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "lost": self.lost,
+            "evicted": self.evicted,
+            "requeued": self.requeued,
+            "throughput_rps": len(self.completed) / max(duration_s, 1e-9),
+            "latency_mean_s": float(lat.mean()) if lat.size else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "latency_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
+            "mean_units": (float(np.mean([r.units for r in self.completed]))
+                           if self.completed else 0.0),
+            "mean_expected_accuracy": (
+                float(np.mean([r.expected_accuracy for r in self.completed]))
+                if self.completed else 0.0),
+        }
+        by_wl: dict[int, list[RequestRecord]] = {}
+        for r in self.completed:
+            by_wl.setdefault(r.workload, []).append(r)
+        out["per_workload"] = {}
+        for wl, recs in sorted(by_wl.items()):
+            name = (workload_names[wl] if workload_names else str(wl))
+            out["per_workload"][name] = {
+                "completed": len(recs),
+                "mean_units": float(np.mean([r.units for r in recs])),
+                "mean_expected_accuracy": float(
+                    np.mean([r.expected_accuracy for r in recs])),
+            }
+        if pool is not None:
+            harvested = float(pool.e_harvest.sum())
+            work = float(pool.e_work.sum())
+            out["energy"] = {
+                "harvested_j": harvested,
+                "work_j": work,
+                "nvm_j": 0.0,  # approximate runtime: no NVM, ever
+                "sleep_j": 0.0,
+                "j_per_completed": (work / len(self.completed)
+                                    if self.completed else float("inf")),
+                # harvested >= work + nvm + sleep: nothing comes from thin
+                # air; the remainder is banked charge + booster losses
+                "conservation_ok": bool(harvested + 1e-9 >= work),
+            }
+        return out

@@ -1,0 +1,277 @@
+"""Central energy-aware dispatcher for the fleet worker pool.
+
+The scheduler owns the global request stream and answers, every dispatch
+tick, the fleet version of the paper's per-sample question: *which worker
+should run this request, at which knob setting, so the result is emitted
+within the worker's current power cycle?*
+
+Mechanisms (each maps to a single-device concept):
+
+- **Admission control** — a bounded queue; arrivals beyond ``max_queue``
+  are rejected outright (the SMART "skip the round" rule, applied at the
+  fleet's front door).
+- **Energy-proportional routing** — idle workers are ranked by usable
+  capacitor energy; the oldest queued request goes to the richest worker,
+  i.e. to the worker whose budget affords the highest expected-accuracy
+  knob. Per-worker knob choice literally reuses ``core.policies``
+  (``Smart`` admission at the workload's accuracy floor, greedy
+  refinement via ``CostTable``).
+- **Batching** — several queued requests of one workload can ride one
+  power cycle, paying the fixed (acquisition/setup) and emission cost
+  once; the batch size is the largest that still affords the floor knob.
+- **Load shedding** — queued requests older than ``shed_after_s`` are
+  dropped: a stale approximate answer is worth less than no answer, and
+  the energy is better spent on fresh requests (the paper processes the
+  *newest* pending sample for the same reason).
+- **Straggler eviction** — assignments that outlive the deadline implied
+  by ``runtime.straggler.StragglerPolicy`` (the worker browned out before
+  acquiring, or recharges too slowly) are evicted and requeued, exactly
+  like a slow shard being skipped for a step; ``runtime.preemption``'s
+  lost-work bookkeeping shows up here as the retry budget.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core.policies import Greedy, Policy, Smart
+from repro.fleet.metrics import FleetMetrics, RequestRecord
+from repro.fleet.worker import EMIT, LOST, FleetWorkerPool
+from repro.fleet.workloads import FleetWorkload
+from repro.runtime.straggler import StragglerPolicy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    workload: int
+    t_arrival: float
+    retries: int = 0
+    t_assigned: float = -1.0
+
+
+class RequestStream:
+    """Deterministic Poisson arrivals with a workload mix."""
+
+    def __init__(self, rate_rps: float, mix: np.ndarray, n_steps: int,
+                 dt: float, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.counts = rng.poisson(rate_rps * dt, size=n_steps)
+        total = int(self.counts.sum())
+        mix = np.asarray(mix, dtype=np.float64)
+        self.wl = rng.choice(mix.shape[0], size=total, p=mix / mix.sum())
+        self.offsets = np.concatenate([[0], np.cumsum(self.counts)])
+
+    def arrivals(self, i: int) -> np.ndarray:
+        """Workload indices of the requests arriving at step ``i``."""
+        return self.wl[self.offsets[i]:self.offsets[i + 1]]
+
+
+class FleetScheduler:
+    def __init__(self, pool: FleetWorkerPool,
+                 workloads: list[FleetWorkload], *,
+                 max_queue: int = 4096,
+                 shed_after_s: float = 30.0,
+                 max_batch: int = 4,
+                 max_retries: int = 2,
+                 grace_s: float = 20.0,
+                 straggler: StragglerPolicy | None = None):
+        if pool.mode != "dispatch":
+            raise ValueError("scheduler needs a dispatch-mode pool")
+        self.pool = pool
+        self.workloads = workloads
+        self.max_queue = max_queue
+        self.shed_after_s = shed_after_s
+        self.max_batch = max_batch
+        self.max_retries = max_retries
+        self.grace_s = grace_s
+        self.straggler = straggler or StragglerPolicy()
+        self.queues: list[collections.deque[Request]] = [
+            collections.deque() for _ in workloads]
+        # per-workload admission policy: SMART at the workload's floor
+        # (Greedy when no floor), plus cached cost prefixes for batching
+        self.admission: list[Policy] = [
+            Smart(w.floor) if w.floor > 0 else Greedy() for w in workloads]
+        self._cu = [np.concatenate([[0.0], np.cumsum(w.costs.unit_costs)])
+                    for w in workloads]
+        self.inflight: dict[int, tuple[list[Request], float, int]] = {}
+        self.metrics = FleetMetrics()
+        self._ticket = 0
+        self._rid = 0
+
+    # -- intake --------------------------------------------------------------
+
+    def submit(self, t: float, workload_ids: np.ndarray) -> None:
+        """Admit arrivals; reject beyond the global queue bound."""
+        backlog = sum(len(q) for q in self.queues)
+        for wl in workload_ids:
+            self.metrics.submitted += 1
+            if backlog >= self.max_queue:
+                self.metrics.rejected += 1
+                continue
+            self.queues[int(wl)].append(Request(self._rid, int(wl), t))
+            self._rid += 1
+            backlog += 1
+
+    # -- dispatch ------------------------------------------------------------
+
+    def dispatch(self, t: float) -> int:
+        """Shed stale work, then route queued requests to capable workers.
+        Returns the number of requests assigned this tick."""
+        self._shed(t)
+        if not any(self.queues):
+            return 0
+        idle = np.nonzero(self.pool.dispatchable())[0]
+        if idle.size == 0:
+            return 0
+        usable = self.pool.usable_energy()
+        order = idle[np.argsort(-usable[idle])]  # richest worker first
+        assigned = 0
+        ptr = 0
+        while ptr < order.size:
+            # oldest head request across workload queues (FIFO fairness)
+            heads = [(q[0].t_arrival, wl) for wl, q in enumerate(self.queues)
+                     if q]
+            if not heads:
+                break
+            heads.sort()
+            w = int(order[ptr])
+            budget = float(usable[w])
+            placed = 0
+            for _, wl in heads:
+                placed = self._try_assign(w, wl, budget, t)
+                if placed:
+                    assigned += placed
+                    break
+            if not placed:
+                # the RICHEST remaining worker cannot afford any queue's
+                # floor knob; poorer workers cannot either — stop here
+                break
+            ptr += 1
+        return assigned
+
+    def _try_assign(self, w: int, wl: int, budget: float, t: float) -> int:
+        """Assign a batch from queue ``wl`` to worker ``w`` if the worker's
+        budget affords the workload's floor knob; returns the batch size
+        (0: not affordable)."""
+        wk = self.workloads[wl]
+        d = self.admission[wl].decide(budget, wk.costs, wk.accuracy)
+        if d.skipped:
+            return 0
+        p_req = d.initial_units
+        cu = self._cu[wl]
+        overhead = wk.costs.fixed_cost + wk.costs.emit_cost
+        spendable = budget - overhead
+        q = self.queues[wl]
+        # batch: how many floor-knob requests ride this power cycle?
+        if cu[p_req] > 0:
+            b = int(spendable // cu[p_req])
+        else:
+            b = self.max_batch
+        b = max(1, min(b, self.max_batch, len(q)))
+        # greedy refinement: the largest per-request knob the batch affords
+        if d.refine_greedily:
+            u = int(np.searchsorted(cu, spendable / b, side="right") - 1)
+            u = max(p_req, min(u, wk.costs.n_units))
+        else:
+            u = p_req
+        if u <= 0:
+            return 0  # zero-work assignment: nothing worth emitting
+        reqs = [q.popleft() for _ in range(b)]
+        for r in reqs:
+            r.t_assigned = t
+        ticket = self._ticket
+        self._ticket += 1
+        self.pool.assign(np.array([w]), np.array([ticket]),
+                         np.array([wl]), np.array([u]), np.array([b]), t)
+        self.inflight[ticket] = (reqs, t, w)
+        return b
+
+    # -- harvest results / losses -------------------------------------------
+
+    def collect(self, t: float, evict: bool = False) -> None:
+        for ev in self.pool.pop_events():
+            kind, t_ev, w, ticket = ev[0], ev[1], ev[2], ev[3]
+            entry = self.inflight.pop(ticket, None)
+            if entry is None:
+                continue
+            reqs, _, _ = entry
+            if kind == EMIT:
+                _, _, _, _, units_done, req_units, batch = ev
+                full = units_done // req_units if req_units > 0 else len(reqs)
+                part = units_done % req_units if req_units > 0 else 0
+                wl = reqs[0].workload
+                acc = self.workloads[wl].accuracy
+                for j, r in enumerate(reqs):
+                    if j < full:
+                        units = req_units
+                    elif j == full and part > 0:
+                        units = part  # anytime partial result, still emitted
+                    else:
+                        self._retry(r, t)
+                        continue
+                    self.metrics.observe_completion(RequestRecord(
+                        r.rid, r.workload, r.t_arrival, r.t_assigned, t_ev,
+                        int(units), int(w), int(batch),
+                        float(acc[int(units)])))
+            elif kind == LOST:
+                for r in reqs:
+                    self._retry(r, t)
+        if evict:
+            self._evict_stragglers(t)
+
+    def _retry(self, r: Request, t: float) -> None:
+        r.retries += 1
+        if r.retries > self.max_retries:
+            self.metrics.lost += 1
+        else:
+            self.metrics.requeued += 1
+            self.queues[r.workload].appendleft(r)
+
+    def _shed(self, t: float) -> None:
+        for q in self.queues:
+            while q and t - q[0].t_arrival > self.shed_after_s:
+                q.popleft()
+                self.metrics.shed += 1
+
+    def _evict_stragglers(self, t: float) -> None:
+        """Revoke assignments that outlived their service deadline: the
+        worker browned out before acquiring, or recharges too slowly."""
+        active_p = self.pool.mcu.active_power_w
+        stale: list[tuple[int, int]] = []
+        for ticket, (reqs, t_assigned, w) in self.inflight.items():
+            wl = reqs[0].workload
+            wk = self.workloads[wl]
+            est = (wk.costs.fixed_cost + wk.costs.emit_cost
+                   + len(reqs) * self._cu[wl][-1]) / active_p
+            if t - t_assigned > self.grace_s + self.straggler.deadline_s(est):
+                stale.append((ticket, w))
+        for ticket, w in stale:
+            revoked = self.pool.evict(np.array([w]))
+            if ticket not in revoked:
+                continue  # raced with an emit/loss; next collect settles it
+            reqs, _, _ = self.inflight.pop(ticket)
+            self.metrics.evicted += len(reqs)
+            for r in reqs:
+                self._retry(r, t)
+
+
+def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
+              stream: RequestStream, n_steps: int, *,
+              dispatch_every: int = 10) -> dict:
+    """Drive arrivals -> dispatch -> device physics -> collection."""
+    dt = pool.dt
+    names = [w.name for w in sched.workloads]
+    for i in range(n_steps):
+        t = i * dt
+        wls = stream.arrivals(i)
+        if wls.size:
+            sched.submit(t, wls)
+        tick = i % dispatch_every == 0
+        if tick:
+            sched.dispatch(t)
+        pool.step(i)
+        sched.collect(t, evict=tick)
+    return sched.metrics.summary(n_steps * dt, pool, names)

@@ -1,0 +1,141 @@
+"""Uniform fleet adapters for the paper's three scenarios.
+
+A ``FleetWorkload`` is what the scheduler needs to price and route a
+request: a ``CostTable`` (Joules per knob unit on the worker device), an
+accuracy table (``accuracy[k]`` = expected accuracy with ``k`` units, the
+SMART lookup), and an admission floor. The three constructors mirror the
+paper's evaluation apps:
+
+- :func:`har_workload` — anytime SVM over the 140-feature HAR pipeline
+  (``core.anytime_svm`` + ``core.profile_tables``). ``real=True`` trains
+  the OvR SVM on the synthetic HAR set and measures the accuracy table;
+  the default is a calibrated analytic proxy so a 1000-worker benchmark
+  needs no JAX warm-up.
+- :func:`harris_workload` — perforated Harris corner detection; one knob
+  unit = one Gaussian tap of the structure-tensor accumulation.
+- :func:`lm_workload` — anytime LM decode (early-exit depth); one knob
+  unit = one transformer layer, priced by the same analytic cost model
+  the serving engine uses, converted to Joules at an edge-accelerator
+  power. Pass a calibrated ``serve.engine.AnytimeEngine`` to replace the
+  coherence proxy with measured values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.budget import CostTable
+from repro.core.energy import McuEnergyModel
+from repro.core.profile_tables import (har_cost_table, harris_cost_table,
+                                       layer_cost_table)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetWorkload:
+    name: str
+    costs: CostTable
+    accuracy: np.ndarray  # (n_units + 1,)
+    floor: float = 0.0  # SMART admission floor; 0 -> greedy admission
+    score: Callable[[int, int], bool] | None = None  # (sample_id, units)
+
+    def __post_init__(self):
+        if self.accuracy.shape[0] != self.costs.n_units + 1:
+            raise ValueError("accuracy table must have n_units+1 entries")
+
+
+# ---------------------------------------------------------------------------
+# HAR / anytime SVM
+# ---------------------------------------------------------------------------
+
+
+def har_workload(*, floor: float = 0.8, scale: float = 90.0,
+                 real: bool = False, n_train: int = 120, n_test: int = 60,
+                 seed: int = 0) -> FleetWorkload:
+    from repro.data.har import FEATURE_FAMILIES
+
+    n = len(FEATURE_FAMILIES)
+    if real:
+        import jax.numpy as jnp
+
+        from repro.core import anytime_svm as asvm
+        from repro.data import har
+
+        Xw_tr, ytr = har.generate_windows(n_train, seed=seed)
+        Xw_te, yte = har.generate_windows(n_test, seed=seed + 1)
+        Ftr = np.asarray(har.extract_features(jnp.asarray(Xw_tr)))
+        Fte = np.asarray(har.extract_features(jnp.asarray(Xw_te)))
+        model = asvm.train_ovr_svm(Ftr, ytr, 6)
+        costs = har_cost_table(FEATURE_FAMILIES, model.order, scale=scale)
+        acc = asvm.accuracy_table(model, Fte, yte, np.arange(n + 1))
+        Xo = model.standardize(Fte)[:, model.order]
+        Wo = model.W[:, model.order]
+
+        def score(sample_id: int, p: int) -> bool:
+            i = sample_id % len(yte)
+            return bool(
+                (Xo[i, :p] @ Wo[:, :p].T + model.b).argmax() == yte[i])
+
+        return FleetWorkload("har", costs, acc, floor, score)
+    # analytic proxy: identity feature order; accuracy saturating from
+    # chance (1/6) toward the measured ~0.92 plateau of the trained SVM.
+    # The 0.14 exponent matches the Fig.-4 regime (importance-ordered
+    # features contribute most up front): the 0.8 floor lands near 40
+    # features ~ one fresh power cycle of the 1470 uF buffer.
+    costs = har_cost_table(FEATURE_FAMILIES, np.arange(n), scale=scale)
+    k = np.arange(n + 1) / n
+    acc = 1.0 / 6.0 + (0.92 - 1.0 / 6.0) * k ** 0.14
+    return FleetWorkload("har", costs, acc, floor)
+
+
+# ---------------------------------------------------------------------------
+# Harris corner detection (perforated structure-tensor taps)
+# ---------------------------------------------------------------------------
+
+
+def harris_workload(*, floor: float = 0.8, n_taps: int = 25,
+                    img_px: int = 128 * 128) -> FleetWorkload:
+    costs = harris_cost_table(n_taps=n_taps, img_px=img_px)
+    # corner-set equivalence vs kept-tap fraction: near-certain above ~70%
+    # of taps, collapsing quickly below ~40% (the paper's Fig.-12/13
+    # operating range), modelled as a logistic in the kept fraction
+    k = np.arange(n_taps + 1) / n_taps
+    acc = 1.0 / (1.0 + np.exp(-(k - 0.48) / 0.085))
+    acc[-1] = 1.0  # all taps == exact computation
+    return FleetWorkload("harris", costs, acc, floor)
+
+
+# ---------------------------------------------------------------------------
+# Anytime LM decode (early-exit depth)
+# ---------------------------------------------------------------------------
+
+
+def lm_workload(cfg=None, *, floor: float = 0.7, kv_len: int = 256,
+                edge_flops: float = 5e9, edge_power_w: float | None = None,
+                engine=None) -> FleetWorkload:
+    """One knob unit = one decoder layer of ``cfg`` (default
+    stablelm-1.6b), priced in seconds by ``profile_tables.layer_cost_table``
+    and converted to Joules at the edge device's active power."""
+    if cfg is None:
+        from repro.configs.stablelm_1_6b import CONFIG as cfg
+    mcu = McuEnergyModel()
+    p_w = edge_power_w if edge_power_w is not None else mcu.active_power_w
+    sec = layer_cost_table(cfg, kv_len, 1, decode=True,
+                           flops_per_second=edge_flops)
+    costs = CostTable(unit_costs=sec.unit_costs * p_w,
+                      emit_cost=sec.emit_cost * p_w,  # final norm + LM head
+                      fixed_cost=50e-6)  # tokenization / request setup
+    d = np.arange(cfg.n_layers + 1)
+    if engine is not None:
+        # measured coherence from a calibrated AnytimeEngine (keep=1.0)
+        meas = {dd: engine._measured_coherence(dd, 1.0)
+                for dd in engine.depths}
+        xs = sorted(meas)
+        acc = np.interp(d, xs, [meas[x] for x in xs])
+        acc[0] = 0.0
+    else:
+        # the planner's depth-coherence proxy (anytime_lm default)
+        acc = np.clip((d / cfg.n_layers) ** 0.5, 1e-3, 1.0)
+        acc[0] = 1e-3
+    return FleetWorkload("lm", costs, acc, floor)

@@ -1,0 +1,14 @@
+"""Pallas-TPU API compatibility.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+resolve whichever this jax ships so the kernels run on both sides of the
+rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # fail at import, not inside pallas_call setup
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is not supported")

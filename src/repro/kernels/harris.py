@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 _HALO = 3  # 1 (sobel) + 2 (gaussian)
 
 
@@ -97,7 +99,7 @@ def harris_pallas(img, tile_keep, *, tile: int = 16, k_harris: float = 0.05,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((H, W), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(keep, img)

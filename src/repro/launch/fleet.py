@@ -1,0 +1,186 @@
+"""Fleet serving launcher: scheduled vs independent intermittent workers.
+
+    PYTHONPATH=src python -m repro.launch.fleet --workers 256 --duration 120
+    PYTHONPATH=src python -m repro.launch.fleet --workers 1024 \
+        --traces RF,SOM,SOR,SIR --scheduler both --json out.json
+
+Builds a harvest-powered worker fleet over a mix of energy-trace families,
+then serves one global HAR + Harris + LM request stream either through the
+central energy-aware scheduler (``repro.fleet.scheduler``) or as
+independent self-sampling workers (the no-scheduler baseline), and prints
+the fleet metrics. The helpers here are reused by
+``benchmarks/fleet_throughput.py`` and ``examples/fleet_serve.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.energy import get_trace
+from repro.core.policies import Greedy, Smart
+from repro.fleet.scheduler import FleetScheduler, RequestStream, run_fleet
+from repro.fleet.worker import FleetWorkerPool, stack_traces
+from repro.fleet.workloads import (FleetWorkload, har_workload,
+                                   harris_workload, lm_workload)
+
+WORKLOAD_FACTORIES = {
+    "har": har_workload,
+    "harris": harris_workload,
+    "lm": lm_workload,
+}
+
+
+def make_power_matrix(trace_names: list[str], n_rows: int,
+                      duration_s: float, dt: float = 0.01,
+                      seed: int = 0) -> np.ndarray:
+    """(n_rows, T) harvested-power matrix cycling through the families;
+    distinct seeds per row. Workers share rows (with phase offsets) so a
+    1000-worker fleet does not pay 1000 trace syntheses."""
+    rows = [get_trace(trace_names[r % len(trace_names)], seed=seed + r,
+                      duration_s=duration_s, dt=dt)
+            for r in range(n_rows)]
+    return stack_traces(rows)
+
+
+def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
+                        workloads: list[FleetWorkload],
+                        seed: int = 0) -> FleetWorkerPool:
+    rng = np.random.default_rng(seed)
+    return FleetWorkerPool(
+        power, dt, workloads=[w.costs for w in workloads], mode="dispatch",
+        n_workers=n_workers,
+        trace_index=np.arange(n_workers) % power.shape[0],
+        phase=rng.integers(0, power.shape[1], n_workers))
+
+
+def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
+                  workloads: list[FleetWorkload], *, rate_rps: float,
+                  mix: np.ndarray, n_steps: int, seed: int = 0,
+                  max_batch: int = 4, shed_after_s: float = 30.0,
+                  dispatch_every: int = 10) -> dict:
+    pool = build_dispatch_pool(power, dt, n_workers, workloads, seed)
+    sched = FleetScheduler(pool, workloads, max_batch=max_batch,
+                           shed_after_s=shed_after_s)
+    stream = RequestStream(rate_rps, mix, n_steps, dt, seed=seed + 1)
+    summary = run_fleet(pool, sched, stream, n_steps,
+                        dispatch_every=dispatch_every)
+    summary["mode"] = "scheduled"
+    summary["n_workers"] = n_workers
+    return summary
+
+
+def run_independent(power: np.ndarray, dt: float, n_workers: int,
+                    workloads: list[FleetWorkload], *, mix: np.ndarray,
+                    period_s: float, n_steps: int, seed: int = 0) -> dict:
+    """No-scheduler baseline: workers are pinned to a workload (by the
+    request mix) and self-sample every ``period_s`` — same offered load
+    as a ``rate_rps = n_workers / period_s`` stream, no routing."""
+    counts = (np.asarray(mix) / np.sum(mix) * n_workers).astype(int)
+    counts[0] += n_workers - counts.sum()
+    completed = 0
+    units_sum = 0.0
+    acc_sum = 0.0
+    harvested = 0.0
+    work = 0.0
+    skipped = 0
+    per_wl = {}
+    rng = np.random.default_rng(seed)
+    for wl, cnt in zip(workloads, counts):
+        if cnt == 0:
+            continue
+        pool = FleetWorkerPool(
+            power, dt, workloads=[wl.costs], mode="local", n_workers=cnt,
+            policy=Smart(wl.floor) if wl.floor > 0 else Greedy(),
+            accuracy_table=wl.accuracy,
+            sampling_period_s=period_s,
+            trace_index=np.arange(cnt) % power.shape[0],
+            phase=rng.integers(0, power.shape[1], cnt))
+        st = pool.run(n_steps)
+        res = [r for worker in pool.results for r in worker]
+        completed += st.emitted
+        skipped += st.skipped
+        units_sum += sum(r.units_used for r in res)
+        acc_sum += sum(float(wl.accuracy[min(r.units_used,
+                                             wl.costs.n_units)])
+                       for r in res)
+        harvested += st.energy_harvested_j
+        work += st.energy_on_work_j
+        per_wl[wl.name] = {"workers": int(cnt), "completed": st.emitted}
+    return {
+        "mode": "independent",
+        "n_workers": n_workers,
+        "completed": completed,
+        "skipped": skipped,
+        "throughput_rps": completed / (n_steps * dt),
+        "mean_units": units_sum / max(completed, 1),
+        "mean_expected_accuracy": acc_sum / max(completed, 1),
+        "per_workload": per_wl,
+        "energy": {"harvested_j": harvested, "work_j": work,
+                   "j_per_completed": work / max(completed, 1),
+                   "conservation_ok": bool(harvested + 1e-9 >= work)},
+    }
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=256)
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--dt", type=float, default=0.01)
+    ap.add_argument("--traces", default="RF,SOM,SIM,SOR,SIR")
+    ap.add_argument("--trace-rows", type=int, default=0,
+                    help="distinct trace rows (0: min(32, workers))")
+    ap.add_argument("--workloads", default="har,harris,lm")
+    ap.add_argument("--mix", default="0.4,0.3,0.3")
+    ap.add_argument("--period", type=float, default=10.0,
+                    help="per-worker sampling period; the request rate is "
+                         "workers/period so both modes see the same load")
+    ap.add_argument("--scheduler", choices=("on", "off", "both"),
+                    default="both")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--shed-after", type=float, default=30.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="", help="write summary to this path")
+    args = ap.parse_args(argv)
+
+    names = args.traces.split(",")
+    wl_names = args.workloads.split(",")
+    unknown = [n for n in wl_names if n not in WORKLOAD_FACTORIES]
+    if unknown:
+        ap.error(f"unknown workload(s) {unknown}; "
+                 f"choose from {sorted(WORKLOAD_FACTORIES)}")
+    workloads = [WORKLOAD_FACTORIES[n]() for n in wl_names]
+    mix = np.array([float(x) for x in args.mix.split(",")])
+    if mix.shape[0] != len(workloads):
+        ap.error(f"--mix has {mix.shape[0]} entries for "
+                 f"{len(workloads)} workloads")
+    n_rows = args.trace_rows or min(32, args.workers)
+    power = make_power_matrix(names, n_rows, args.duration, args.dt,
+                              args.seed)
+    n_steps = int(args.duration / args.dt)
+    rate = args.workers / args.period
+
+    out: dict = {"config": vars(args)}
+    if args.scheduler in ("on", "both"):
+        out["scheduled"] = run_scheduled(
+            power, args.dt, args.workers, workloads, rate_rps=rate, mix=mix,
+            n_steps=n_steps, seed=args.seed, max_batch=args.max_batch,
+            shed_after_s=args.shed_after)
+    if args.scheduler in ("off", "both"):
+        out["independent"] = run_independent(
+            power, args.dt, args.workers, workloads, mix=mix,
+            period_s=args.period, n_steps=n_steps, seed=args.seed)
+    if "scheduled" in out and "independent" in out:
+        out["speedup_completed"] = (
+            out["scheduled"]["completed"]
+            / max(out["independent"]["completed"], 1))
+    print(json.dumps(out, indent=1, default=str))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,53 +1,18 @@
 """Core-library invariants: budgets, policies, coherence, perforation,
-the intermittent executor. Property-based where the invariant is global."""
+the intermittent executor. Deterministic only — the property-based
+(hypothesis) variants live in test_core_properties.py so this suite runs
+on a stock environment without the optional dev dependency."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.budget import Budget, BudgetExceeded, BudgetMeter, CostTable
+from repro.core.budget import CostTable
 from repro.core.coherence import (ContributionStats,
-                                  binary_coherence_correlated,
                                   binary_coherence_independent,
                                   empirical_coherence,
                                   multiclass_coherence_mc)
 from repro.core.energy import Capacitor, get_trace, kinetic_trace
 from repro.core.intermittent import IntermittentExecutor
-from repro.core.perforation import (PerforationPlan, perforation_mask,
-                                    strided_mask)
-from repro.core.policies import SKIP, Continuous, Fixed, Greedy, Smart
-
-
-# ---------------------------------------------------------------------------
-# budget
-# ---------------------------------------------------------------------------
-
-
-@given(st.lists(st.floats(0.001, 10.0), min_size=1, max_size=50),
-       st.floats(0.0, 100.0))
-@settings(max_examples=50, deadline=None)
-def test_budget_meter_never_exceeds(costs, cap):
-    """INVARIANT: spent <= budget, no matter the charge sequence."""
-    meter = BudgetMeter(Budget(cap))
-    for c in costs:
-        try:
-            meter.charge(c)
-        except BudgetExceeded:
-            pass
-        assert meter.spent <= cap + 1e-9
-
-
-@given(st.integers(1, 200), st.floats(0.01, 2.0), st.floats(0.0, 500.0))
-@settings(max_examples=50, deadline=None)
-def test_cost_table_max_units_affordable(n, unit, budget):
-    t = CostTable(np.full(n, unit), emit_cost=0.1, fixed_cost=0.05)
-    k = t.max_units_within(budget)
-    if k >= 0:
-        assert t.cost_of(k) <= budget + 1e-9
-        if k < n:
-            assert t.cost_of(k + 1) > budget
+from repro.core.policies import Continuous, Fixed, Greedy, Smart
 
 
 # ---------------------------------------------------------------------------
@@ -67,18 +32,6 @@ def test_greedy_spends_maximally():
     assert d.refine_greedily
 
 
-@given(st.floats(0.1, 0.95), st.floats(0.0, 30.0))
-@settings(max_examples=60, deadline=None)
-def test_smart_floor_invariant(floor, budget):
-    """INVARIANT: SMART never commits to a p below its accuracy floor."""
-    t = _table()
-    acc = np.linspace(1 / 6, 0.9, 21)
-    d = Smart(floor).decide(budget, t, acc)
-    if not d.skipped:
-        assert acc[d.initial_units] >= floor
-        assert t.cost_of(d.initial_units) <= budget + 1e-9
-
-
 def test_smart_skips_when_floor_unattainable():
     t = _table()
     acc = np.linspace(1 / 6, 0.9, 21)
@@ -86,6 +39,21 @@ def test_smart_skips_when_floor_unattainable():
     assert Smart(0.5).decide(0.0, t, acc).skipped  # no budget
     assert Fixed(30).decide(5.0, t, acc).skipped
     assert Continuous().decide(0.0, t, acc).initial_units == 20
+
+
+def test_decide_batch_matches_decide_grid():
+    """The closed-form vectorized decide (used by the fleet worker pool)
+    agrees with the scalar decide on a boundary-heavy budget grid."""
+    t = _table()
+    acc = np.linspace(1 / 6, 0.9, 21)
+    budgets = np.concatenate([np.linspace(0.0, 25.0, 101),
+                              t.cumulative()])  # exact boundaries included
+    for pol in (Greedy(), Smart(0.5), Smart(0.99), Fixed(5), Continuous()):
+        init, refine = pol.decide_batch(budgets, t, acc)
+        for j, b in enumerate(budgets):
+            d = pol.decide(float(b), t, acc)
+            assert init[j] == d.initial_units
+            assert refine[j] == d.refine_greedily
 
 
 # ---------------------------------------------------------------------------
@@ -102,18 +70,6 @@ def test_coherence_limits():
     assert binary_coherence_independent(cs, 64) == 1.0
     p_mid = binary_coherence_independent(cs, 32)
     assert 0.5 <= p_mid <= 1.0
-
-
-@given(st.integers(0, 64))
-@settings(max_examples=20, deadline=None)
-def test_coherence_bounded(p):
-    rng = np.random.default_rng(1)
-    w = rng.normal(size=64)
-    X = rng.normal(size=(256, 64)) + 0.3
-    cs = ContributionStats.from_data(w, X, full_cov=True)
-    ci = binary_coherence_independent(cs, p)
-    cc = binary_coherence_correlated(cs, p)
-    assert 0.0 <= ci <= 1.0 and 0.0 <= cc <= 1.0
 
 
 def test_coherence_analytic_tracks_empirical():
@@ -137,39 +93,6 @@ def test_empirical_coherence_monotone_tail():
     X = rng.normal(size=(300, 40))
     c = empirical_coherence(W, X, np.arange(40), np.array([40]))
     assert c[0] == 1.0
-
-
-# ---------------------------------------------------------------------------
-# perforation
-# ---------------------------------------------------------------------------
-
-
-@given(st.integers(1, 256), st.floats(0.0, 1.0))
-@settings(max_examples=60, deadline=None)
-def test_perforation_mask_drop_count(n, rate):
-    key = jax.random.key(0)
-    mask = perforation_mask(n, rate, key)
-    dropped = int(n - jnp.sum(mask))
-    assert dropped == int(round(rate * n))
-
-
-@given(st.integers(1, 256), st.floats(0.0, 1.0))
-@settings(max_examples=60, deadline=None)
-def test_strided_mask_drop_count(n, rate):
-    m = strided_mask(n, rate)
-    assert (~m).sum() == int(round(rate * n))
-
-
-@given(st.integers(1, 100), st.floats(0.001, 1.0), st.floats(0.0, 200.0))
-@settings(max_examples=60, deadline=None)
-def test_perforation_plan_budget_respected(n, unit, budget):
-    """INVARIANT: the chosen rate's cost fits the budget."""
-    plan = PerforationPlan(n_units=n, unit_cost=unit, fixed_cost=0.1,
-                           emit_cost=0.1)
-    rate = plan.rate_for_budget(budget)
-    if rate is not None:
-        assert plan.cost_at_rate(rate) <= budget + 1e-9
-        assert 0.0 <= rate <= 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -238,3 +161,26 @@ def test_approximate_beats_checkpoint_throughput():
     st_c = _run("checkpoint", Greedy(), costs, acc, duration=1800.0,
                 state_bytes=16384)
     assert len(st_a.results) > len(st_c.results)
+
+
+def test_step_api_matches_run():
+    """The resumable step API is exactly run(): stepping in two halves
+    (pause/resume) yields identical results and counters."""
+    costs = CostTable(np.full(40, 2e-4), emit_cost=1.2e-4, fixed_cost=1e-4)
+    acc = np.linspace(1 / 6, 0.9, 41)
+    tr = kinetic_trace(seed=7, duration_s=600.0)
+    ref = IntermittentExecutor(tr, costs, Greedy(), acc,
+                               sampling_period_s=30.0).run()
+    ex = IntermittentExecutor(tr, costs, Greedy(), acc,
+                              sampling_period_s=30.0)
+    state = ex.reset()
+    half = tr.power_w.shape[0] // 2
+    for i in range(half):
+        ex.step(state, i)
+    for i in range(half, tr.power_w.shape[0]):  # resume after the pause
+        ex.step(state, i)
+    got = ex.stats(state)
+    assert [(r.sample_id, r.units_used, r.t_emitted) for r in got.results] \
+        == [(r.sample_id, r.units_used, r.t_emitted) for r in ref.results]
+    assert got.power_cycles == ref.power_cycles
+    assert got.energy_on_work_j == ref.energy_on_work_j

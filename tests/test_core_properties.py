@@ -1,0 +1,136 @@
+"""Property-based core invariants (hypothesis). Split from test_core.py so
+the deterministic suite still runs on environments without hypothesis."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.budget import (Budget, BudgetExceeded, BudgetMeter,  # noqa: E402
+                               CostTable)
+from repro.core.coherence import (ContributionStats,  # noqa: E402
+                                  binary_coherence_correlated,
+                                  binary_coherence_independent)
+from repro.core.perforation import (PerforationPlan, perforation_mask,  # noqa: E402
+                                    strided_mask)
+from repro.core.policies import Smart  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# budget
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.001, 10.0), min_size=1, max_size=50),
+       st.floats(0.0, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_budget_meter_never_exceeds(costs, cap):
+    """INVARIANT: spent <= budget, no matter the charge sequence."""
+    meter = BudgetMeter(Budget(cap))
+    for c in costs:
+        try:
+            meter.charge(c)
+        except BudgetExceeded:
+            pass
+        assert meter.spent <= cap + 1e-9
+
+
+@given(st.integers(1, 200), st.floats(0.01, 2.0), st.floats(0.0, 500.0))
+@settings(max_examples=50, deadline=None)
+def test_cost_table_max_units_affordable(n, unit, budget):
+    t = CostTable(np.full(n, unit), emit_cost=0.1, fixed_cost=0.05)
+    k = t.max_units_within(budget)
+    if k >= 0:
+        assert t.cost_of(k) <= budget + 1e-9
+        if k < n:
+            assert t.cost_of(k + 1) > budget
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+def _table(n=20, unit=1.0):
+    return CostTable(np.full(n, unit), emit_cost=0.5, fixed_cost=0.2)
+
+
+@given(st.floats(0.1, 0.95), st.floats(0.0, 30.0))
+@settings(max_examples=60, deadline=None)
+def test_smart_floor_invariant(floor, budget):
+    """INVARIANT: SMART never commits to a p below its accuracy floor."""
+    t = _table()
+    acc = np.linspace(1 / 6, 0.9, 21)
+    d = Smart(floor).decide(budget, t, acc)
+    if not d.skipped:
+        assert acc[d.initial_units] >= floor
+        assert t.cost_of(d.initial_units) <= budget + 1e-9
+
+
+@given(st.floats(0.1, 0.95),
+       st.lists(st.floats(0.0, 30.0), min_size=1, max_size=16))
+@settings(max_examples=40, deadline=None)
+def test_decide_batch_matches_decide(floor, budgets):
+    """INVARIANT: the vectorized decide (fleet pool path) agrees with the
+    scalar decide entry-by-entry."""
+    t = _table()
+    acc = np.linspace(1 / 6, 0.9, 21)
+    pol = Smart(floor)
+    init, refine = pol.decide_batch(np.array(budgets), t, acc)
+    for j, b in enumerate(budgets):
+        d = pol.decide(b, t, acc)
+        assert init[j] == d.initial_units
+        assert refine[j] == d.refine_greedily
+
+
+# ---------------------------------------------------------------------------
+# coherence analysis
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 64))
+@settings(max_examples=20, deadline=None)
+def test_coherence_bounded(p):
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=64)
+    X = rng.normal(size=(256, 64)) + 0.3
+    cs = ContributionStats.from_data(w, X, full_cov=True)
+    ci = binary_coherence_independent(cs, p)
+    cc = binary_coherence_correlated(cs, p)
+    assert 0.0 <= ci <= 1.0 and 0.0 <= cc <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# perforation
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 256), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_perforation_mask_drop_count(n, rate):
+    key = jax.random.key(0)
+    mask = perforation_mask(n, rate, key)
+    dropped = int(n - jnp.sum(mask))
+    assert dropped == int(round(rate * n))
+
+
+@given(st.integers(1, 256), st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_strided_mask_drop_count(n, rate):
+    m = strided_mask(n, rate)
+    assert (~m).sum() == int(round(rate * n))
+
+
+@given(st.integers(1, 100), st.floats(0.001, 1.0), st.floats(0.0, 200.0))
+@settings(max_examples=60, deadline=None)
+def test_perforation_plan_budget_respected(n, unit, budget):
+    """INVARIANT: the chosen rate's cost fits the budget."""
+    plan = PerforationPlan(n_units=n, unit_cost=unit, fixed_cost=0.1,
+                           emit_cost=0.1)
+    rate = plan.rate_for_budget(budget)
+    if rate is not None:
+        assert plan.cost_at_rate(rate) <= budget + 1e-9
+        assert 0.0 <= rate <= 1.0
