@@ -1,4 +1,5 @@
-"""Fleet throughput: energy-aware scheduler vs independent workers.
+"""Fleet throughput: energy-aware scheduler vs independent workers, and
+NumPy-vs-JAX worker-backend scaling.
 
 Claims checked:
 - at >=1000 workers over a 600 s mixed RF/solar trace, the central
@@ -8,23 +9,34 @@ Claims checked:
   from energy-starved workers to charged ones instead of skipping it;
 - the vectorized worker pool scales: completed-request throughput grows
   near-linearly with fleet size (>=1000-worker scaling curve);
+- the JAX ``lax.scan`` backend (a) agrees with the NumPy reference on
+  emitted/skipped/power-cycle counts, and (b) carries the fleet to
+  >=100k workers in one device launch (``--backend jax``);
 - energy conservation holds fleet-wide (harvested >= work; NVM == 0 by
   construction for the approximate runtime).
 
-JSON lands in experiments/fleet_throughput.json (same convention as
-benchmarks/run.py).
+    python -m benchmarks.fleet_throughput                 # scheduler claims
+    python -m benchmarks.fleet_throughput --backend jax   # backend scaling
+    python -m benchmarks.fleet_throughput --smoke         # CI agreement gate
+
+JSON lands in experiments/fleet_throughput.json (scheduler claims) and
+experiments/fleet_backend_scaling.json (backend scaling), same convention
+as benchmarks/run.py.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.launch.fleet import (make_power_matrix, run_independent,
-                                run_scheduled)
+from repro.core.energy import power_matrix
+from repro.launch.fleet import (hetero_capacitors, make_power_matrix,
+                                run_independent, run_scheduled)
 from repro.fleet.workloads import har_workload, harris_workload, lm_workload
 
 TRACES = ["RF", "SOM", "SIM", "SOR", "SIR"]
@@ -75,7 +87,167 @@ def scaling_curve(sizes=(64, 256, 1024), duration_s: float = 120.0,
     return out
 
 
-def main() -> dict:
+# ---------------------------------------------------------------------------
+# NumPy-vs-JAX backend: agreement, wall-clock, >=100k scaling
+# ---------------------------------------------------------------------------
+
+
+def _timed_independent(backend: str, n_workers: int, duration_s: float,
+                       power: np.ndarray,
+                       seed: int = 0) -> tuple[dict, float]:
+    n_steps = int(duration_s / DT)
+    t0 = time.perf_counter()
+    res = run_independent(power, DT, n_workers, _workloads(), mix=MIX,
+                          period_s=PERIOD_S, n_steps=n_steps, seed=seed,
+                          backend=backend)
+    return res, time.perf_counter() - t0
+
+
+def _backend_agreement(n_workers: int, duration_s: float, n_rows: int,
+                       seed: int = 0) -> dict:
+    """The one definition of backend agreement: both backends serve the
+    same mixed-workload fleet on one shared trace bank, and the
+    completed/skipped counts must match. Used by the recorded benchmark
+    and the CI smoke gate alike so the two cannot drift."""
+    power = power_matrix(TRACES, min(n_rows, n_workers), duration_s, DT,
+                         seed)
+    np_res, _ = _timed_independent("numpy", n_workers, duration_s, power,
+                                   seed)
+    jax_res, _ = _timed_independent("jax", n_workers, duration_s, power,
+                                    seed)
+    agree = (np_res["completed"] == jax_res["completed"]
+             and np_res["skipped"] == jax_res["skipped"])
+    return {
+        "n_workers": n_workers,
+        "duration_s": duration_s,
+        "counts_agree": bool(agree),
+        "completed": {"numpy": np_res["completed"],
+                      "jax": jax_res["completed"]},
+        "skipped": {"numpy": np_res["skipped"], "jax": jax_res["skipped"]},
+    }
+
+
+def backend_comparison(n_workers: int = 1024, duration_s: float = 120.0,
+                       seed: int = 0) -> dict:
+    """Same fleet, both backends: count agreement (full mixed-workload
+    fleet) + wall-clock on one representative pool. The JAX pool is timed
+    cold (includes trace+compile of the scan) and again after ``reset()``
+    — the same compiled scan, fresh state — so the steady-state number is
+    genuinely warm instead of silently re-tracing per run."""
+    out = _backend_agreement(n_workers, duration_s, 32, seed)
+    power = power_matrix(TRACES, min(32, n_workers), duration_s, DT, seed)
+
+    wl = har_workload()
+    n_steps = int(duration_s / DT)
+
+    def _pool(backend):
+        from repro.core.policies import Greedy
+        from repro.fleet.worker import FleetWorkerPool
+        return FleetWorkerPool(
+            power, DT, workloads=[wl.costs], mode="local",
+            n_workers=n_workers, policy=Greedy(),
+            accuracy_table=wl.accuracy, sampling_period_s=PERIOD_S,
+            trace_index=np.arange(n_workers) % power.shape[0],
+            phase=np.random.default_rng(seed).integers(
+                0, power.shape[1], n_workers),
+            backend=backend)
+
+    pool_np = _pool("numpy")
+    t0 = time.perf_counter()
+    st_np = pool_np.run(n_steps)
+    np_s = time.perf_counter() - t0
+
+    pool_jax = _pool("jax")
+    t0 = time.perf_counter()
+    pool_jax.run(n_steps)
+    jax_cold_s = time.perf_counter() - t0
+    pool_jax.reset()
+    t0 = time.perf_counter()
+    st_jax = pool_jax.run(n_steps)
+    jax_s = time.perf_counter() - t0
+    assert st_np.emitted == st_jax.emitted  # the timed pools agree too
+
+    out["wall_s"] = {"numpy": np_s, "jax_warm": jax_s,
+                     "jax_including_compile": jax_cold_s}
+    out["speedup_jax_over_numpy_warm"] = np_s / max(jax_s, 1e-9)
+    return out
+
+
+def jax_scaling_curve(sizes=(1024, 8192, 32768, 131072),
+                      duration_s: float = 20.0, seed: int = 2,
+                      hetero: bool = True) -> dict:
+    """Worker-count scaling of the scan backend (local HAR fleet,
+    heterogeneous capacitors): one pool per size, timed cold (includes
+    the one-off scan compile) and warm (``reset()`` + re-run of the same
+    compiled launch — the steady-state ceiling)."""
+    from repro.core.policies import Greedy
+    from repro.fleet.worker import FleetWorkerPool
+
+    wl = har_workload()
+    n_steps = int(duration_s / DT)
+    out = {}
+    for n in sizes:
+        power = power_matrix(TRACES, min(64, n), duration_s, DT, seed + 1)
+        cf = vm = None
+        if hetero:
+            cf, vm = hetero_capacitors(n, seed)
+        rng = np.random.default_rng(seed)
+        pool = FleetWorkerPool(
+            power, DT, workloads=[wl.costs], mode="local", n_workers=n,
+            policy=Greedy(), accuracy_table=wl.accuracy,
+            sampling_period_s=PERIOD_S,
+            trace_index=np.arange(n) % power.shape[0],
+            phase=rng.integers(0, power.shape[1], n),
+            backend="jax", capacitance_f=cf, v_max=vm)
+        t0 = time.perf_counter()
+        pool.run(n_steps)
+        cold = time.perf_counter() - t0
+        pool.reset()
+        t0 = time.perf_counter()
+        res = pool.run(n_steps)
+        warm = time.perf_counter() - t0
+        out[str(n)] = {
+            "completed": res.emitted,
+            "wall_s_cold": cold,
+            "wall_s_warm": warm,
+            "worker_ticks_per_s": n * n_steps / max(warm, 1e-9),
+        }
+    return out
+
+
+def run_backend_suite(max_workers: int = 131072) -> dict:
+    sizes = tuple(n for n in (1024, 8192, 32768, 131072)
+                  if n <= max_workers)
+    t0 = time.perf_counter()
+    comp = backend_comparison()
+    curve = jax_scaling_curve(sizes=sizes)
+    total = time.perf_counter() - t0
+    res = {"comparison": comp, "jax_scaling": curve}
+    us = total * 1e6 / (1 + len(curve))
+    emit("fleet.backend_counts_agree", us, str(comp["counts_agree"]))
+    emit("fleet.backend_jax_speedup_1024", us,
+         f"{comp['speedup_jax_over_numpy_warm']:.2f}x")
+    top = str(max(int(k) for k in curve))
+    emit(f"fleet.jax_worker_ticks_per_s_at_{top}", us,
+         f"{curve[top]['worker_ticks_per_s']:.2e}")
+    out = Path("experiments")
+    out.mkdir(exist_ok=True)
+    (out / "fleet_backend_scaling.json").write_text(
+        json.dumps(res, indent=1, default=str))
+    return res
+
+
+def run_smoke(n_workers: int = 256, duration_s: float = 30.0) -> dict:
+    """CI gate: short shared trace, both backends, counts must match
+    exactly (exercises the scan path on interpret-mode-only hosts)."""
+    res = _backend_agreement(n_workers, duration_s, 16)
+    if not res["counts_agree"]:
+        print(json.dumps(res, indent=1), file=sys.stderr)
+        raise SystemExit("fleet backend smoke FAILED: counts disagree")
+    return res
+
+
+def run_scheduler_suite() -> dict:
     t0 = time.perf_counter()
     comp = run_comparison()
     t_comp = time.perf_counter() - t0
@@ -101,6 +273,23 @@ def main() -> dict:
     (out / "fleet_throughput.json").write_text(
         json.dumps(res, indent=1, default=str))
     return res
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="numpy: scheduler-vs-independent claims; "
+                         "jax: backend agreement + >=100k scaling")
+    ap.add_argument("--max-workers", type=int, default=131072,
+                    help="cap for the jax scaling curve")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI agreement gate (256 workers, 30 s)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return run_smoke()
+    if args.backend == "jax":
+        return run_backend_suite(args.max_workers)
+    return run_scheduler_suite()
 
 
 if __name__ == "__main__":

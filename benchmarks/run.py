@@ -25,7 +25,9 @@ def main() -> None:
     results["fig6"] = fig6_latency.main()
     results["fig13"] = fig13_corner_equivalence.main()
     results["fig14_15"] = fig14_corner_throughput.main()
-    results["fleet"] = fleet_throughput.main()
+    # explicit empty argv: fleet_throughput.main parses arguments, and the
+    # driver's own sys.argv must not leak into it
+    results["fleet"] = fleet_throughput.main([])
     bench_kernels.main()
     results["scaled"] = scaled_training.main()
     results["serve_quality"] = serve_quality.main()

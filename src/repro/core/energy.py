@@ -54,6 +54,25 @@ def _ou_process(rng: np.random.Generator, n: int, mean: float, theta: float,
     return x
 
 
+def _ou_process_batch(rng: np.random.Generator, rows: int, n: int,
+                      mean: float, theta: float, sigma: float) -> np.ndarray:
+    """Array-native OU paths, shape (rows, n): the recurrence
+    ``x[i] = (1-theta) x[i-1] + theta mean + sigma eps[i]`` solved as one
+    linear filter over the whole (rows, n) noise block instead of ``rows``
+    Python time loops. Same process family as :func:`_ou_process` (the
+    draws differ — one shared rng feeds all rows), deterministic per seed.
+    """
+    from scipy.signal import lfilter
+
+    eps = sigma * rng.standard_normal((rows, n))
+    eps[:, 0] = 0.0  # x[0] == mean exactly, like the scalar path
+    drive = theta * mean + eps
+    a = 1.0 - theta
+    y, _ = lfilter([1.0], [1.0, -a], drive, axis=-1,
+                   zi=np.full((rows, 1), mean * a))
+    return y
+
+
 def rf_trace(seed: int = 0, duration_s: float = 600.0, dt: float = 0.01,
              mean_uw: float = 220.0) -> EnergyTrace:
     """RF harvesting (Mementos/WISP-like): bursty, least total energy.
@@ -78,21 +97,38 @@ def rf_trace(seed: int = 0, duration_s: float = 600.0, dt: float = 0.01,
     return EnergyTrace("RF", p, dt)
 
 
-def _solar_trace(name: str, seed: int, duration_s: float, dt: float,
-                 mean_uw: float, variability: float,
-                 mobility_hz: float) -> EnergyTrace:
+# name -> (mean_uw, variability, mobility_hz): the single source for both
+# the per-trace factories below and the batched solar_matrix builder, so
+# retuning a family cannot desynchronize scalar and fleet simulations
+_SOLAR_FAMILIES: dict[str, tuple[float, float, float]] = {
+    "SOM": (900.0, 1.0, 0.05),
+    "SIM": (450.0, 2.0, 0.2),
+    "SOR": (650.0, 0.3, 0.0),
+    "SIR": (220.0, 0.4, 0.0),
+}
+
+
+def _occlusion_profile(rng: np.random.Generator, n: int, dt: float,
+                       mobility_hz: float) -> np.ndarray:
+    """Mobile settings: occlusion events as the user moves."""
+    occl = np.ones(n)
+    t = 0
+    while t < n:
+        nxt = t + int(rng.exponential(1.0 / mobility_hz) / dt) + 1
+        dur = int(rng.uniform(0.2, 3.0) / dt)
+        occl[nxt:nxt + dur] = rng.uniform(0.05, 0.5)
+        t = nxt + dur
+    return occl
+
+
+def _solar_trace(name: str, seed: int, duration_s: float,
+                 dt: float) -> EnergyTrace:
+    mean_uw, variability, mobility_hz = _SOLAR_FAMILIES[name]
     rng = np.random.default_rng(seed)
     n = int(duration_s / dt)
     base = _ou_process(rng, n, 1.0, theta=0.002, sigma=0.002 * variability)
-    if mobility_hz > 0:  # mobile settings: occlusion events as the user moves
-        occl = np.ones(n)
-        t = 0
-        while t < n:
-            nxt = t + int(rng.exponential(1.0 / mobility_hz) / dt) + 1
-            dur = int(rng.uniform(0.2, 3.0) / dt)
-            occl[nxt:nxt + dur] = rng.uniform(0.05, 0.5)
-            t = nxt + dur
-        base = base * occl
+    if mobility_hz > 0:
+        base = base * _occlusion_profile(rng, n, dt, mobility_hz)
     p = np.clip(base, 0.0, None)
     p *= (mean_uw * 1e-6) / max(p.mean(), 1e-12)
     return EnergyTrace(name, p, dt)
@@ -100,20 +136,17 @@ def _solar_trace(name: str, seed: int, duration_s: float, dt: float,
 
 def som_trace(seed: int = 1, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
     """Solar outdoor mobile: most stable family + highest energy content."""
-    return _solar_trace("SOM", seed, duration_s, dt, mean_uw=900.0,
-                        variability=1.0, mobility_hz=0.05)
+    return _solar_trace("SOM", seed, duration_s, dt)
 
 
 def sim_trace(seed: int = 2, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
     """Solar indoor mobile: moderate energy, frequent occlusions."""
-    return _solar_trace("SIM", seed, duration_s, dt, mean_uw=450.0,
-                        variability=2.0, mobility_hz=0.2)
+    return _solar_trace("SIM", seed, duration_s, dt)
 
 
 def sor_trace(seed: int = 3, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
     """Solar outdoor static: abundant, very stable."""
-    return _solar_trace("SOR", seed, duration_s, dt, mean_uw=650.0,
-                        variability=0.3, mobility_hz=0.0)
+    return _solar_trace("SOR", seed, duration_s, dt)
 
 
 def sir_trace(seed: int = 4, duration_s: float = 600.0, dt: float = 0.01) -> EnergyTrace:
@@ -122,8 +155,7 @@ def sir_trace(seed: int = 4, duration_s: float = 600.0, dt: float = 0.01) -> Ene
     Calibrated (per the paper's Fig. 14 observation) to the same *total*
     energy as the RF trace while being far smoother in time.
     """
-    return _solar_trace("SIR", seed, duration_s, dt, mean_uw=220.0,
-                        variability=0.4, mobility_hz=0.0)
+    return _solar_trace("SIR", seed, duration_s, dt)
 
 
 def kinetic_trace(seed: int = 5, duration_s: float = 600.0, dt: float = 0.01,
@@ -174,9 +206,95 @@ def get_trace(name: str, **kw) -> EnergyTrace:
     return TRACE_FACTORIES[name](**kw)
 
 
+def solar_matrix(name: str, n_rows: int, duration_s: float = 600.0,
+                 dt: float = 0.01, seed: int = 0) -> np.ndarray:
+    """(n_rows, T) harvested-power matrix for one solar family, synthesized
+    array-native: all rows share one batched OU recurrence (scipy lfilter)
+    instead of ``n_rows`` Python time loops — the fleet-scale path for
+    building >=100k-worker trace banks. Same process family and constants
+    (``_SOLAR_FAMILIES``, ``_occlusion_profile``) as the per-trace
+    factories; the rng draw layout differs, so banks are deterministic per
+    seed but not row-equal to per-row ``get_trace`` calls."""
+    mean_uw, variability, mobility_hz = _SOLAR_FAMILIES[name]
+    rng = np.random.default_rng(seed)
+    n = int(duration_s / dt)
+    base = _ou_process_batch(rng, n_rows, n, 1.0, theta=0.002,
+                             sigma=0.002 * variability)
+    if mobility_hz > 0:  # occlusion events stay per-row (they are sparse)
+        occl = np.stack([_occlusion_profile(rng, n, dt, mobility_hz)
+                         for _ in range(n_rows)])
+        base = base * occl
+    p = np.clip(base, 0.0, None)
+    p *= (mean_uw * 1e-6) / np.maximum(p.mean(axis=1, keepdims=True), 1e-12)
+    return p
+
+
+def power_matrix(names: list[str], n_rows: int, duration_s: float = 600.0,
+                 dt: float = 0.01, seed: int = 0) -> np.ndarray:
+    """(n_rows, T) power matrix cycling row r through ``names[r % len]``,
+    with every solar family synthesized as one batched recurrence; RF/KIN
+    rows fall back to the per-row factories (burst processes do not batch).
+
+    Array-native sibling of ``repro.launch.fleet.make_power_matrix``
+    (same row-cycling contract, different draws): the launcher keeps the
+    per-row path whose banks existing scheduler results are pinned to;
+    this builder is for fleet-scale banks where synthesis time matters.
+    """
+    n = int(duration_s / dt)
+    out = np.empty((n_rows, n))
+    by_family: dict[str, list[int]] = {}
+    for r in range(n_rows):
+        by_family.setdefault(names[r % len(names)], []).append(r)
+    for fam, rows in by_family.items():
+        if fam in _SOLAR_FAMILIES:
+            out[rows] = solar_matrix(fam, len(rows), duration_s, dt,
+                                     seed=seed + sum(map(ord, fam)))
+        else:
+            for j, r in enumerate(rows):
+                out[r] = get_trace(fam, seed=seed + r, duration_s=duration_s,
+                                   dt=dt).power_w
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Capacitor energy buffer (the paper's 1470 uF + BQ25505)
 # ---------------------------------------------------------------------------
+
+
+def capacitor_harvest(v, power_w, dt, *, capacitance_f, booster_eff, v_max,
+                      xp=np):
+    """Stateless harvest update: new voltage after banking ``power_w * dt``.
+
+    Pure and array-namespace-generic (``xp`` is numpy or jax.numpy), so the
+    scalar :class:`Capacitor`, the NumPy fleet backend, and the JAX
+    ``lax.scan`` backend all run this exact float expression — agreement
+    between backends reduces to IEEE determinism of shared arithmetic.
+    Every argument may be a scalar or an (N,) array (heterogeneous fleets).
+    """
+    e = 0.5 * capacitance_f * v * v + booster_eff * power_w * dt
+    return xp.minimum(xp.sqrt(2.0 * e / capacitance_f), v_max)
+
+
+def capacitor_usable_energy(v, *, capacitance_f, v_off, xp=np):
+    """Stateless usable-energy-before-brown-out, the budget every policy
+    decision reads. Shared by both fleet backends (and the scalar
+    ``Capacitor``) so the expression exists exactly once."""
+    e = 0.5 * capacitance_f * (v * v - v_off * v_off)
+    return xp.maximum(e, 0.0)
+
+
+def capacitor_draw(v, energy_j, *, capacitance_f, v_off, xp=np):
+    """Stateless draw update: ``(new_v, ok)``. Brown-outs (``ok`` False)
+    land at ``v_off`` with the residual charge retained, exactly like
+    ``Capacitor.draw``. Scalars or (N,) arrays, numpy or jnp."""
+    e = 0.5 * capacitance_f * v * v - energy_j
+    floor = 0.5 * capacitance_f * v_off * v_off
+    # xp.less, not `~(e < floor)`: on python-float scalars `<` yields a
+    # python bool whose `~` is integer not (-2, truthy) — xp.less returns
+    # an xp bool that negates logically for scalars and arrays alike
+    ok = ~xp.less(e, floor)
+    e_safe = xp.where(ok, e, floor)
+    return xp.where(ok, xp.sqrt(2.0 * e_safe / capacitance_f), v_off), ok
 
 
 @dataclasses.dataclass
@@ -202,12 +320,12 @@ class Capacitor:
     def usable_energy_j(self) -> float:
         """Energy available before brown-out, from the current voltage.
 
-        Written as ``v*v`` (not ``v**2``) so the vectorized fleet worker
-        pool can reproduce the scalar arithmetic bit-for-bit.
+        Delegates to the stateless ``capacitor_usable_energy`` (written
+        as ``v*v``, not ``v**2``) so the vectorized fleet backends
+        reproduce the scalar arithmetic bit-for-bit.
         """
-        e = 0.5 * self.capacitance_f * (self.v * self.v
-                                        - self.v_off * self.v_off)
-        return max(e, 0.0)
+        return float(capacitor_usable_energy(
+            self.v, capacitance_f=self.capacitance_f, v_off=self.v_off))
 
     @property
     def cycle_energy_j(self) -> float:
@@ -215,8 +333,9 @@ class Capacitor:
         return 0.5 * self.capacitance_f * (self.v_on ** 2 - self.v_off ** 2)
 
     def harvest(self, power_w: float, dt: float) -> None:
-        e = self.energy_j() + self.booster_eff * power_w * dt
-        self.v = min(np.sqrt(2.0 * e / self.capacitance_f), self.v_max)
+        self.v = float(capacitor_harvest(
+            self.v, power_w, dt, capacitance_f=self.capacitance_f,
+            booster_eff=self.booster_eff, v_max=self.v_max))
 
     def draw(self, energy_j: float) -> bool:
         """Draw ``energy_j``; returns False (brown-out) if not available.
@@ -224,13 +343,11 @@ class Capacitor:
         On brown-out the supervisor cuts the load at ``v_off``; the buffer
         keeps the residual 0.5*C*v_off^2 and recharges from there.
         """
-        e = self.energy_j() - energy_j
-        floor = 0.5 * self.capacitance_f * self.v_off * self.v_off
-        if e < floor:
-            self.v = self.v_off  # load cut; residual charge retained
-            return False
-        self.v = np.sqrt(2.0 * e / self.capacitance_f)
-        return True
+        v, ok = capacitor_draw(self.v, energy_j,
+                               capacitance_f=self.capacitance_f,
+                               v_off=self.v_off)
+        self.v = float(v)
+        return bool(ok)
 
     @property
     def is_on(self) -> bool:

@@ -27,12 +27,18 @@ from repro.core.budget import CostTable
 SKIP = -1
 
 
-def _max_units_within_batch(costs: CostTable,
-                            budgets: np.ndarray) -> np.ndarray:
-    """Vectorized ``CostTable.max_units_within`` (same boundary semantics)."""
-    cum = costs.cumulative()
-    k = np.searchsorted(cum, budgets, side="right").astype(np.int64) - 1
-    return np.where(cum[0] <= budgets, k, -1)
+def _max_units_within_batch(costs: CostTable, budgets: np.ndarray, *,
+                            xp=np) -> np.ndarray:
+    """Vectorized ``CostTable.max_units_within`` (same boundary semantics).
+
+    ``xp`` selects the array namespace (numpy or jax.numpy): the cost
+    prefix is a concrete table either way, only ``budgets`` may be traced,
+    so the same closed form serves the NumPy fleet backend and the JAX
+    ``lax.scan`` backend.
+    """
+    cum = xp.asarray(costs.cumulative())
+    k = xp.searchsorted(cum, budgets, side="right").astype(xp.int64) - 1
+    return xp.where(cum[0] <= budgets, k, -1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,14 +61,22 @@ class Policy:
         raise NotImplementedError
 
     def decide_batch(self, budgets: np.ndarray, costs: CostTable,
-                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+                     accuracy: np.ndarray, *,
+                     xp=np) -> tuple[np.ndarray, np.ndarray]:
         """Vectorized ``decide`` over a budget vector.
 
         Returns ``(initial_units, refine_greedily)`` arrays; entry ``j`` is
         exactly ``self.decide(budgets[j], ...)``. The built-in policies
-        override this with closed forms (no per-budget Python loop) for the
-        fleet worker pool; custom policies inherit this loop fallback.
+        override this with closed forms (no per-budget Python loop) that
+        also accept ``xp=jax.numpy`` so the fleet's JAX backend can run
+        them inside a traced ``lax.scan`` step; custom policies inherit
+        this loop fallback (NumPy-only).
         """
+        if xp is not np:
+            raise TypeError(
+                f"{type(self).__name__}.decide_batch has no closed form; "
+                "the loop fallback cannot run under jax tracing — override "
+                "decide_batch(xp=...) to use the jax fleet backend")
         budgets = np.asarray(budgets, dtype=np.float64)
         init = np.empty(budgets.shape[0], dtype=np.int64)
         refine = np.zeros(budgets.shape[0], dtype=bool)
@@ -85,10 +99,11 @@ class Greedy(Policy):
         return Decision(k, True)
 
     def decide_batch(self, budgets: np.ndarray, costs: CostTable,
-                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        budgets = np.asarray(budgets, dtype=np.float64)
-        k = _max_units_within_batch(costs, budgets)
-        return np.where(k < 0, SKIP, k), k >= 0
+                     accuracy: np.ndarray, *,
+                     xp=np) -> tuple[np.ndarray, np.ndarray]:
+        budgets = xp.asarray(budgets, dtype=xp.float64)
+        k = _max_units_within_batch(costs, budgets, xp=xp)
+        return xp.where(k < 0, SKIP, k), k >= 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,19 +128,22 @@ class Smart(Policy):
         return Decision(p_required, True)
 
     def decide_batch(self, budgets: np.ndarray, costs: CostTable,
-                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+                     accuracy: np.ndarray, *,
+                     xp=np) -> tuple[np.ndarray, np.ndarray]:
         if accuracy.shape[0] != costs.n_units + 1:
             raise ValueError("accuracy table must have n_units+1 entries "
                              "(accuracy[k] = expected accuracy with k units)")
-        budgets = np.asarray(budgets, dtype=np.float64)
-        ok = np.nonzero(accuracy >= self.min_accuracy)[0]
+        budgets = xp.asarray(budgets, dtype=xp.float64)
+        # the accuracy table is concrete even under tracing: the floor
+        # lookup stays a static NumPy computation
+        ok = np.nonzero(np.asarray(accuracy) >= self.min_accuracy)[0]
         if ok.size == 0:
-            return (np.full(budgets.shape[0], SKIP, dtype=np.int64),
-                    np.zeros(budgets.shape[0], dtype=bool))
+            return (xp.full(budgets.shape[0], SKIP, dtype=xp.int64),
+                    xp.zeros(budgets.shape[0], dtype=bool))
         p_required = int(ok[0])
-        k = _max_units_within_batch(costs, budgets)
+        k = _max_units_within_batch(costs, budgets, xp=xp)
         good = k >= p_required
-        return np.where(good, p_required, SKIP), good
+        return xp.where(good, p_required, SKIP), good
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,11 +159,12 @@ class Fixed(Policy):
         return Decision(self.units, False)
 
     def decide_batch(self, budgets: np.ndarray, costs: CostTable,
-                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        budgets = np.asarray(budgets, dtype=np.float64)
-        k = _max_units_within_batch(costs, budgets)
-        return (np.where(k >= self.units, self.units, SKIP),
-                np.zeros(budgets.shape[0], dtype=bool))
+                     accuracy: np.ndarray, *,
+                     xp=np) -> tuple[np.ndarray, np.ndarray]:
+        budgets = xp.asarray(budgets, dtype=xp.float64)
+        k = _max_units_within_batch(costs, budgets, xp=xp)
+        return (xp.where(k >= self.units, self.units, SKIP),
+                xp.zeros(budgets.shape[0], dtype=bool))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,7 +180,8 @@ class Continuous(Policy):
         return Decision(costs.n_units, False)
 
     def decide_batch(self, budgets: np.ndarray, costs: CostTable,
-                     accuracy: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        budgets = np.asarray(budgets, dtype=np.float64)
-        return (np.full(budgets.shape[0], costs.n_units, dtype=np.int64),
-                np.zeros(budgets.shape[0], dtype=bool))
+                     accuracy: np.ndarray, *,
+                     xp=np) -> tuple[np.ndarray, np.ndarray]:
+        budgets = xp.asarray(budgets, dtype=xp.float64)
+        return (xp.full(budgets.shape[0], costs.n_units, dtype=xp.int64),
+                xp.zeros(budgets.shape[0], dtype=bool))

@@ -2,20 +2,24 @@
 
 Lifts the single-device power-cycle executor (``repro.core.intermittent``)
 into a fleet: many simulated harvest-powered workers advancing in lockstep
-over batched energy traces (``worker``), one global request stream, and a
-central energy-aware scheduler (``scheduler``) that admits, routes,
-batches and sheds work across the three paper scenarios (``workloads``).
-``metrics`` does the fleet-level accounting; ``repro.launch.fleet`` is the
-CLI.
+over batched energy traces (``worker``, a pluggable-backend frontend over
+the struct-of-arrays ``state`` — NumPy reference in ``backend_numpy``,
+whole-trace ``jax.lax.scan`` in ``backend_jax``), one global request
+stream, and a central energy-aware scheduler (``scheduler``) that admits,
+routes, batches and sheds work across the three paper scenarios
+(``workloads``). ``metrics`` does the fleet-level accounting;
+``repro.launch.fleet`` is the CLI.
 """
 from repro.fleet.metrics import FleetMetrics, RequestRecord
 from repro.fleet.scheduler import FleetScheduler, Request
+from repro.fleet.state import FleetParams, FleetState
 from repro.fleet.worker import FleetWorkerPool, stack_traces
 from repro.fleet.workloads import (FleetWorkload, har_workload,
                                    harris_workload, lm_workload)
 
 __all__ = [
     "FleetMetrics", "RequestRecord", "FleetScheduler", "Request",
+    "FleetParams", "FleetState",
     "FleetWorkerPool", "stack_traces", "FleetWorkload", "har_workload",
     "harris_workload", "lm_workload",
 ]

@@ -1,0 +1,359 @@
+"""JAX fleet backend: the whole trace as one ``lax.scan`` device launch.
+
+The per-tick transition of ``repro.fleet.backend_numpy`` re-expressed as a
+pure function over the struct-of-arrays ``FleetState`` — harvest, wake,
+acquire, progress, emit are the *same float64 expressions* (shared via the
+stateless capacitor helpers in ``core.energy`` and the ``xp=jnp`` policy
+closed forms), evaluated as a batched whole-array step: each masked
+``jnp.where`` lane is exactly what a ``jax.vmap`` of the scalar device
+step would compute, with the data-dependent unit loop as a fleet-wide
+``lax.while_loop`` that retires lanes as their dt budget drains. A run of
+``n_ticks`` is a single ``lax.scan`` over that step — 100k+ workers fit
+one accelerator launch instead of 100k Python-object updates per tick.
+
+Numerical contract: under ``jax.experimental.enable_x64`` every operation
+runs in IEEE double like the NumPy reference. XLA:CPU contracts
+multiply-add chains into FMAs (not disableable via flags as of jax
+0.4.37), so capacitor *voltages* can drift from NumPy by ~1 ulp; every
+discrete outcome — emitted / skipped / acquired / power-cycle counts,
+drawn energies, emission times — agrees exactly on shared traces because
+threshold comparisons sit ulps away from the knife edge with probability
+~1e-13 per event (tests/test_fleet_backends.py pins count equality).
+
+Events (dispatch mode) are materialized as fixed-capacity (N,) arrays —
+code / time / ticket / units per worker — instead of Python tuple lists.
+Capacity one-per-worker-per-macro-step is an invariant, not a truncation:
+tickets are only granted by the scheduler *between* macro-steps, and a
+worker's assignment can terminate (emit or loss) at most once per ticket.
+
+Optionally the harvest stage runs through the Pallas capacitor-bank
+kernel (``repro.kernels.fleet_step``) — the TPU fast path; interpret mode
+keeps it testable on CPU-only environments.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.core.energy import (capacitor_draw, capacitor_harvest,
+                               capacitor_usable_energy)
+from repro.fleet.state import (STATE_FIELDS, FleetParams, FleetState,
+                               state_as_tuple, state_from_tuple)
+
+_S = collections.namedtuple("_S", STATE_FIELDS)
+
+# event codes in the fixed-capacity array log
+EV_NONE, EV_EMIT, EV_LOST = 0, 1, 2
+
+
+class JaxFleetBackend:
+    """Compiled scan runner for one ``FleetParams`` configuration."""
+
+    def __init__(self, params: FleetParams, *, use_pallas: bool = False):
+        self.p = params
+        self.use_pallas = use_pallas
+        self.interpret = jax.default_backend() != "tpu"
+        if params.mode == "local":
+            # surface non-traceable policies at build time, not mid-scan:
+            # the base-class decide_batch is the NumPy-only loop fallback,
+            # and an override without an `xp` parameter is a pre-xp custom
+            # policy that would die with an opaque error inside tracing
+            import inspect
+
+            from repro.core.policies import Policy
+            impl = type(params.policy).decide_batch
+            if (impl is Policy.decide_batch
+                    or "xp" not in inspect.signature(impl).parameters):
+                raise TypeError(
+                    f"policy {type(params.policy).__name__}'s decide_batch "
+                    "cannot run under jax tracing; the jax backend needs "
+                    "an xp-aware closed form (see core.policies)")
+        with enable_x64():
+            self.power = jnp.asarray(params.power)
+            self.trace_index = jnp.asarray(params.trace_index)
+            self.phase = (None if params.phase is None
+                          else jnp.asarray(params.phase))
+            self.C = jnp.asarray(params.C)
+            self.v_max = jnp.asarray(params.v_max)
+            self.UC = jnp.asarray(params.UC)
+            self.FIX = jnp.asarray(params.FIX)
+            self.EMITC = jnp.asarray(params.EMITC)
+            self.NU = jnp.asarray(params.NU)
+            self.ACC = (None if params.acc is None
+                        else jnp.asarray(np.asarray(params.acc,
+                                                    dtype=np.float64)))
+        self._compiled: dict[int, callable] = {}
+
+    # -- public API ----------------------------------------------------------
+
+    def run(self, state: FleetState, i0: int,
+            n_ticks: int) -> tuple[FleetState, list[tuple]]:
+        """Advance ``n_ticks`` from trace index ``i0``; returns the updated
+        host-side state and decoded dispatch events (empty in local mode).
+        """
+        p = self.p
+        with enable_x64():
+            st = tuple(jnp.asarray(x) for x in state_as_tuple(state))
+            n = p.n
+            ev0 = (jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.float64),
+                   jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.int64))
+            fn = self._compiled.get(n_ticks)
+            if fn is None:
+                fn = self._build(n_ticks)
+                self._compiled[n_ticks] = fn
+            st_out, ev_out = fn(st, ev0, jnp.asarray(i0, jnp.int64))
+            # np.array (copy): the host state must stay writable for the
+            # scheduler's assign/evict mutations between macro-steps
+            st_out = tuple(np.array(x) for x in st_out)
+            ev_out = tuple(np.asarray(x) for x in ev_out)
+        new_state = state_from_tuple(st_out)
+        events = (self._decode_events(new_state, ev_out)
+                  if p.mode == "dispatch" else [])
+        return new_state, events
+
+    # -- event decoding ------------------------------------------------------
+
+    def _decode_events(self, s: FleetState, ev: tuple) -> list[tuple]:
+        from repro.fleet.backend_numpy import EMIT, LOST
+        code, ev_t, ev_ticket, ev_units = ev
+        hit = np.nonzero(code != EV_NONE)[0]
+        out: list[tuple] = []
+        for w in hit[np.lexsort((hit, ev_t[hit]))]:  # temporal order
+            w = int(w)
+            if code[w] == EV_EMIT:
+                out.append((EMIT, float(ev_t[w]), w, int(ev_ticket[w]),
+                            int(ev_units[w]), int(s.w_tile[w]),
+                            int(s.w_batch[w])))
+            else:
+                out.append((LOST, float(ev_t[w]), w, int(ev_ticket[w])))
+        return out
+
+    # -- compiled scan -------------------------------------------------------
+
+    def _build(self, n_ticks: int):
+        tick = self._tick
+
+        def scan_fn(st, ev, i0):
+            def body(carry, j):
+                return tick(carry[0], carry[1], i0 + j), None
+
+            (st, ev), _ = lax.scan(body, (st, ev),
+                                   jnp.arange(n_ticks, dtype=jnp.int64))
+            return st, ev
+
+        return jax.jit(scan_fn)
+
+    def _usable(self, v):
+        return capacitor_usable_energy(v, capacitance_f=self.C,
+                                       v_off=self.p.v_off, xp=jnp)
+
+    def _draw(self, v, amount):
+        return capacitor_draw(v, amount, capacitance_f=self.C,
+                              v_off=self.p.v_off, xp=jnp)
+
+    def _harvest(self, v, pw):
+        p = self.p
+        if self.use_pallas:
+            from repro.kernels.fleet_step import harvest_step
+            return harvest_step(v, pw, self.C, self.v_max, eff=p.eff,
+                                dt=p.dt, interpret=self.interpret)
+        return capacitor_harvest(v, pw, p.dt, capacitance_f=self.C,
+                                 booster_eff=p.eff, v_max=self.v_max,
+                                 xp=jnp)
+
+    def _rec(self, ev, mask, code, t, ticket, units):
+        """Record events for ``mask`` lanes into the fixed-capacity log
+        (first event per worker per macro-step wins; see module docstring
+        for why a second cannot occur)."""
+        evc, evt, evtk, evu = ev
+        new = mask & (evc == EV_NONE)
+        return (jnp.where(new, code, evc), jnp.where(new, t, evt),
+                jnp.where(new, ticket, evtk), jnp.where(new, units, evu))
+
+    def _tick(self, st, ev, i):
+        p = self.p
+        s = _S(*st)
+        dt = p.dt
+        t = i * dt
+
+        # 1. harvest (mirrors Capacitor.harvest)
+        col = (i % p.T) if self.phase is None else (i + self.phase) % p.T
+        pw = self.power[self.trace_index, col]
+        e_harvest = s.e_harvest + p.eff * pw * dt
+        v = self._harvest(s.v, pw)
+
+        # 2. turn on at v_on
+        waking = ~s.on & (v >= p.v_on)
+        on = s.on | waking
+        cycles = s.cycles + waking
+        working = on & s.has_work
+        idle = on & ~s.has_work
+        s = s._replace(v=v, on=on, cycles=cycles, e_harvest=e_harvest)
+
+        # 3. acquisition
+        if p.mode == "local":
+            s = self._acquire_local(s, idle, t)
+        else:
+            s, ev = self._acquire_dispatch(s, idle, t, ev)
+
+        # 4. progress in-flight work by one dt of active execution
+        s, ev, emit_now = self._progress(s, working, t, ev)
+
+        # 5. emission (BLE packet / host transfer)
+        finish = (working & s.has_work & s.on
+                  & ((s.w_units_done >= s.w_target) | emit_now))
+        s, ev = self._emit(s, finish, t, ev)
+        return tuple(s), ev
+
+    def _acquire_local(self, s, idle, t):
+        p = self.p
+        due = idle & (t >= s.next_sample_t)
+        delta = t - s.next_sample_t
+        k = jnp.floor_divide(delta, p.P)
+        sample_counter = s.sample_counter + jnp.where(
+            due, k.astype(jnp.int64) + 1, 0)
+        next_sample_t = s.next_sample_t + jnp.where(
+            due, p.P * (k + 1.0), 0.0)
+        # decide BEFORE spending anything (SMART skips the whole round)
+        us = self._usable(s.v)
+        from repro.core.policies import SKIP
+        init, refine = p.policy.decide_batch(us, p.tables[0], p.acc,
+                                             xp=jnp)
+        skip = due & (init == SKIP)
+        skipped = s.skipped + skip
+        go = due & ~(init == SKIP)
+        fixed = p.FIX[0]
+        v2, ok = self._draw(s.v, jnp.minimum(fixed, us))
+        v = jnp.where(go, v2, s.v)
+        on = s.on & ~(go & ~ok)
+        succ = go & ok
+        return s._replace(
+            v=v, on=on, skipped=skipped, sample_counter=sample_counter,
+            next_sample_t=next_sample_t,
+            e_work=s.e_work + jnp.where(succ, fixed, 0.0),
+            acquired=s.acquired + succ,
+            has_work=s.has_work | succ,
+            w_ticket=jnp.where(succ, sample_counter - 1, s.w_ticket),
+            w_t_acq=jnp.where(succ, t, s.w_t_acq),
+            w_cycle_acq=jnp.where(succ, s.cycles, s.w_cycle_acq),
+            w_units_done=jnp.where(succ, 0, s.w_units_done),
+            w_left=jnp.where(succ, 0.0, s.w_left),
+            w_target=jnp.where(succ, jnp.where(refine, p.NU[0], init),
+                               s.w_target),
+            w_tile=jnp.where(succ, 0, s.w_tile),
+            w_wl=jnp.where(succ, 0, s.w_wl),
+            w_batch=jnp.where(succ, 1, s.w_batch))
+
+    def _acquire_dispatch(self, s, idle, t, ev):
+        p = self.p
+        due = idle & s.p_pending
+        us = self._usable(s.v)
+        fixed = self.FIX[s.p_wl]
+        v2, ok = self._draw(s.v, jnp.minimum(fixed, us))
+        v = jnp.where(due, v2, s.v)
+        p_pending = s.p_pending & ~due
+        fail = due & ~ok
+        on = s.on & ~fail
+        ev = self._rec(ev, fail, EV_LOST, t, s.p_ticket, 0)
+        succ = due & ok
+        s = s._replace(
+            v=v, on=on, p_pending=p_pending,
+            e_work=s.e_work + jnp.where(succ, fixed, 0.0),
+            acquired=s.acquired + succ,
+            has_work=s.has_work | succ,
+            w_ticket=jnp.where(succ, s.p_ticket, s.w_ticket),
+            w_t_acq=jnp.where(succ, t, s.w_t_acq),
+            w_cycle_acq=jnp.where(succ, s.cycles, s.w_cycle_acq),
+            w_units_done=jnp.where(succ, 0, s.w_units_done),
+            w_left=jnp.where(succ, 0.0, s.w_left),
+            w_tile=jnp.where(succ, s.p_units, s.w_tile),
+            w_batch=jnp.where(succ, s.p_batch, s.w_batch),
+            w_target=jnp.where(succ, s.p_units * s.p_batch, s.w_target),
+            w_wl=jnp.where(succ, s.p_wl, s.w_wl))
+        return s, ev
+
+    def _progress(self, s, working, t, ev):
+        p = self.p
+        dispatch = p.mode == "dispatch"
+        u_max = p.UC.shape[1]
+        e_step = jnp.where(working, p.active_power_w * p.dt, 0.0)
+        run = working & (s.w_units_done < s.w_target)
+        emit_now = jnp.zeros(p.n, dtype=bool)
+        carry = (s.v, s.on, s.has_work, s.e_work, s.w_left, s.w_units_done,
+                 e_step, run, emit_now, ev)
+
+        def cond(c):
+            return jnp.any(c[7])
+
+        def body(c):
+            (v, on, has_work, e_work, w_left, w_units_done, e_step, run,
+             emit_now, ev) = c
+            # unit boundary: start the next unit only if unit + emit-
+            # reserve are affordable now (the paper's BLE-packet reserve)
+            starting = run & (w_left <= 0)
+            gidx = jnp.where(s.w_tile > 0,
+                             w_units_done % jnp.maximum(s.w_tile, 1),
+                             w_units_done)
+            nc = self.UC[s.w_wl, jnp.clip(gidx, 0, u_max - 1)]
+            us = self._usable(v)
+            cant = starting & (us < nc + self.EMITC[s.w_wl])
+            emit_now = emit_now | cant
+            run = run & ~cant
+            w_left = jnp.where(starting & ~cant, nc, w_left)
+            take = jnp.minimum(e_step, w_left)
+            v2, ok = self._draw(v, take)
+            v = jnp.where(run, v2, v)
+            fail = run & ~ok
+            # power failure mid-work: volatile by design; work lost
+            on = on & ~fail
+            has_work = has_work & ~fail
+            if dispatch:
+                ev = self._rec(ev, fail, EV_LOST, t, s.w_ticket, 0)
+            run = run & ok
+            e_work = e_work + jnp.where(run, take, 0.0)
+            w_left = jnp.where(run, w_left - take, w_left)
+            e_step = jnp.where(run, e_step - take, e_step)
+            fin = run & (w_left <= 1e-18)
+            w_units_done = w_units_done + fin
+            w_left = jnp.where(fin, 0.0, w_left)
+            run = run & (e_step > 0) & (w_units_done < s.w_target)
+            return (v, on, has_work, e_work, w_left, w_units_done, e_step,
+                    run, emit_now, ev)
+
+        (v, on, has_work, e_work, w_left, w_units_done, _, _, emit_now,
+         ev) = lax.while_loop(cond, body, carry)
+        s = s._replace(v=v, on=on, has_work=has_work, e_work=e_work,
+                       w_left=w_left, w_units_done=w_units_done)
+        return s, ev, emit_now
+
+    def _emit(self, s, finish, t, ev):
+        p = self.p
+        ec = self.EMITC[s.w_wl]
+        v2, ok = self._draw(s.v, ec)
+        v = jnp.where(finish, v2, s.v)
+        efail = finish & ~ok
+        esucc = finish & ok
+        on = s.on & ~efail
+        has_work = s.has_work & ~finish  # volatile: failed emission loses it
+        if p.mode == "dispatch":
+            ev = self._rec(ev, efail, EV_LOST, t, s.w_ticket, 0)
+            ev = self._rec(ev, esucc, EV_EMIT, t, s.w_ticket,
+                           s.w_units_done)
+        emit_acc_sum = s.emit_acc_sum
+        if p.mode == "local":
+            emit_acc_sum = emit_acc_sum + jnp.where(
+                esucc,
+                self.ACC[jnp.clip(s.w_units_done, 0, int(p.NU[0]))], 0.0)
+        return s._replace(
+            v=v, on=on, has_work=has_work,
+            e_work=s.e_work + jnp.where(esucc, ec, 0.0),
+            emit_count=s.emit_count + esucc,
+            emit_units_sum=s.emit_units_sum + jnp.where(
+                esucc, s.w_units_done, 0),
+            emit_acc_sum=emit_acc_sum), ev

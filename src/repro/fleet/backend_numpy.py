@@ -1,0 +1,244 @@
+"""NumPy reference backend: the per-tick fleet transition, in place.
+
+This is the original ``FleetWorkerPool.step`` lifted out of the class into
+pure struct-of-arrays functions over ``(FleetParams, FleetState)`` — the
+arithmetic mirrors the scalar ``core.intermittent`` executor expression-
+for-expression (pinned at N=1 by tests/test_fleet.py), and is in turn the
+reference the JAX scan backend is pinned against. Python-side outputs
+(``results`` per-worker EmittedResult lists in local mode, ``events``
+tuples in dispatch mode) are appended to caller-owned lists; the JAX
+backend replaces them with fixed-capacity arrays.
+
+Event tuples pushed to ``events`` in dispatch mode:
+  ("emit", t, worker, ticket, units_done, req_units, batch)
+  ("lost", t, worker, ticket)   -- brown-out or failed emission
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.energy import (capacitor_draw, capacitor_harvest,
+                               capacitor_usable_energy)
+from repro.core.intermittent import EmittedResult
+from repro.core.policies import SKIP
+from repro.fleet.state import FleetParams, FleetState
+
+EMIT = "emit"
+LOST = "lost"
+
+
+def usable_energy(p: FleetParams, s: FleetState) -> np.ndarray:
+    return capacitor_usable_energy(s.v, capacitance_f=p.C, v_off=p.v_off)
+
+
+def _draw_at(p: FleetParams, s: FleetState, idx: np.ndarray,
+             amount: np.ndarray) -> np.ndarray:
+    """Draw ``amount`` at workers ``idx``; brown-outs get v_off and False,
+    exactly like ``Capacitor.draw``."""
+    new_v, ok = capacitor_draw(s.v[idx], amount, capacitance_f=p.C[idx],
+                               v_off=p.v_off)
+    s.v[idx] = new_v
+    return ok
+
+
+def tick(p: FleetParams, s: FleetState, i: int,
+         results: list[list[EmittedResult]] | None,
+         events: list[tuple] | None) -> None:
+    """Advance all N workers by one dt (trace index ``i``)."""
+    t = i * p.dt
+    dt = p.dt
+
+    # 1. harvest (mirrors Capacitor.harvest)
+    if p.phase is None:
+        pw = p.power[p.trace_index, i % p.T]
+    else:
+        pw = p.power[p.trace_index, (i + p.phase) % p.T]
+    s.e_harvest += p.eff * pw * dt
+    s.v = capacitor_harvest(s.v, pw, dt, capacitance_f=p.C,
+                            booster_eff=p.eff, v_max=p.v_max)
+
+    # 2. turn on at v_on
+    waking = ~s.on & (s.v >= p.v_on)
+    s.on |= waking
+    s.cycles += waking
+    active = s.on.copy()
+
+    # workers holding work from a previous tick progress it; workers
+    # acquiring this tick spend the whole dt on acquisition (scalar
+    # semantics: the acquisition branch ends the step)
+    working = active & s.has_work
+    idle = active & ~s.has_work
+
+    # 3. acquisition
+    if p.mode == "local":
+        _acquire_local(p, s, idle, t)
+    else:
+        _acquire_dispatch(p, s, idle, t, events)
+
+    # 4. progress in-flight work by one dt of active execution
+    emit_now = np.zeros(p.n, dtype=bool)
+    if working.any():
+        emit_now = _progress(p, s, working, t, events)
+
+    # 5. emission (BLE packet / host transfer)
+    finish = (working & s.has_work & s.on
+              & ((s.w_units_done >= s.w_target) | emit_now))
+    if finish.any():
+        _emit(p, s, np.nonzero(finish)[0], t, results, events)
+
+
+def _acquire_local(p: FleetParams, s: FleetState, idle: np.ndarray,
+                   t: float) -> None:
+    due = idle & (t >= s.next_sample_t)
+    if not due.any():
+        return
+    d_idx = np.nonzero(due)[0]
+    delta = t - s.next_sample_t[d_idx]
+    k = delta // p.P
+    s.sample_counter[d_idx] += k.astype(np.int64) + 1
+    s.next_sample_t[d_idx] += p.P * (k + 1.0)
+    # decide BEFORE spending anything (SMART skips the whole round)
+    us = usable_energy(p, s)[d_idx]
+    init, refine = p.policy.decide_batch(us, p.tables[0], p.acc)
+    skip = init == SKIP
+    s.skipped[d_idx[skip]] += 1
+    go = d_idx[~skip]
+    if go.size == 0:
+        return
+    fixed = p.FIX[0]
+    ok = _draw_at(p, s, go, np.minimum(fixed, us[~skip]))
+    s.on[go[~ok]] = False
+    succ = go[ok]
+    s.e_work[succ] += fixed
+    s.acquired[succ] += 1
+    s.has_work[succ] = True
+    s.w_ticket[succ] = s.sample_counter[succ] - 1
+    s.w_t_acq[succ] = t
+    s.w_cycle_acq[succ] = s.cycles[succ]
+    s.w_units_done[succ] = 0
+    s.w_left[succ] = 0.0
+    s.w_target[succ] = np.where(refine, p.NU[0], init)[~skip][ok]
+    s.w_tile[succ] = 0
+    s.w_wl[succ] = 0
+    s.w_batch[succ] = 1
+
+
+def _acquire_dispatch(p: FleetParams, s: FleetState, idle: np.ndarray,
+                      t: float, events: list[tuple]) -> None:
+    due = idle & s.p_pending
+    if not due.any():
+        return
+    d_idx = np.nonzero(due)[0]
+    wl = s.p_wl[d_idx]
+    us = usable_energy(p, s)[d_idx]
+    fixed = p.FIX[wl]
+    ok = _draw_at(p, s, d_idx, np.minimum(fixed, us))
+    s.p_pending[d_idx] = False
+    fail = d_idx[~ok]
+    s.on[fail] = False
+    for w in fail:
+        events.append((LOST, t, int(w), int(s.p_ticket[w])))
+    succ = d_idx[ok]
+    if succ.size == 0:
+        return
+    s.e_work[succ] += fixed[ok]
+    s.acquired[succ] += 1
+    s.has_work[succ] = True
+    s.w_ticket[succ] = s.p_ticket[succ]
+    s.w_t_acq[succ] = t
+    s.w_cycle_acq[succ] = s.cycles[succ]
+    s.w_units_done[succ] = 0
+    s.w_left[succ] = 0.0
+    s.w_tile[succ] = s.p_units[succ]
+    s.w_batch[succ] = s.p_batch[succ]
+    s.w_target[succ] = s.p_units[succ] * s.p_batch[succ]
+    s.w_wl[succ] = s.p_wl[succ]
+
+
+def _progress(p: FleetParams, s: FleetState, working: np.ndarray, t: float,
+              events: list[tuple] | None) -> np.ndarray:
+    """One dt of active execution for every working device; returns the
+    emit_now mask (budget died at a unit boundary -> emit what we have)."""
+    emit_now = np.zeros(p.n, dtype=bool)
+    e_step = np.zeros(p.n)
+    e_step[working] = p.active_power_w * p.dt
+    # scalar loop guard: `while e_step > 0 and units_done < target` —
+    # a target-0 work item skips straight to emission
+    run = working & (s.w_units_done < s.w_target)
+    while True:
+        r_idx = np.nonzero(run)[0]
+        if r_idx.size == 0:
+            break
+        # unit boundary: start the next unit only if unit + emit-reserve
+        # are affordable now (the paper's BLE-packet reserve)
+        starting = s.w_left[r_idx] <= 0
+        if starting.any():
+            s_idx = r_idx[starting]
+            ud = s.w_units_done[s_idx]
+            tile = s.w_tile[s_idx]
+            gidx = np.where(tile > 0, ud % np.maximum(tile, 1), ud)
+            nc = p.UC[s.w_wl[s_idx], gidx]
+            us = usable_energy(p, s)[s_idx]
+            cant = us < nc + p.EMITC[s.w_wl[s_idx]]
+            emit_now[s_idx[cant]] = True
+            run[s_idx[cant]] = False
+            go = s_idx[~cant]
+            s.w_left[go] = nc[~cant]
+            r_idx = np.nonzero(run)[0]
+            if r_idx.size == 0:
+                break
+        take = np.minimum(e_step[r_idx], s.w_left[r_idx])
+        ok = _draw_at(p, s, r_idx, take)
+        fail = r_idx[~ok]
+        if fail.size:
+            # power failure mid-work: volatile by design; work lost
+            s.on[fail] = False
+            s.has_work[fail] = False
+            run[fail] = False
+            if p.mode == "dispatch":
+                for w in fail:
+                    events.append((LOST, t, int(w), int(s.w_ticket[w])))
+        succ = r_idx[ok]
+        tk = take[ok]
+        s.e_work[succ] += tk
+        s.w_left[succ] -= tk
+        e_step[succ] -= tk
+        fin = succ[s.w_left[succ] <= 1e-18]
+        s.w_units_done[fin] += 1
+        s.w_left[fin] = 0.0
+        run[succ] = ((e_step[succ] > 0)
+                     & (s.w_units_done[succ] < s.w_target[succ]))
+    return emit_now
+
+
+def _emit(p: FleetParams, s: FleetState, f_idx: np.ndarray, t: float,
+          results: list[list[EmittedResult]] | None,
+          events: list[tuple] | None) -> None:
+    ec = p.EMITC[s.w_wl[f_idx]]
+    ok = _draw_at(p, s, f_idx, ec)
+    fail = f_idx[~ok]
+    s.on[fail] = False
+    s.has_work[fail] = False  # volatile: failed emission loses it
+    if p.mode == "dispatch":
+        for w in fail:
+            events.append((LOST, t, int(w), int(s.w_ticket[w])))
+    succ = f_idx[ok]
+    s.e_work[succ] += ec[ok]
+    s.has_work[succ] = False
+    s.emit_count[succ] += 1
+    s.emit_units_sum[succ] += s.w_units_done[succ]
+    if p.mode == "local":
+        s.emit_acc_sum[succ] += p.acc[np.minimum(s.w_units_done[succ],
+                                                 p.NU[0])]
+    for w in succ:  # emissions are rare relative to ticks
+        w = int(w)
+        if p.mode == "local":
+            results[w].append(EmittedResult(
+                int(s.w_ticket[w]), int(s.w_units_done[w]),
+                float(s.w_t_acq[w]), t,
+                int(s.cycles[w] - s.w_cycle_acq[w])))
+        else:
+            events.append(
+                (EMIT, t, w, int(s.w_ticket[w]),
+                 int(s.w_units_done[w]), int(s.w_tile[w]),
+                 int(s.w_batch[w])))

@@ -261,9 +261,30 @@ class FleetScheduler:
 def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
               stream: RequestStream, n_steps: int, *,
               dispatch_every: int = 10) -> dict:
-    """Drive arrivals -> dispatch -> device physics -> collection."""
+    """Drive arrivals -> dispatch -> device physics -> collection.
+
+    With a NumPy pool the loop advances tick-by-tick (the reference
+    cadence). With a JAX pool the device physics run as fused macro-steps:
+    one ``lax.scan`` launch per scheduler interval, with arrivals logged
+    at their true per-tick times, assignments made at the macro boundary
+    (exactly where the per-tick loop makes them, since ``dispatch`` only
+    fires every ``dispatch_every`` ticks), and the scan's fixed-capacity
+    event arrays collected once per macro-step.
+    """
     dt = pool.dt
     names = [w.name for w in sched.workloads]
+    if getattr(pool, "backend", "numpy") == "jax":
+        for i0 in range(0, n_steps, dispatch_every):
+            k = min(dispatch_every, n_steps - i0)
+            sched.submit(i0 * dt, stream.arrivals(i0))
+            sched.dispatch(i0 * dt)
+            for i in range(i0 + 1, i0 + k):
+                wls = stream.arrivals(i)
+                if wls.size:
+                    sched.submit(i * dt, wls)
+            pool.step_macro(i0, k)
+            sched.collect((i0 + k - 1) * dt, evict=True)
+        return sched.metrics.summary(n_steps * dt, pool, names)
     for i in range(n_steps):
         t = i * dt
         wls = stream.arrivals(i)

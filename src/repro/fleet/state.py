@@ -1,0 +1,143 @@
+"""Struct-of-arrays fleet state: the contract between worker backends.
+
+``FleetParams`` is everything static about a fleet run (trace bank, stacked
+workload tables, capacitor bank constants, policy) and ``FleetState`` is
+everything a tick mutates — one length-N array per field. The per-tick
+transition (harvest -> brown-out/boot -> acquire -> progress -> emit) is a
+pure function of ``(params, state)``; backends only differ in *how* they
+evaluate it:
+
+- ``repro.fleet.backend_numpy`` — the in-place NumPy reference, pinned
+  bit-exact against the scalar ``core.intermittent`` executor at N=1;
+- ``repro.fleet.backend_jax`` — the same expressions as one
+  ``jax.lax.scan`` over the whole trace (float64 via ``enable_x64``), so
+  the two backends agree on emitted/skipped/power-cycle counts exactly.
+
+Capacitor constants ``C``/``v_max`` are per-worker arrays (heterogeneous
+fleets mix capacitor sizes); the turn-on/brown-out thresholds stay fleet
+scalars (one MCU supervisor class per fleet).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.budget import CostTable
+from repro.core.policies import Policy
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetParams:
+    """Static per-run configuration shared by every backend."""
+
+    dt: float
+    n: int  # workers
+    T: int  # trace length (ticks)
+    mode: str  # "local" | "dispatch"
+    power: np.ndarray  # (R, T) harvested power, W
+    trace_index: np.ndarray  # (N,) worker -> trace row
+    phase: np.ndarray | None  # (N,) tick offset into the row, or None
+    # capacitor bank (per-worker C/v_max: heterogeneous fleets)
+    C: np.ndarray  # (N,) farads
+    v_max: np.ndarray  # (N,)
+    v_on: float
+    v_off: float
+    eff: float  # booster efficiency
+    active_power_w: float  # MCU active draw
+    # stacked workload tables: (W, U_max) unit costs padded with +inf
+    UC: np.ndarray
+    FIX: np.ndarray  # (W,)
+    EMITC: np.ndarray  # (W,)
+    NU: np.ndarray  # (W,) int64
+    tables: tuple[CostTable, ...]
+    # local mode only
+    P: float  # sampling period, s
+    policy: Policy | None
+    acc: np.ndarray | None  # (n_units + 1,) accuracy table
+
+
+@dataclasses.dataclass
+class FleetState:
+    """Everything one lockstep tick reads or writes; all fields (N,)."""
+
+    # capacitor + lifecycle
+    v: np.ndarray
+    on: np.ndarray
+    cycles: np.ndarray
+    acquired: np.ndarray
+    skipped: np.ndarray
+    e_work: np.ndarray
+    e_harvest: np.ndarray
+    # local-mode sampling
+    next_sample_t: np.ndarray
+    sample_counter: np.ndarray
+    # in-flight work (volatile by design)
+    has_work: np.ndarray
+    w_ticket: np.ndarray
+    w_t_acq: np.ndarray
+    w_cycle_acq: np.ndarray
+    w_units_done: np.ndarray
+    w_left: np.ndarray
+    w_target: np.ndarray  # total units to run
+    w_tile: np.ndarray  # per-request units; 0 = absolute target
+    w_wl: np.ndarray
+    w_batch: np.ndarray
+    # dispatch-mode pending assignment (not yet acquired)
+    p_pending: np.ndarray
+    p_ticket: np.ndarray
+    p_wl: np.ndarray
+    p_units: np.ndarray
+    p_batch: np.ndarray
+    p_t_assigned: np.ndarray
+    # emission aggregates (backend-independent accounting: the JAX backend
+    # returns no per-result records, only these counters)
+    emit_count: np.ndarray
+    emit_units_sum: np.ndarray
+    emit_acc_sum: np.ndarray
+
+
+STATE_FIELDS: tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(FleetState))
+
+
+def init_state(n: int) -> FleetState:
+    z = lambda dt=np.float64: np.zeros(n, dtype=dt)  # noqa: E731
+    return FleetState(
+        v=z(), on=z(bool), cycles=z(np.int64), acquired=z(np.int64),
+        skipped=z(np.int64), e_work=z(), e_harvest=z(),
+        next_sample_t=z(), sample_counter=z(np.int64),
+        has_work=z(bool), w_ticket=z(np.int64), w_t_acq=z(),
+        w_cycle_acq=z(np.int64), w_units_done=z(np.int64), w_left=z(),
+        w_target=z(np.int64), w_tile=z(np.int64), w_wl=z(np.int64),
+        w_batch=np.ones(n, dtype=np.int64),
+        p_pending=z(bool), p_ticket=z(np.int64), p_wl=z(np.int64),
+        p_units=z(np.int64), p_batch=np.ones(n, dtype=np.int64),
+        p_t_assigned=z(),
+        emit_count=z(np.int64), emit_units_sum=z(np.int64),
+        emit_acc_sum=z())
+
+
+def state_as_tuple(s: FleetState) -> tuple:
+    return tuple(getattr(s, f) for f in STATE_FIELDS)
+
+
+def state_from_tuple(t: Sequence) -> FleetState:
+    return FleetState(**dict(zip(STATE_FIELDS, t)))
+
+
+def stack_cost_tables(workloads: Sequence[CostTable]
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """(UC, FIX, EMITC, NU): per-worker gathers make the progression loop
+    workload-heterogeneous without Python branching; unit slots beyond a
+    table's length are +inf (never affordable, never started)."""
+    u_max = max(c.n_units for c in workloads)
+    UC = np.full((len(workloads), u_max), np.inf)
+    for w, c in enumerate(workloads):
+        UC[w, :c.n_units] = c.unit_costs
+    FIX = np.array([c.fixed_cost for c in workloads])
+    EMITC = np.array([c.emit_cost for c in workloads])
+    NU = np.array([c.n_units for c in workloads], dtype=np.int64)
+    return UC, FIX, EMITC, NU

@@ -3,10 +3,20 @@
 Array-based (struct-of-arrays) reformulation of the *approximate* mode of
 ``repro.core.intermittent.IntermittentExecutor.step``: every piece of
 per-device state (capacitor voltage, on/off, in-flight work, counters)
-is a length-N NumPy array and one ``step(i)`` call advances all N workers
-by one trace tick with no per-worker Python loop. The arithmetic mirrors
-the scalar executor expression-for-expression, so a 1-worker pool
-reproduces the scalar results exactly (pinned by tests/test_fleet.py).
+is a length-N array (``repro.fleet.state.FleetState``) and one ``step(i)``
+call advances all N workers by one trace tick with no per-worker Python
+loop. The per-tick transition itself lives in pluggable backends:
+
+- ``backend="numpy"`` (default): ``repro.fleet.backend_numpy``, the
+  in-place reference that mirrors the scalar executor expression-for-
+  expression, so a 1-worker pool reproduces the scalar results exactly
+  (pinned by tests/test_fleet.py).
+- ``backend="jax"``: ``repro.fleet.backend_jax``, the same transition as
+  a single ``jax.lax.scan`` over the whole trace (float64), built for
+  >=100k-worker fleets in one accelerator launch. Counts agree exactly
+  with the NumPy reference (pinned by tests/test_fleet_backends.py);
+  per-result ``results[w]`` records are a NumPy-backend-only feature —
+  the JAX path reports the aggregate emission counters instead.
 
 Two request modes:
 
@@ -15,7 +25,13 @@ Two request modes:
   workers baseline, and the mode the scalar-agreement test uses.
 - ``dispatch``: workers are idle until a scheduler assigns them a request
   (or a batch of requests) via :meth:`assign`; emissions and losses are
-  reported as events the scheduler consumes via :meth:`pop_events`.
+  reported as events the scheduler consumes via :meth:`pop_events`
+  (the JAX backend materializes them as fixed-capacity arrays per
+  macro-step and decodes them here).
+
+Heterogeneous fleets: pass per-worker ``capacitance_f`` / ``v_max``
+arrays to mix capacitor sizes across the fleet (both backends support it;
+scalars fall back to the homogeneous ``cap`` configuration).
 
 Checkpointing modes are deliberately NOT vectorized: the fleet exists to
 demonstrate the paper's runtime at scale, and the approximate runtime is
@@ -24,6 +40,7 @@ the one with no NVM state machine (``e_nvm`` is structurally zero here).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import numpy as np
@@ -31,13 +48,15 @@ import numpy as np
 from repro.core.budget import CostTable
 from repro.core.energy import Capacitor, EnergyTrace, McuEnergyModel
 from repro.core.intermittent import EmittedResult
-from repro.core.policies import SKIP, Policy
+from repro.core.policies import Policy
+from repro.fleet import backend_numpy
+from repro.fleet.backend_numpy import EMIT, LOST  # re-export (scheduler)
+from repro.fleet.state import (STATE_FIELDS, FleetParams, FleetState,
+                               init_state, stack_cost_tables)
 
-# Event tuples pushed to ``events`` in dispatch mode:
-#   ("emit", t, worker, ticket, units_done, req_units, batch)
-#   ("lost", t, worker, ticket)   -- brown-out or failed emission
-EMIT = "emit"
-LOST = "lost"
+__all__ = ["EMIT", "LOST", "FleetWorkerPool", "PoolStats", "stack_traces"]
+
+BACKENDS = ("numpy", "jax")
 
 
 def stack_traces(traces: Sequence[EnergyTrace]) -> np.ndarray:
@@ -45,7 +64,10 @@ def stack_traces(traces: Sequence[EnergyTrace]) -> np.ndarray:
     dt = traces[0].dt
     T = traces[0].power_w.shape[0]
     for tr in traces:
-        if tr.dt != dt or tr.power_w.shape[0] != T:
+        # isclose, not ==: resampled traces carry representable-but-unequal
+        # dt (e.g. 600/60000 vs 0.01) that share the grid for all purposes
+        if not math.isclose(tr.dt, dt, rel_tol=1e-9, abs_tol=0.0) \
+                or tr.power_w.shape[0] != T:
             raise ValueError("all traces must share dt and length")
     return np.stack([tr.power_w for tr in traces]).astype(np.float64)
 
@@ -89,350 +111,183 @@ class FleetWorkerPool:
                  accuracy_table: np.ndarray | None = None,
                  sampling_period_s: float = 10.0,
                  mcu: McuEnergyModel | None = None,
-                 cap: Capacitor | None = None):
+                 cap: Capacitor | None = None,
+                 capacitance_f: np.ndarray | float | None = None,
+                 v_max: np.ndarray | float | None = None,
+                 backend: str = "numpy",
+                 use_pallas: bool = False):
         if mode not in ("local", "dispatch"):
             raise ValueError(f"unknown pool mode {mode!r}")
-        self.power = np.asarray(power_w, dtype=np.float64)
-        if self.power.ndim != 2:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"choose from {BACKENDS}")
+        power = np.asarray(power_w, dtype=np.float64)
+        if power.ndim != 2:
             raise ValueError("power_w must be (n_traces, T)")
-        self.dt = float(dt)
-        self.T = self.power.shape[1]
-        n = n_workers if n_workers is not None else self.power.shape[0]
-        self.n = int(n)
-        self.trace_index = (np.arange(self.n) % self.power.shape[0]
-                            if trace_index is None
-                            else np.asarray(trace_index, dtype=np.int64))
-        self.phase = (None if phase is None
-                      else np.asarray(phase, dtype=np.int64) % self.T)
-        self.mode = mode
-        self.policy = policy
-        self.acc = accuracy_table
-        self.P = float(sampling_period_s)
-        self.mcu = mcu or McuEnergyModel()
-        cap = cap or Capacitor()
-        self.C = cap.capacitance_f
-        self.v_on = cap.v_on
-        self.v_off = cap.v_off
-        self.v_max = cap.v_max
-        self.eff = cap.booster_eff
+        T = power.shape[1]
+        n = int(n_workers if n_workers is not None else power.shape[0])
         if mode == "local" and (policy is None or accuracy_table is None
                                 or len(workloads) != 1):
             raise ValueError("local mode needs exactly one workload table, "
                              "a policy and an accuracy table")
-
-        # stacked workload tables (W, U_max); per-worker gathers make the
-        # progression loop workload-heterogeneous without Python branching
-        self.n_wl = len(workloads)
-        u_max = max(c.n_units for c in workloads)
-        self.UC = np.full((self.n_wl, u_max), np.inf)
-        for w, c in enumerate(workloads):
-            self.UC[w, :c.n_units] = c.unit_costs
-        self.FIX = np.array([c.fixed_cost for c in workloads])
-        self.EMITC = np.array([c.emit_cost for c in workloads])
-        self.NU = np.array([c.n_units for c in workloads], dtype=np.int64)
-        self.tables = list(workloads)
-
-        N = self.n
-        # capacitor + lifecycle
-        self.v = np.zeros(N)
-        self.on = np.zeros(N, dtype=bool)
-        self.cycles = np.zeros(N, dtype=np.int64)
-        self.acquired = np.zeros(N, dtype=np.int64)
-        self.skipped = np.zeros(N, dtype=np.int64)
-        self.e_work = np.zeros(N)
-        self.e_harvest = np.zeros(N)
-        # local-mode sampling
-        self.next_sample_t = np.zeros(N)
-        self.sample_counter = np.zeros(N, dtype=np.int64)
-        # in-flight work (volatile by design)
-        self.has_work = np.zeros(N, dtype=bool)
-        self.w_ticket = np.zeros(N, dtype=np.int64)  # sample id in local mode
-        self.w_t_acq = np.zeros(N)
-        self.w_cycle_acq = np.zeros(N, dtype=np.int64)
-        self.w_units_done = np.zeros(N, dtype=np.int64)
-        self.w_left = np.zeros(N)
-        self.w_target = np.zeros(N, dtype=np.int64)  # total units to run
-        self.w_tile = np.zeros(N, dtype=np.int64)  # per-request units; 0=abs
-        self.w_wl = np.zeros(N, dtype=np.int64)
-        self.w_batch = np.ones(N, dtype=np.int64)
-        # dispatch-mode pending assignment (not yet acquired)
-        self.p_pending = np.zeros(N, dtype=bool)
-        self.p_ticket = np.zeros(N, dtype=np.int64)
-        self.p_wl = np.zeros(N, dtype=np.int64)
-        self.p_units = np.zeros(N, dtype=np.int64)
-        self.p_batch = np.ones(N, dtype=np.int64)
-        self.p_t_assigned = np.zeros(N)
-
-        self.results: list[list[EmittedResult]] = [[] for _ in range(N)]
+        cap = cap or Capacitor()
+        C = np.broadcast_to(np.asarray(
+            cap.capacitance_f if capacitance_f is None else capacitance_f,
+            dtype=np.float64), (n,)).copy()
+        vmax = np.broadcast_to(np.asarray(
+            cap.v_max if v_max is None else v_max,
+            dtype=np.float64), (n,)).copy()
+        UC, FIX, EMITC, NU = stack_cost_tables(workloads)
+        self.mcu = mcu or McuEnergyModel()
+        self.params = FleetParams(
+            dt=float(dt), n=n, T=T, mode=mode, power=power,
+            trace_index=(np.arange(n) % power.shape[0]
+                         if trace_index is None
+                         else np.asarray(trace_index, dtype=np.int64)),
+            phase=(None if phase is None
+                   else np.asarray(phase, dtype=np.int64) % T),
+            C=C, v_max=vmax, v_on=float(cap.v_on), v_off=float(cap.v_off),
+            eff=float(cap.booster_eff),
+            active_power_w=float(self.mcu.active_power_w),
+            UC=UC, FIX=FIX, EMITC=EMITC, NU=NU, tables=tuple(workloads),
+            P=float(sampling_period_s), policy=policy,
+            acc=accuracy_table)
+        self.state = init_state(n)
+        self.backend = backend
+        self.use_pallas = use_pallas
+        self._jax = None  # lazily-built JaxFleetBackend
+        self.results: list[list[EmittedResult]] = [[] for _ in range(n)]
         self.events: list[tuple] = []
-        self.emitted_count = 0  # both modes (dispatch keeps no results[])
         self.steps_done = 0
 
-    # -- capacitor bank (vectorized Capacitor, same float expressions) ------
+    def __getattr__(self, name: str):
+        # legacy attribute surface: state arrays (pool.v, pool.on, ...) and
+        # params fields (pool.dt, pool.mode, pool.v_on, ...) read through
+        d = object.__getattribute__(self, "__dict__")
+        for holder in ("state", "params"):
+            obj = d.get(holder)
+            if obj is not None and hasattr(obj, name):
+                return getattr(obj, name)
+        raise AttributeError(
+            f"{type(self).__name__!s} has no attribute {name!r}")
+
+    def __setattr__(self, name: str, value) -> None:
+        # keep legacy whole-array assignment working: `pool.v = arr` must
+        # rebind the state field the backends read, not shadow it
+        d = self.__dict__
+        if name in STATE_FIELDS and d.get("state") is not None:
+            setattr(d["state"], name, value)
+            return
+        params = d.get("params")
+        if params is not None and name not in d and hasattr(params, name):
+            raise AttributeError(
+                f"{name!r} is a frozen fleet parameter; build a new pool "
+                "to change it")
+        object.__setattr__(self, name, value)
+
+    def reset(self) -> None:
+        """Fresh per-worker state (discharged capacitors, zero counters);
+        params, backend, and any compiled scan functions are kept — a
+        reset + run re-executes the trace without re-tracing."""
+        self.state = init_state(self.params.n)
+        self.results = [[] for _ in range(self.params.n)]
+        self.events = []
+        self.steps_done = 0
+
+    @property
+    def emitted_count(self) -> int:
+        return int(self.state.emit_count.sum())
+
+    @property
+    def n_wl(self) -> int:
+        return len(self.params.tables)
+
+    # -- capacitor bank ------------------------------------------------------
 
     def usable_energy(self) -> np.ndarray:
-        e = 0.5 * self.C * (self.v * self.v - self.v_off * self.v_off)
-        return np.maximum(e, 0.0)
-
-    def _draw_at(self, idx: np.ndarray, amount: np.ndarray) -> np.ndarray:
-        """Draw ``amount`` at workers ``idx``; brown-outs get v_off and
-        False, exactly like ``Capacitor.draw``."""
-        v = self.v[idx]
-        e = 0.5 * self.C * v * v - amount
-        floor = 0.5 * self.C * self.v_off * self.v_off
-        ok = ~(e < floor)
-        e_safe = np.where(ok, e, floor)
-        new_v = np.where(ok, np.sqrt(2.0 * e_safe / self.C), self.v_off)
-        self.v[idx] = new_v
-        return ok
+        return backend_numpy.usable_energy(self.params, self.state)
 
     # -- dispatch-mode API ---------------------------------------------------
 
     def dispatchable(self) -> np.ndarray:
         """Workers the scheduler may assign to: on, idle, nothing pending."""
-        return self.on & ~self.has_work & ~self.p_pending
+        s = self.state
+        return s.on & ~s.has_work & ~s.p_pending
 
     def assign(self, workers: np.ndarray, tickets: np.ndarray,
                workload: np.ndarray, req_units: np.ndarray,
                batch: np.ndarray, t: float) -> None:
         """Queue an assignment; the worker acquires it on its next tick."""
-        self.p_pending[workers] = True
-        self.p_ticket[workers] = tickets
-        self.p_wl[workers] = workload
-        self.p_units[workers] = req_units
-        self.p_batch[workers] = batch
-        self.p_t_assigned[workers] = t
+        s = self.state
+        s.p_pending[workers] = True
+        s.p_ticket[workers] = tickets
+        s.p_wl[workers] = workload
+        s.p_units[workers] = req_units
+        s.p_batch[workers] = batch
+        s.p_t_assigned[workers] = t
 
     def evict(self, workers: np.ndarray) -> list[int]:
         """Revoke pending/in-flight assignments (scheduler deadline pass).
         Work is volatile, so eviction simply drops it; returns tickets."""
+        s = self.state
         tickets = []
         for w in np.atleast_1d(workers):
-            if self.p_pending[w]:
-                tickets.append(int(self.p_ticket[w]))
-                self.p_pending[w] = False
-            elif self.has_work[w]:
-                tickets.append(int(self.w_ticket[w]))
-                self.has_work[w] = False
+            if s.p_pending[w]:
+                tickets.append(int(s.p_ticket[w]))
+                s.p_pending[w] = False
+            elif s.has_work[w]:
+                tickets.append(int(s.w_ticket[w]))
+                s.has_work[w] = False
         return tickets
 
     def pop_events(self) -> list[tuple]:
         ev, self.events = self.events, []
         return ev
 
-    # -- main lockstep tick --------------------------------------------------
+    # -- lockstep stepping ---------------------------------------------------
 
     def step(self, i: int) -> None:
-        """Advance all N workers by one dt (trace index ``i``)."""
-        t = i * self.dt
-        dt = self.dt
-        C = self.C
-
-        # 1. harvest (mirrors Capacitor.harvest)
-        if self.phase is None:
-            p = self.power[self.trace_index, i % self.T]
-        else:
-            p = self.power[self.trace_index, (i + self.phase) % self.T]
-        dE = self.eff * p * dt
-        self.e_harvest += dE
-        e = 0.5 * C * self.v * self.v + dE
-        self.v = np.minimum(np.sqrt(2.0 * e / C), self.v_max)
-
-        # 2. turn on at v_on
-        waking = ~self.on & (self.v >= self.v_on)
-        self.on |= waking
-        self.cycles += waking
-        active = self.on.copy()
-
-        # workers holding work from a previous tick progress it; workers
-        # acquiring this tick spend the whole dt on acquisition (scalar
-        # semantics: the acquisition branch ends the step)
-        working = active & self.has_work
-        idle = active & ~self.has_work
-
-        # 3. acquisition
-        if self.mode == "local":
-            self._acquire_local(idle, t)
-        else:
-            self._acquire_dispatch(idle, t)
-
-        # 4. progress in-flight work by one dt of active execution
-        emit_now = np.zeros(self.n, dtype=bool)
-        if working.any():
-            emit_now = self._progress(working, t)
-
-        # 5. emission (BLE packet / host transfer)
-        finish = (working & self.has_work & self.on
-                  & ((self.w_units_done >= self.w_target) | emit_now))
-        if finish.any():
-            self._emit(np.nonzero(finish)[0], t)
+        """Advance all N workers by one dt (trace index ``i``) through the
+        NumPy reference transition (single-tick stepping is host-side by
+        definition; the JAX backend accelerates :meth:`step_macro`)."""
+        backend_numpy.tick(self.params, self.state, i, self.results,
+                           self.events)
         self.steps_done = i + 1
 
-    # -- step phases ---------------------------------------------------------
-
-    def _acquire_local(self, idle: np.ndarray, t: float) -> None:
-        due = idle & (t >= self.next_sample_t)
-        if not due.any():
-            return
-        d_idx = np.nonzero(due)[0]
-        delta = t - self.next_sample_t[d_idx]
-        k = delta // self.P
-        self.sample_counter[d_idx] += k.astype(np.int64) + 1
-        self.next_sample_t[d_idx] += self.P * (k + 1.0)
-        # decide BEFORE spending anything (SMART skips the whole round)
-        us = self.usable_energy()[d_idx]
-        init, refine = self.policy.decide_batch(us, self.tables[0], self.acc)
-        skip = init == SKIP
-        self.skipped[d_idx[skip]] += 1
-        go = d_idx[~skip]
-        if go.size == 0:
-            return
-        fixed = self.FIX[0]
-        ok = self._draw_at(go, np.minimum(fixed, us[~skip]))
-        self.on[go[~ok]] = False
-        succ = go[ok]
-        self.e_work[succ] += fixed
-        self.acquired[succ] += 1
-        self.has_work[succ] = True
-        self.w_ticket[succ] = self.sample_counter[succ] - 1
-        self.w_t_acq[succ] = t
-        self.w_cycle_acq[succ] = self.cycles[succ]
-        self.w_units_done[succ] = 0
-        self.w_left[succ] = 0.0
-        self.w_target[succ] = np.where(refine, self.NU[0], init)[~skip][ok]
-        self.w_tile[succ] = 0
-        self.w_wl[succ] = 0
-        self.w_batch[succ] = 1
-
-    def _acquire_dispatch(self, idle: np.ndarray, t: float) -> None:
-        due = idle & self.p_pending
-        if not due.any():
-            return
-        d_idx = np.nonzero(due)[0]
-        wl = self.p_wl[d_idx]
-        us = self.usable_energy()[d_idx]
-        fixed = self.FIX[wl]
-        ok = self._draw_at(d_idx, np.minimum(fixed, us))
-        self.p_pending[d_idx] = False
-        fail = d_idx[~ok]
-        self.on[fail] = False
-        for w in fail:
-            self.events.append((LOST, t, int(w), int(self.p_ticket[w])))
-        succ = d_idx[ok]
-        if succ.size == 0:
-            return
-        self.e_work[succ] += fixed[ok]
-        self.acquired[succ] += 1
-        self.has_work[succ] = True
-        self.w_ticket[succ] = self.p_ticket[succ]
-        self.w_t_acq[succ] = t
-        self.w_cycle_acq[succ] = self.cycles[succ]
-        self.w_units_done[succ] = 0
-        self.w_left[succ] = 0.0
-        self.w_tile[succ] = self.p_units[succ]
-        self.w_batch[succ] = self.p_batch[succ]
-        self.w_target[succ] = self.p_units[succ] * self.p_batch[succ]
-        self.w_wl[succ] = self.p_wl[succ]
-
-    def _progress(self, working: np.ndarray, t: float) -> np.ndarray:
-        """One dt of active execution for every working device; returns the
-        emit_now mask (budget died at a unit boundary -> emit what we have).
-        """
-        emit_now = np.zeros(self.n, dtype=bool)
-        e_step = np.zeros(self.n)
-        e_step[working] = self.mcu.active_power_w * self.dt
-        # scalar loop guard: `while e_step > 0 and units_done < target` —
-        # a target-0 work item skips straight to emission
-        run = working & (self.w_units_done < self.w_target)
-        while True:
-            r_idx = np.nonzero(run)[0]
-            if r_idx.size == 0:
-                break
-            # unit boundary: start the next unit only if unit + emit-reserve
-            # are affordable now (the paper's BLE-packet reserve)
-            starting = self.w_left[r_idx] <= 0
-            if starting.any():
-                s_idx = r_idx[starting]
-                ud = self.w_units_done[s_idx]
-                tile = self.w_tile[s_idx]
-                gidx = np.where(tile > 0, ud % np.maximum(tile, 1), ud)
-                nc = self.UC[self.w_wl[s_idx], gidx]
-                us = self.usable_energy()[s_idx]
-                cant = us < nc + self.EMITC[self.w_wl[s_idx]]
-                emit_now[s_idx[cant]] = True
-                run[s_idx[cant]] = False
-                go = s_idx[~cant]
-                self.w_left[go] = nc[~cant]
-                r_idx = np.nonzero(run)[0]
-                if r_idx.size == 0:
-                    break
-            take = np.minimum(e_step[r_idx], self.w_left[r_idx])
-            ok = self._draw_at(r_idx, take)
-            fail = r_idx[~ok]
-            if fail.size:
-                # power failure mid-work: volatile by design; work lost
-                self.on[fail] = False
-                self.has_work[fail] = False
-                run[fail] = False
-                if self.mode == "dispatch":
-                    for w in fail:
-                        self.events.append(
-                            (LOST, t, int(w), int(self.w_ticket[w])))
-            succ = r_idx[ok]
-            tk = take[ok]
-            self.e_work[succ] += tk
-            self.w_left[succ] -= tk
-            e_step[succ] -= tk
-            fin = succ[self.w_left[succ] <= 1e-18]
-            self.w_units_done[fin] += 1
-            self.w_left[fin] = 0.0
-            run[succ] = ((e_step[succ] > 0)
-                         & (self.w_units_done[succ] < self.w_target[succ]))
-        return emit_now
-
-    def _emit(self, f_idx: np.ndarray, t: float) -> None:
-        ec = self.EMITC[self.w_wl[f_idx]]
-        ok = self._draw_at(f_idx, ec)
-        fail = f_idx[~ok]
-        self.on[fail] = False
-        self.has_work[fail] = False  # volatile: failed emission loses it
-        if self.mode == "dispatch":
-            for w in fail:
-                self.events.append((LOST, t, int(w), int(self.w_ticket[w])))
-        succ = f_idx[ok]
-        self.e_work[succ] += ec[ok]
-        self.has_work[succ] = False
-        self.emitted_count += int(succ.size)
-        for w in succ:  # emissions are rare relative to ticks
-            w = int(w)
-            if self.mode == "local":
-                self.results[w].append(EmittedResult(
-                    int(self.w_ticket[w]), int(self.w_units_done[w]),
-                    float(self.w_t_acq[w]), t,
-                    int(self.cycles[w] - self.w_cycle_acq[w])))
-            else:
-                self.events.append(
-                    (EMIT, t, w, int(self.w_ticket[w]),
-                     int(self.w_units_done[w]), int(self.w_tile[w]),
-                     int(self.w_batch[w])))
+    def step_macro(self, i0: int, n_ticks: int) -> None:
+        """Advance ``n_ticks`` ticks starting at trace index ``i0`` as one
+        device macro-step: the JAX backend runs them as a single fused
+        ``lax.scan`` launch and materializes dispatch events into the
+        ``events`` list; the NumPy backend loops :meth:`step`."""
+        if self.backend == "jax":
+            if self._jax is None:
+                from repro.fleet.backend_jax import JaxFleetBackend
+                self._jax = JaxFleetBackend(self.params,
+                                            use_pallas=self.use_pallas)
+            self.state, events = self._jax.run(self.state, i0, n_ticks)
+            self.events.extend(events)
+            self.steps_done = i0 + n_ticks
+        else:
+            for i in range(i0, i0 + n_ticks):
+                self.step(i)
 
     # -- driving + accounting ------------------------------------------------
 
     def run(self, n_steps: int | None = None) -> PoolStats:
-        n_steps = self.T if n_steps is None else n_steps
-        for i in range(n_steps):
-            self.step(i)
+        n_steps = self.params.T if n_steps is None else n_steps
+        self.step_macro(0, n_steps)
         return self.stats()
 
     def stats(self) -> PoolStats:
+        s = self.state
         return PoolStats(
-            n_workers=self.n,
+            n_workers=self.params.n,
             emitted=self.emitted_count,
-            acquired=int(self.acquired.sum()),
-            skipped=int(self.skipped.sum()),
-            power_cycles=int(self.cycles.sum()),
-            energy_harvested_j=float(self.e_harvest.sum()),
-            energy_on_work_j=float(self.e_work.sum()),
+            acquired=int(s.acquired.sum()),
+            skipped=int(s.skipped.sum()),
+            power_cycles=int(s.cycles.sum()),
+            energy_harvested_j=float(s.e_harvest.sum()),
+            energy_on_work_j=float(s.e_work.sum()),
             energy_on_nvm_j=0.0,
             energy_on_sleep_j=0.0,
-            duration_s=self.steps_done * self.dt)
+            duration_s=self.steps_done * self.params.dt)

@@ -3,12 +3,16 @@
     PYTHONPATH=src python -m repro.launch.fleet --workers 256 --duration 120
     PYTHONPATH=src python -m repro.launch.fleet --workers 1024 \
         --traces RF,SOM,SOR,SIR --scheduler both --json out.json
+    PYTHONPATH=src python -m repro.launch.fleet --workers 100000 \
+        --backend jax --scheduler off --hetero
 
 Builds a harvest-powered worker fleet over a mix of energy-trace families,
 then serves one global HAR + Harris + LM request stream either through the
 central energy-aware scheduler (``repro.fleet.scheduler``) or as
 independent self-sampling workers (the no-scheduler baseline), and prints
-the fleet metrics. The helpers here are reused by
+the fleet metrics. ``--backend jax`` runs the device physics as fused
+``lax.scan`` launches (``repro.fleet.backend_jax``); ``--hetero`` mixes
+capacitor sizes across workers. The helpers here are reused by
 ``benchmarks/fleet_throughput.py`` and ``examples/fleet_serve.py``.
 """
 from __future__ import annotations
@@ -18,7 +22,7 @@ import json
 
 import numpy as np
 
-from repro.core.energy import get_trace
+from repro.core.energy import Capacitor, get_trace
 from repro.core.policies import Greedy, Smart
 from repro.fleet.scheduler import FleetScheduler, RequestStream, run_fleet
 from repro.fleet.worker import FleetWorkerPool, stack_traces
@@ -44,23 +48,45 @@ def make_power_matrix(trace_names: list[str], n_rows: int,
     return stack_traces(rows)
 
 
+def hetero_capacitors(n_workers: int, seed: int = 0,
+                      cap: Capacitor | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-worker ``(capacitance_f, v_max)`` arrays for a heterogeneous
+    fleet: capacitance log-uniform in [0.5x, 2x] of the reference buffer
+    (device classes mixing 735 uF..2.9 mF parts), v_max jittered within
+    the supervisor's rating band."""
+    cap = cap or Capacitor()
+    rng = np.random.default_rng(seed)
+    C = cap.capacitance_f * np.exp(rng.uniform(np.log(0.5), np.log(2.0),
+                                               n_workers))
+    v_max = cap.v_max + rng.uniform(0.0, 0.2, n_workers)
+    return C, v_max
+
+
 def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
                         workloads: list[FleetWorkload],
-                        seed: int = 0) -> FleetWorkerPool:
+                        seed: int = 0, *, backend: str = "numpy",
+                        capacitance_f: np.ndarray | None = None,
+                        v_max: np.ndarray | None = None) -> FleetWorkerPool:
     rng = np.random.default_rng(seed)
     return FleetWorkerPool(
         power, dt, workloads=[w.costs for w in workloads], mode="dispatch",
         n_workers=n_workers,
         trace_index=np.arange(n_workers) % power.shape[0],
-        phase=rng.integers(0, power.shape[1], n_workers))
+        phase=rng.integers(0, power.shape[1], n_workers),
+        backend=backend, capacitance_f=capacitance_f, v_max=v_max)
 
 
 def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   workloads: list[FleetWorkload], *, rate_rps: float,
                   mix: np.ndarray, n_steps: int, seed: int = 0,
                   max_batch: int = 4, shed_after_s: float = 30.0,
-                  dispatch_every: int = 10) -> dict:
-    pool = build_dispatch_pool(power, dt, n_workers, workloads, seed)
+                  dispatch_every: int = 10, backend: str = "numpy",
+                  capacitance_f: np.ndarray | None = None,
+                  v_max: np.ndarray | None = None) -> dict:
+    pool = build_dispatch_pool(power, dt, n_workers, workloads, seed,
+                               backend=backend, capacitance_f=capacitance_f,
+                               v_max=v_max)
     sched = FleetScheduler(pool, workloads, max_batch=max_batch,
                            shed_after_s=shed_after_s)
     stream = RequestStream(rate_rps, mix, n_steps, dt, seed=seed + 1)
@@ -68,15 +94,21 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                         dispatch_every=dispatch_every)
     summary["mode"] = "scheduled"
     summary["n_workers"] = n_workers
+    summary["backend"] = backend
     return summary
 
 
 def run_independent(power: np.ndarray, dt: float, n_workers: int,
                     workloads: list[FleetWorkload], *, mix: np.ndarray,
-                    period_s: float, n_steps: int, seed: int = 0) -> dict:
+                    period_s: float, n_steps: int, seed: int = 0,
+                    backend: str = "numpy",
+                    capacitance_f: np.ndarray | None = None,
+                    v_max: np.ndarray | None = None) -> dict:
     """No-scheduler baseline: workers are pinned to a workload (by the
     request mix) and self-sample every ``period_s`` — same offered load
-    as a ``rate_rps = n_workers / period_s`` stream, no routing."""
+    as a ``rate_rps = n_workers / period_s`` stream, no routing.
+    Accounting reads the pools' aggregate emission counters (not the
+    per-result records) so the JAX backend serves it unchanged."""
     counts = (np.asarray(mix) / np.sum(mix) * n_workers).astype(int)
     counts[0] += n_workers - counts.sum()
     completed = 0
@@ -87,30 +119,35 @@ def run_independent(power: np.ndarray, dt: float, n_workers: int,
     skipped = 0
     per_wl = {}
     rng = np.random.default_rng(seed)
+    start = 0
     for wl, cnt in zip(workloads, counts):
         if cnt == 0:
             continue
+        sl = slice(start, start + cnt)
+        start += cnt
         pool = FleetWorkerPool(
             power, dt, workloads=[wl.costs], mode="local", n_workers=cnt,
             policy=Smart(wl.floor) if wl.floor > 0 else Greedy(),
             accuracy_table=wl.accuracy,
             sampling_period_s=period_s,
             trace_index=np.arange(cnt) % power.shape[0],
-            phase=rng.integers(0, power.shape[1], cnt))
+            phase=rng.integers(0, power.shape[1], cnt),
+            backend=backend,
+            capacitance_f=(None if capacitance_f is None
+                           else capacitance_f[sl]),
+            v_max=None if v_max is None else v_max[sl])
         st = pool.run(n_steps)
-        res = [r for worker in pool.results for r in worker]
         completed += st.emitted
         skipped += st.skipped
-        units_sum += sum(r.units_used for r in res)
-        acc_sum += sum(float(wl.accuracy[min(r.units_used,
-                                             wl.costs.n_units)])
-                       for r in res)
+        units_sum += float(pool.state.emit_units_sum.sum())
+        acc_sum += float(pool.state.emit_acc_sum.sum())
         harvested += st.energy_harvested_j
         work += st.energy_on_work_j
         per_wl[wl.name] = {"workers": int(cnt), "completed": st.emitted}
     return {
         "mode": "independent",
         "n_workers": n_workers,
+        "backend": backend,
         "completed": completed,
         "skipped": skipped,
         "throughput_rps": completed / (n_steps * dt),
@@ -138,6 +175,11 @@ def main(argv: list[str] | None = None) -> dict:
                          "workers/period so both modes see the same load")
     ap.add_argument("--scheduler", choices=("on", "off", "both"),
                     default="both")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="worker-pool backend: numpy reference lockstep or "
+                         "jax lax.scan macro-steps")
+    ap.add_argument("--hetero", action="store_true",
+                    help="heterogeneous fleet: per-worker capacitance/v_max")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--shed-after", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -160,17 +202,22 @@ def main(argv: list[str] | None = None) -> dict:
                               args.seed)
     n_steps = int(args.duration / args.dt)
     rate = args.workers / args.period
+    cf = vm = None
+    if args.hetero:
+        cf, vm = hetero_capacitors(args.workers, args.seed)
 
     out: dict = {"config": vars(args)}
     if args.scheduler in ("on", "both"):
         out["scheduled"] = run_scheduled(
             power, args.dt, args.workers, workloads, rate_rps=rate, mix=mix,
             n_steps=n_steps, seed=args.seed, max_batch=args.max_batch,
-            shed_after_s=args.shed_after)
+            shed_after_s=args.shed_after, backend=args.backend,
+            capacitance_f=cf, v_max=vm)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(
             power, args.dt, args.workers, workloads, mix=mix,
-            period_s=args.period, n_steps=n_steps, seed=args.seed)
+            period_s=args.period, n_steps=n_steps, seed=args.seed,
+            backend=args.backend, capacitance_f=cf, v_max=vm)
     if "scheduled" in out and "independent" in out:
         out["speedup_completed"] = (
             out["scheduled"]["completed"]
