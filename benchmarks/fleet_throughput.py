@@ -1,5 +1,6 @@
-"""Fleet throughput: energy-aware scheduler vs independent workers, and
-NumPy-vs-JAX worker-backend scaling.
+"""Fleet throughput: energy-aware scheduler vs independent workers,
+NumPy-vs-JAX worker-backend scaling, and the fused forecast-aware control
+plane.
 
 Claims checked:
 - at >=1000 workers over a 600 s mixed RF/solar trace, the central
@@ -12,16 +13,25 @@ Claims checked:
 - the JAX ``lax.scan`` backend (a) agrees with the NumPy reference on
   emitted/skipped/power-cycle counts, and (b) carries the fleet to
   >=100k workers in one device launch (``--backend jax``);
+- the array-native control plane (``--control-plane``): a full
+  1024-worker / 600 s serve trace with ``--backend jax`` runs workers AND
+  scheduler as one compiled launch, agrees with the NumPy per-tick
+  reference on all request/emission counts, forecast routing beats
+  reactive routing on completed requests for the solar trace families,
+  and the fused launch beats the PR-1-style host-interleaved cadence on
+  wall clock (the before/after scaling table);
 - energy conservation holds fleet-wide (harvested >= work; NVM == 0 by
   construction for the approximate runtime).
 
     python -m benchmarks.fleet_throughput                 # scheduler claims
     python -m benchmarks.fleet_throughput --backend jax   # backend scaling
+    python -m benchmarks.fleet_throughput --control-plane # fused scheduler
     python -m benchmarks.fleet_throughput --smoke         # CI agreement gate
 
-JSON lands in experiments/fleet_throughput.json (scheduler claims) and
-experiments/fleet_backend_scaling.json (backend scaling), same convention
-as benchmarks/run.py.
+JSON lands in experiments/fleet_throughput.json (scheduler claims),
+experiments/fleet_backend_scaling.json (backend scaling), and
+experiments/fleet_control_plane.json (control plane), same convention as
+benchmarks/run.py.
 """
 from __future__ import annotations
 
@@ -237,14 +247,197 @@ def run_backend_suite(max_workers: int = 131072) -> dict:
     return res
 
 
+# ---------------------------------------------------------------------------
+# fused control plane: reactive vs forecast, host-tick vs one-launch
+# ---------------------------------------------------------------------------
+
+_COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
+               "evicted", "requeued")
+
+
+def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
+                     seed: int = 0, sched: str = "forecast",
+                     traces=None) -> dict:
+    """One definition of *scheduler* agreement: the NumPy per-tick driver
+    and the fused JAX launch serve the same stream over one trace bank
+    and must match on every request-lifecycle counter and on the pool's
+    emitted/skipped/power-cycle counts. Used by the recorded benchmark
+    and the CI smoke gate alike."""
+    power = make_power_matrix(traces or TRACES, min(n_rows, n_workers),
+                              duration_s, DT, seed)
+    n_steps = int(duration_s / DT)
+    rate = n_workers / PERIOD_S
+    res = {}
+    for backend in ("numpy", "jax"):
+        res[backend] = run_scheduled(
+            power, DT, n_workers, _workloads(), rate_rps=rate, mix=MIX,
+            n_steps=n_steps, seed=seed, backend=backend, sched=sched)
+    agree = all(res["numpy"][k] == res["jax"][k] for k in _COUNT_KEYS)
+    return {
+        "n_workers": n_workers,
+        "duration_s": duration_s,
+        "sched": sched,
+        "counts_agree": bool(agree),
+        "counts": {b: {k: res[b][k] for k in _COUNT_KEYS}
+                   for b in ("numpy", "jax")},
+    }
+
+
+def control_plane_comparison(n_workers: int = 1024,
+                             duration_s: float = 600.0,
+                             seed: int = 0) -> dict:
+    """Forecast vs reactive routing, per solar family, on the fused JAX
+    launch: same fleet, same stream, only the routing budget changes."""
+    n_steps = int(duration_s / DT)
+    rate = n_workers / PERIOD_S
+    out = {}
+    for fam in ("SOM", "SOR", "SIM"):
+        power = make_power_matrix([fam], min(32, n_workers), duration_s,
+                                  DT, seed)
+        per = {}
+        for sched in ("reactive", "forecast"):
+            r = run_scheduled(power, DT, n_workers, _workloads(),
+                              rate_rps=rate, mix=MIX, n_steps=n_steps,
+                              seed=seed, backend="jax", sched=sched)
+            per[sched] = {k: r[k] for k in _COUNT_KEYS}
+            per[sched]["throughput_rps"] = r["throughput_rps"]
+            per[sched]["mean_expected_accuracy"] = \
+                r["mean_expected_accuracy"]
+        per["forecast_over_reactive"] = (
+            per["forecast"]["completed"]
+            / max(per["reactive"]["completed"], 1))
+        out[fam] = per
+    return out
+
+
+def _run_interleaved_jax(pool, sched, stream, n_steps: int,
+                         dispatch_every: int = 10) -> dict:
+    """The *before* cadence (PR 2): device physics as 10-tick
+    ``step_macro`` scans with the scheduler on the host between them —
+    every macro-step pays a device launch plus a full state round-trip.
+    Collection lands at macro boundaries, so counts are close to (not
+    bit-equal with) the per-tick cadences; this driver exists only to
+    price the host interleaving the fused launch removes."""
+    dt = pool.dt
+    for i0 in range(0, n_steps, dispatch_every):
+        k = min(dispatch_every, n_steps - i0)
+        t = i0 * dt
+        sched.submit(t, stream.arrivals(i0))
+        sched.dispatch(t, i0)
+        for i in range(i0 + 1, i0 + k):
+            wls = stream.arrivals(i)
+            if wls.size:
+                sched.submit(i * dt, wls)
+        pool.step_macro(i0, k)
+        sched.collect((i0 + k - 1) * dt, evict=True)
+    return sched.summary(n_steps * dt)
+
+
+def control_plane_scaling(sizes=(256, 1024), duration_s: float = 120.0,
+                          seed: int = 3) -> dict:
+    """Before/after table for the serve hot path. Before: the PR-2-style
+    host-interleaved cadence (JAX macro-step scans with the scheduler on
+    the host between launches). After: the fused single launch, timed
+    cold (includes the one-off serve-scan compile) and warm (fresh
+    states, same compiled launch). The NumPy host-tick driver rides along
+    as the CPU reference point."""
+    from repro.fleet.sched import make_sched_state
+    from repro.fleet.scheduler import FleetScheduler, RequestStream, \
+        run_fleet
+    from repro.launch.fleet import build_dispatch_pool
+
+    n_steps = int(duration_s / DT)
+    out = {}
+    for n in sizes:
+        power = make_power_matrix(TRACES, min(32, n), duration_s, DT, seed)
+        wls = _workloads()
+        stream = RequestStream(n / PERIOD_S, MIX, n_steps, DT,
+                               seed=seed + 1)
+
+        t0 = time.perf_counter()
+        np_res = run_scheduled(power, DT, n, wls, rate_rps=n / PERIOD_S,
+                               mix=MIX, n_steps=n_steps, seed=seed,
+                               backend="numpy", sched="forecast")
+        np_s = time.perf_counter() - t0
+
+        # before: host-interleaved macro-stepping (warm = re-run on the
+        # already-compiled 10-tick scan, fresh states)
+        pool = build_dispatch_pool(power, DT, n, wls, seed, backend="jax")
+        sched = FleetScheduler(pool, wls, sched="forecast")
+        t0 = time.perf_counter()
+        _run_interleaved_jax(pool, sched, stream, n_steps)
+        inter_cold = time.perf_counter() - t0
+        pool.reset()
+        sched.state = make_sched_state(sched.params)
+        t0 = time.perf_counter()
+        inter_res = _run_interleaved_jax(pool, sched, stream, n_steps)
+        inter_warm = time.perf_counter() - t0
+
+        # after: the whole serve trace as one launch
+        pool = build_dispatch_pool(power, DT, n, wls, seed, backend="jax")
+        sched = FleetScheduler(pool, wls, sched="forecast")
+        t0 = time.perf_counter()
+        jax_res = run_fleet(pool, sched, stream, n_steps)
+        cold = time.perf_counter() - t0
+        pool.reset()
+        sched.state = make_sched_state(sched.params)
+        t0 = time.perf_counter()
+        jax_res = run_fleet(pool, sched, stream, n_steps)
+        warm = time.perf_counter() - t0
+        out[str(n)] = {
+            "completed": {"numpy": np_res["completed"],
+                          "jax_fused": jax_res["completed"],
+                          "jax_interleaved": inter_res["completed"]},
+            "counts_agree_numpy_vs_fused": all(
+                np_res[k] == jax_res[k] for k in _COUNT_KEYS),
+            "wall_s": {"numpy_host_ticks": np_s,
+                       "jax_interleaved_cold": inter_cold,
+                       "jax_interleaved_warm": inter_warm,
+                       "jax_fused_cold": cold,
+                       "jax_fused_warm": warm},
+            "speedup_fused_over_interleaved_warm":
+                inter_warm / max(warm, 1e-9),
+        }
+    return out
+
+
+def run_control_plane_suite(n_workers: int = 1024,
+                            duration_s: float = 600.0) -> dict:
+    t0 = time.perf_counter()
+    agree = _sched_agreement(n_workers, duration_s, 32, sched="forecast")
+    comp = control_plane_comparison(n_workers, duration_s)
+    scaling = control_plane_scaling()
+    total = time.perf_counter() - t0
+    res = {"agreement": agree, "forecast_vs_reactive": comp,
+           "host_vs_fused_scaling": scaling}
+    us = total * 1e6 / 3
+    emit("fleet.sched_counts_agree", us, str(agree["counts_agree"]))
+    for fam, per in comp.items():
+        emit(f"fleet.forecast_over_reactive_{fam}", us,
+             f"{per['forecast_over_reactive']:.3f}x")
+    top = str(max(int(k) for k in scaling))
+    emit(f"fleet.fused_over_interleaved_warm_at_{top}", us,
+         f"{scaling[top]['speedup_fused_over_interleaved_warm']:.2f}x")
+    out = Path("experiments")
+    out.mkdir(exist_ok=True)
+    (out / "fleet_control_plane.json").write_text(
+        json.dumps(res, indent=1, default=str))
+    return res
+
+
 def run_smoke(n_workers: int = 256, duration_s: float = 30.0) -> dict:
     """CI gate: short shared trace, both backends, counts must match
-    exactly (exercises the scan path on interpret-mode-only hosts)."""
+    exactly (exercises the scan path on interpret-mode-only hosts) —
+    for the local-mode pools AND the fused forecast control plane."""
     res = _backend_agreement(n_workers, duration_s, 16)
     if not res["counts_agree"]:
         print(json.dumps(res, indent=1), file=sys.stderr)
         raise SystemExit("fleet backend smoke FAILED: counts disagree")
-    return res
+    sres = _sched_agreement(64, duration_s, 8, sched="forecast")
+    if not sres["counts_agree"]:
+        print(json.dumps(sres, indent=1), file=sys.stderr)
+        raise SystemExit("fleet scheduler smoke FAILED: counts disagree")
+    return {"local": res, "sched_forecast": sres}
 
 
 def run_scheduler_suite() -> dict:
@@ -282,11 +475,16 @@ def main(argv: list[str] | None = None) -> dict:
                          "jax: backend agreement + >=100k scaling")
     ap.add_argument("--max-workers", type=int, default=131072,
                     help="cap for the jax scaling curve")
+    ap.add_argument("--control-plane", action="store_true",
+                    help="fused scheduler suite: forecast-vs-reactive + "
+                         "host-tick-vs-one-launch scaling table")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI agreement gate (256 workers, 30 s)")
     args = ap.parse_args(argv)
     if args.smoke:
         return run_smoke()
+    if args.control_plane:
+        return run_control_plane_suite()
     if args.backend == "jax":
         return run_backend_suite(args.max_workers)
     return run_scheduler_suite()

@@ -5,21 +5,28 @@ into a fleet: many simulated harvest-powered workers advancing in lockstep
 over batched energy traces (``worker``, a pluggable-backend frontend over
 the struct-of-arrays ``state`` — NumPy reference in ``backend_numpy``,
 whole-trace ``jax.lax.scan`` in ``backend_jax``), one global request
-stream, and a central energy-aware scheduler (``scheduler``) that admits,
-routes, batches and sheds work across the three paper scenarios
-(``workloads``). ``metrics`` does the fleet-level accounting;
+stream, and an array-native forecast-aware control plane (``sched``: pure
+xp-parametric admission/routing/batching/shedding/eviction ops shared by
+both backends; ``scheduler`` is the host frontend) that serves the three
+paper scenarios (``workloads``). On the JAX backend the *entire* serve
+trace — workers and scheduler — fuses into one device launch
+(``backend_jax.run_serve``). ``metrics`` does the fleet-level accounting;
 ``repro.launch.fleet`` is the CLI.
 """
-from repro.fleet.metrics import FleetMetrics, RequestRecord
-from repro.fleet.scheduler import FleetScheduler, Request
-from repro.fleet.state import FleetParams, FleetState
+from repro.fleet.metrics import FleetMetrics, RequestRecord, sched_summary
+from repro.fleet.sched import SCHED_MODES, make_sched_params
+from repro.fleet.scheduler import FleetScheduler, RequestStream, run_fleet
+from repro.fleet.state import (FleetParams, FleetState, SchedParams,
+                               SchedState)
 from repro.fleet.worker import FleetWorkerPool, stack_traces
 from repro.fleet.workloads import (FleetWorkload, har_workload,
                                    harris_workload, lm_workload)
 
 __all__ = [
-    "FleetMetrics", "RequestRecord", "FleetScheduler", "Request",
-    "FleetParams", "FleetState",
+    "FleetMetrics", "RequestRecord", "sched_summary",
+    "SCHED_MODES", "make_sched_params",
+    "FleetScheduler", "RequestStream", "run_fleet",
+    "FleetParams", "FleetState", "SchedParams", "SchedState",
     "FleetWorkerPool", "stack_traces", "FleetWorkload", "har_workload",
     "harris_workload", "lm_workload",
 ]

@@ -23,8 +23,15 @@ threshold comparisons sit ulps away from the knife edge with probability
 Events (dispatch mode) are materialized as fixed-capacity (N,) arrays —
 code / time / ticket / units per worker — instead of Python tuple lists.
 Capacity one-per-worker-per-macro-step is an invariant, not a truncation:
-tickets are only granted by the scheduler *between* macro-steps, and a
-worker's assignment can terminate (emit or loss) at most once per ticket.
+a worker's assignment can terminate (emit or loss) at most once per
+tick, and new assignments only arrive between device steps.
+
+``run_serve`` goes further: the array-native control plane
+(``repro.fleet.sched``) is traced *into* the scan — admission and event
+collection every tick, shed/dispatch/evict under a ``lax.cond`` at the
+dispatch cadence — so an entire serve trace (workers AND scheduler) is a
+single compiled launch; events are consumed by the in-scan collect the
+same tick they occur and never reach the host at all.
 
 Optionally the harvest stage runs through the Pallas capacitor-bank
 kernel (``repro.kernels.fleet_step``) — the TPU fast path; interpret mode
@@ -44,7 +51,10 @@ from jax.experimental import enable_x64
 from repro.core.energy import (capacitor_draw, capacitor_harvest,
                                capacitor_usable_energy)
 from repro.fleet.state import (STATE_FIELDS, FleetParams, FleetState,
-                               state_as_tuple, state_from_tuple)
+                               SchedParams, SchedState,
+                               sched_state_as_tuple,
+                               sched_state_from_tuple, state_as_tuple,
+                               state_from_tuple)
 
 _S = collections.namedtuple("_S", STATE_FIELDS)
 
@@ -85,10 +95,13 @@ class JaxFleetBackend:
             self.FIX = jnp.asarray(params.FIX)
             self.EMITC = jnp.asarray(params.EMITC)
             self.NU = jnp.asarray(params.NU)
+            self.AP = jnp.asarray(params.active_power_w)
             self.ACC = (None if params.acc is None
                         else jnp.asarray(np.asarray(params.acc,
                                                     dtype=np.float64)))
         self._compiled: dict[int, callable] = {}
+        self._serve_compiled: dict[tuple, callable] = {}
+        self._serve_sp: SchedParams | None = None
 
     # -- public API ----------------------------------------------------------
 
@@ -148,6 +161,100 @@ class JaxFleetBackend:
             return st, ev
 
         return jax.jit(scan_fn)
+
+    # -- fused serve scan (workers + scheduler in one launch) ---------------
+
+    def run_serve(self, state: FleetState, sp: SchedParams,
+                  sched_state: SchedState, arrivals: np.ndarray, *,
+                  i0: int = 0, dispatch_every: int = 10
+                  ) -> tuple[FleetState, SchedState]:
+        """The whole serve trace — device physics AND the array-native
+        control plane (``repro.fleet.sched``) — as one ``lax.scan``: the
+        per-tick arrival counts are the scan input, admission/collection
+        run every tick, the shed/dispatch/evict passes fire under a
+        ``lax.cond`` at the dispatch cadence, and only the two final
+        states come back to the host. No per-macro-step transfers."""
+        if self.p.mode != "dispatch":
+            raise ValueError("run_serve needs a dispatch-mode fleet")
+        arrivals = np.asarray(arrivals, dtype=np.int64)
+        n_ticks = arrivals.shape[0]
+        key = (n_ticks, int(dispatch_every))
+        if self._serve_sp is not sp:  # new control-plane config: re-trace
+            self._serve_compiled = {}
+            self._serve_sp = sp
+        with enable_x64():
+            fs = tuple(jnp.asarray(x) for x in state_as_tuple(state))
+            ss = tuple(jnp.asarray(x)
+                       for x in sched_state_as_tuple(sched_state))
+            fn = self._serve_compiled.get(key)
+            if fn is None:
+                fn = self._build_serve(sp, n_ticks, int(dispatch_every))
+                self._serve_compiled[key] = fn
+            fs, ss = fn(fs, ss, jnp.asarray(arrivals),
+                        jnp.asarray(i0, jnp.int64))
+            fs = tuple(np.array(x) for x in fs)
+            ss = tuple(np.asarray(x) for x in ss)
+        return state_from_tuple(fs), sched_state_from_tuple(ss)
+
+    def _build_serve(self, sp: SchedParams, n_ticks: int,
+                     dispatch_every: int):
+        from repro.fleet import sched as S
+        p = self.p
+        n = p.n
+        tick = self._tick
+
+        def body(carry, xs):
+            fs, ss = carry
+            i, counts = xs
+            t = i * p.dt
+            ss = S.admit(sp, ss, counts, t, jnp)
+            is_tick = (i % dispatch_every) == 0
+
+            def do_dispatch(args):
+                fsn, ss = args
+                ss = S.shed(sp, ss, t, jnp)
+                budget_now = self._usable(fsn.v)
+                col = ((i % p.T) if self.phase is None
+                       else (i + self.phase) % p.T)
+                pw = self.power[self.trace_index, col]
+                budget_plan = S.plan_budget(sp, budget_now, pw, p.eff, jnp)
+                dispatchable = fsn.on & ~fsn.has_work & ~fsn.p_pending
+                ss, a = S.dispatch(sp, ss, dispatchable, budget_now,
+                                   budget_plan, t, jnp)
+                fsn = fsn._replace(
+                    p_pending=fsn.p_pending | a.mask,
+                    p_wl=jnp.where(a.mask, a.wl, fsn.p_wl),
+                    p_units=jnp.where(a.mask, a.units, fsn.p_units),
+                    p_batch=jnp.where(a.mask, jnp.maximum(a.batch, 1),
+                                      fsn.p_batch),
+                    p_t_assigned=jnp.where(a.mask, t, fsn.p_t_assigned))
+                return fsn, ss
+
+            fsn, ss = lax.cond(is_tick, do_dispatch, lambda x: x,
+                               (_S(*fs), ss))
+            ev0 = (jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.float64),
+                   jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.int64))
+            fs2, ev = tick(tuple(fsn), ev0, i)
+            evc, _, _, evu = ev
+            ss = S.collect(sp, ss, evc == EV_EMIT, evc == EV_LOST, evu,
+                           t, jnp)
+
+            def do_evict(args):
+                fsn, ss = args
+                ss, evm = S.evict(sp, ss, t, jnp)
+                return fsn._replace(p_pending=fsn.p_pending & ~evm,
+                                    has_work=fsn.has_work & ~evm), ss
+
+            fsn2, ss = lax.cond(is_tick, do_evict, lambda x: x,
+                                (_S(*fs2), ss))
+            return (tuple(fsn2), ss), None
+
+        def serve_fn(fs, ss, arr, i0):
+            xs = (i0 + jnp.arange(n_ticks, dtype=jnp.int64), arr)
+            (fs, ss), _ = lax.scan(body, (fs, S.SS(*ss)), xs)
+            return fs, tuple(ss)
+
+        return jax.jit(serve_fn)
 
     def _usable(self, v):
         return capacitor_usable_energy(v, capacitance_f=self.C,
@@ -282,7 +389,7 @@ class JaxFleetBackend:
         p = self.p
         dispatch = p.mode == "dispatch"
         u_max = p.UC.shape[1]
-        e_step = jnp.where(working, p.active_power_w * p.dt, 0.0)
+        e_step = jnp.where(working, self.AP * p.dt, 0.0)
         run = working & (s.w_units_done < s.w_target)
         emit_now = jnp.zeros(p.n, dtype=bool)
         carry = (s.v, s.on, s.has_work, s.e_work, s.w_left, s.w_units_done,

@@ -161,7 +161,7 @@ def _progress(p: FleetParams, s: FleetState, working: np.ndarray, t: float,
     emit_now mask (budget died at a unit boundary -> emit what we have)."""
     emit_now = np.zeros(p.n, dtype=bool)
     e_step = np.zeros(p.n)
-    e_step[working] = p.active_power_w * p.dt
+    e_step[working] = p.active_power_w[working] * p.dt
     # scalar loop guard: `while e_step > 0 and units_done < target` —
     # a target-0 work item skips straight to emission
     run = working & (s.w_units_done < s.w_target)

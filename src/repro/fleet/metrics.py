@@ -1,11 +1,18 @@
 """Fleet-level accounting: request lifecycle counters + energy books.
 
-One ``RequestRecord`` per completed request; counters for every other way
-a request can leave the system (rejected at admission, shed while queued,
-lost to brown-outs past the retry budget, evicted by the straggler
-deadline). ``summary`` folds in the worker pool's energy ledger so a
-single dict answers throughput / latency / accuracy / energy — the four
-axes the paper trades against each other.
+Two accounting surfaces, one summary dict:
+
+- :func:`sched_summary` — the array-native control plane's aggregate
+  counters (``SchedState``): completions, every other way a request can
+  leave the system (rejected at admission, shed while queued, lost to
+  brown-outs past the retry budget, evicted by the straggler deadline),
+  per-workload units/accuracy sums, and a fixed-bin latency histogram
+  (the fused JAX scan returns no per-request records, so percentiles
+  come from the bins). Folds in the worker pool's energy ledger so a
+  single dict answers throughput / latency / accuracy / energy — the
+  four axes the paper trades against each other.
+- ``RequestRecord`` / ``FleetMetrics`` — the per-request record surface,
+  kept for host-side tooling that wants individual lifecycles.
 """
 from __future__ import annotations
 
@@ -29,6 +36,75 @@ class RequestRecord:
     @property
     def latency_s(self) -> float:
         return self.t_done - self.t_arrival
+
+
+def _energy_block(pool, completed: int) -> dict:
+    harvested = float(pool.e_harvest.sum())
+    work = float(pool.e_work.sum())
+    return {
+        "harvested_j": harvested,
+        "work_j": work,
+        "nvm_j": 0.0,  # approximate runtime: no NVM, ever
+        "sleep_j": 0.0,
+        "j_per_completed": (work / completed if completed
+                            else float("inf")),
+        # harvested >= work + nvm + sleep: nothing comes from thin air;
+        # the remainder is banked charge + booster losses
+        "conservation_ok": bool(harvested + 1e-9 >= work),
+    }
+
+
+def _hist_percentile(hist: np.ndarray, lat_max_s: float, q: float) -> float:
+    """Percentile estimate from the fixed-bin latency histogram (bin
+    centers; the fused scan's records-free substitute for exact order
+    statistics)."""
+    total = int(hist.sum())
+    if total == 0:
+        return 0.0
+    cum = np.cumsum(hist)
+    b = int(np.searchsorted(cum, q * total))
+    return (min(b, hist.shape[0] - 1) + 0.5) * lat_max_s / hist.shape[0]
+
+
+def sched_summary(sp, ss, duration_s: float, pool=None,
+                  workload_names: list[str] | None = None) -> dict:
+    """Summary dict from the array control plane's aggregate counters
+    (``sp``/``ss``: SchedParams/SchedState). Same keys as the historical
+    per-record summary so launchers and benchmarks are agnostic."""
+    completed = int(ss.completed)
+    out: dict = {
+        "submitted": int(ss.submitted),
+        "completed": completed,
+        "rejected": int(ss.rejected),
+        "shed": int(ss.shed),
+        "lost": int(ss.lost),
+        "evicted": int(ss.evicted),
+        "requeued": int(ss.requeued),
+        "throughput_rps": completed / max(duration_s, 1e-9),
+        "latency_mean_s": float(ss.lat_sum) / max(completed, 1),
+        "latency_p50_s": _hist_percentile(np.asarray(ss.lat_hist),
+                                          sp.lat_max_s, 0.50),
+        "latency_p95_s": _hist_percentile(np.asarray(ss.lat_hist),
+                                          sp.lat_max_s, 0.95),
+        "mean_units": float(ss.units_wl.sum()) / max(completed, 1),
+        "mean_expected_accuracy": (float(ss.acc_wl.sum())
+                                   / max(completed, 1)),
+        "batch_hist": [int(x) for x in np.asarray(ss.batch_hist)],
+    }
+    out["per_workload"] = {}
+    for w in range(sp.W):
+        c = int(ss.completed_wl[w])
+        if c == 0:
+            continue
+        name = workload_names[w] if workload_names else str(w)
+        out["per_workload"][name] = {
+            "completed": c,
+            "mean_units": float(ss.units_wl[w]) / c,
+            "mean_expected_accuracy": float(ss.acc_wl[w]) / c,
+        }
+    if pool is not None:
+        out["energy"] = _energy_block(pool, completed)
+    return out
 
 
 @dataclasses.dataclass
@@ -78,17 +154,5 @@ class FleetMetrics:
                     np.mean([r.expected_accuracy for r in recs])),
             }
         if pool is not None:
-            harvested = float(pool.e_harvest.sum())
-            work = float(pool.e_work.sum())
-            out["energy"] = {
-                "harvested_j": harvested,
-                "work_j": work,
-                "nvm_j": 0.0,  # approximate runtime: no NVM, ever
-                "sleep_j": 0.0,
-                "j_per_completed": (work / len(self.completed)
-                                    if self.completed else float("inf")),
-                # harvested >= work + nvm + sleep: nothing comes from thin
-                # air; the remainder is banked charge + booster losses
-                "conservation_ok": bool(harvested + 1e-9 >= work),
-            }
+            out["energy"] = _energy_block(pool, len(self.completed))
         return out

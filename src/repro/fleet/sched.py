@@ -1,0 +1,500 @@
+"""Array-native fleet control plane: scheduling as pure array ops.
+
+The PR-1 scheduler was a per-request Python object loop (``Request``
+dataclasses in deques, dict-keyed in-flight tickets). At fleet scale that
+loop *is* the bottleneck: the JAX worker backend had to break its
+``lax.scan`` at every scheduler macro-step for a host round-trip. This
+module re-expresses every control-plane mechanism as pure, xp-parametric
+(``xp`` is numpy or jax.numpy) functions over the struct-of-arrays
+``SchedState`` so the same expressions serve two evaluation modes:
+
+- the NumPy reference (``FleetScheduler`` in ``repro.fleet.scheduler``
+  drives them tick-by-tick on the host), and
+- the fused JAX path (``backend_jax.run_serve`` traces them *inside* the
+  worker scan, so an entire serve trace — workers and scheduler — runs as
+  one device launch with no host interleaving).
+
+Mechanisms (array formulation of the PR-1 semantics):
+
+- **Admission** — per-tick arrival *counts* per workload; arrivals beyond
+  the global ``max_queue`` backlog are rejected (cumulative-count clip,
+  workload-index order within a tick).
+- **Queues** — one fixed-capacity ring buffer per workload holding
+  (arrival time, retry count); retries/evictions re-enter at the *front*
+  with their original arrival time (the paper prefers fresh samples, so a
+  retried old request must not leapfrog shedding).
+- **Shedding** — the longest stale prefix of each queue (age beyond
+  ``shed_after_s``) is dropped via a cumulative-product prefix scan.
+- **Routing** — dispatchable workers are ranked by a *budget score*
+  (stable argsort, richest first); queues are served oldest-head-first.
+  Reactive mode scores instantaneous usable energy; forecast mode scores
+  the closed-form OU conditional expectation of usable energy over the
+  next ``lookahead`` window (``repro.core.energy.forecast_usable_energy``)
+  — a momentarily occluded worker on a rich mean-reverting trace outranks
+  a momentarily charged worker on a scarce one.
+- **Batching** — each assigned worker takes the largest batch of
+  floor-knob requests its *planning* budget affords (forecast mode plans
+  with expected inflow: harvest arriving while the batch executes funds
+  in-flight work; shortfalls degrade to the worker's partial-emission
+  path, not losses), then refines the per-request knob greedily. Queue
+  consumption across workers is a cumulative-sum slice assignment — no
+  per-request loop.
+- **Eviction** — assignments that outlive
+  ``grace + deadline_factor * est`` (``est`` from the per-worker MCU
+  active power: heterogeneous fleets straggle heterogeneously) are
+  revoked and requeued, the ``runtime.straggler`` deadline rule.
+
+Agreement contract: every *decision* (ranking, admission, batch sizes,
+knob units, shed/evict counts) is integer arithmetic or elementwise IEEE
+float ops evaluated identically by numpy and jax.numpy under
+``enable_x64``, with stable sorts on both sides — the NumPy and fused-JAX
+control planes agree exactly on emitted/skipped/power-cycle/completion
+counts (pinned by tests/test_fleet_backends.py). Float *metric*
+accumulators (latency sums, accuracy sums) may differ by reduction order
+ulps and are compared with tolerances.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.energy import (fit_ou_theta, forecast_gain,
+                               forecast_usable_energy)
+from repro.fleet.state import (SCHED_FIELDS, FleetParams, SchedParams,
+                               SchedState, init_sched_state)
+
+SS = collections.namedtuple("SS", SCHED_FIELDS)
+
+Assignment = collections.namedtuple("Assignment",
+                                    ["mask", "wl", "units", "batch"])
+
+SCHED_MODES = ("reactive", "forecast")
+
+_BIG = np.int64(1) << 40  # sentinel: floor unattainable -> never afford
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+
+def make_sched_params(p: FleetParams, workloads: Sequence, *,
+                      max_queue: int = 4096, shed_after_s: float = 30.0,
+                      max_batch: int = 4, max_retries: int = 2,
+                      grace_s: float = 20.0, deadline_factor: float = 1.5,
+                      sched: str = "reactive", lookahead_s: float = 5.0,
+                      lat_bins: int = 64) -> SchedParams:
+    """Stack the workload tables and fit the per-row harvest forecaster.
+
+    The forecaster is trace-model-driven but label-free: theta is fit per
+    power-matrix row by lag-1 autocorrelation (``fit_ou_theta``), so solar
+    rows get a high-gain conditional-expectation forecast while bursty
+    RF/KIN rows degrade toward the row mean."""
+    if sched not in SCHED_MODES:
+        raise ValueError(f"unknown sched mode {sched!r}; "
+                         f"choose from {SCHED_MODES}")
+    W = len(workloads)
+    u_max = max(w.costs.n_units for w in workloads)
+    CU = np.full((W, u_max + 2), np.inf)
+    UCUM = np.full((W, u_max + 2), np.inf)
+    ACC = np.zeros((W, u_max + 1))
+    FIX = np.zeros(W)
+    EMITC = np.zeros(W)
+    NU = np.zeros(W, dtype=np.int64)
+    FULL = np.zeros(W)
+    P_REQ = np.zeros(W, dtype=np.int64)
+    IS_SMART = np.zeros(W, dtype=bool)
+    for w, wk in enumerate(workloads):
+        nu = wk.costs.n_units
+        NU[w] = nu
+        CU[w, :nu + 1] = wk.costs.cumulative()
+        UCUM[w, :nu + 1] = np.concatenate(
+            [[0.0], np.cumsum(wk.costs.unit_costs)])
+        FULL[w] = UCUM[w, nu]
+        ACC[w, :nu + 1] = wk.accuracy
+        FIX[w] = wk.costs.fixed_cost
+        EMITC[w] = wk.costs.emit_cost
+        if wk.floor > 0:
+            IS_SMART[w] = True
+            ok = np.nonzero(wk.accuracy >= wk.floor)[0]
+            P_REQ[w] = int(ok[0]) if ok.size else _BIG
+    L = max(int(round(lookahead_s / p.dt)), 1)
+    theta = fit_ou_theta(p.power)
+    mu_rows = p.power.mean(axis=1)
+    return SchedParams(
+        n=p.n, W=W, Q=int(max_queue + p.n * max_batch), B=int(max_batch),
+        max_queue=int(max_queue), max_retries=int(max_retries),
+        shed_after_s=float(shed_after_s), grace_s=float(grace_s),
+        deadline_factor=float(deadline_factor), dt=float(p.dt),
+        CU=CU, UCUM=UCUM, FIX=FIX, EMITC=EMITC, NU=NU, FULL=FULL, ACC=ACC,
+        P_REQ=P_REQ, IS_SMART=IS_SMART,
+        forecast=(sched == "forecast"), lookahead_ticks=L,
+        MU=mu_rows[p.trace_index],
+        GAIN=np.asarray(forecast_gain(theta, L))[p.trace_index],
+        ECAP=0.5 * p.C * (p.v_max * p.v_max - p.v_off * p.v_off),
+        ACTIVE_P=np.asarray(p.active_power_w, dtype=np.float64),
+        lat_bins=int(lat_bins),
+        lat_max_s=2.0 * (float(shed_after_s) + float(grace_s)))
+
+
+def make_sched_state(sp: SchedParams) -> SchedState:
+    return init_sched_state(sp)
+
+
+# ---------------------------------------------------------------------------
+# xp-generic primitives
+# ---------------------------------------------------------------------------
+
+
+def _argsort(a, xp):
+    """Stable argsort on both array namespaces: ties break by index, so
+    the NumPy and JAX control planes rank identically."""
+    if xp is np:
+        return np.argsort(a, kind="stable")
+    return xp.argsort(a, stable=True)
+
+
+def _scatter_set(a, idx, v, xp):
+    if xp is np:
+        out = a.copy()
+        out[idx] = v
+        return out
+    return a.at[idx].set(v)
+
+
+def _scatter_add(a, idx, v, xp):
+    if xp is np:
+        out = a.copy()
+        np.add.at(out, idx, v)
+        return out
+    return a.at[idx].add(v)
+
+
+# ---------------------------------------------------------------------------
+# intake
+# ---------------------------------------------------------------------------
+
+
+def admit(sp: SchedParams, ss, counts, t, xp=np):
+    """Admit this tick's arrivals (``counts``: (W,) per-workload) up to the
+    global backlog bound; reject the remainder. All arrivals of one tick
+    share the arrival time ``t``, so a push is a masked fill of the ring
+    segment past each queue's tail."""
+    if xp is np and int(np.sum(counts)) == 0:
+        return ss  # pure no-op (identical to the masked write below)
+    if xp is not np:
+        # traced twin of the host fast path: skip the ring write on
+        # zero-arrival ticks (the result is identical either way)
+        from jax import lax
+        return lax.cond(xp.sum(counts) > 0,
+                        lambda s: _admit_impl(sp, s, counts, t, xp),
+                        lambda s: s, ss)
+    return _admit_impl(sp, ss, counts, t, xp)
+
+
+def _admit_impl(sp: SchedParams, ss, counts, t, xp):
+    counts = xp.asarray(counts).astype(xp.int64)
+    backlog = xp.sum(ss.q_len)
+    space = xp.maximum(sp.max_queue - backlog, 0)
+    cum = xp.cumsum(counts)
+    adm = xp.clip(space - (cum - counts), 0, counts)
+    if xp is np:
+        # reference-driver fast path: write exactly the admitted slots
+        # (same values the masked whole-ring write below produces — the
+        # admission *decision* above is shared, the store is sparse)
+        q_t, q_r = ss.q_t.copy(), ss.q_r.copy()
+        for w in range(sp.W):
+            k = int(adm[w])
+            if k:
+                idx = (int(ss.q_head[w]) + int(ss.q_len[w])
+                       + np.arange(k)) % sp.Q
+                q_t[w, idx] = t
+                q_r[w, idx] = 0
+    else:
+        slot = xp.arange(sp.Q)[None, :]
+        pos = (slot - ss.q_head[:, None]) % sp.Q  # logical idx per slot
+        new = ((pos >= ss.q_len[:, None])
+               & (pos < (ss.q_len + adm)[:, None]))
+        q_t = xp.where(new, t, ss.q_t)
+        q_r = xp.where(new, 0, ss.q_r)
+    return ss._replace(
+        q_t=q_t, q_r=q_r,
+        q_len=ss.q_len + adm,
+        submitted=ss.submitted + xp.sum(counts),
+        rejected=ss.rejected + xp.sum(counts - adm))
+
+
+def shed(sp: SchedParams, ss, t, xp=np):
+    """Drop the stale prefix of each queue (age > shed_after_s): a stale
+    approximate answer is worth less than no answer. Prefix, not filter —
+    ring contiguity is preserved and matches the PR-1 head-pop loop."""
+    j = xp.arange(sp.Q)[None, :]
+    phys = (ss.q_head[:, None] + j) % sp.Q
+    log_t = xp.take_along_axis(ss.q_t, phys, axis=1)
+    stale = (j < ss.q_len[:, None]) & (t - log_t > sp.shed_after_s)
+    n_shed = xp.sum(xp.cumprod(stale.astype(xp.int64), axis=1), axis=1)
+    return ss._replace(
+        q_head=(ss.q_head + n_shed) % sp.Q,
+        q_len=ss.q_len - n_shed,
+        shed=ss.shed + xp.sum(n_shed))
+
+
+# ---------------------------------------------------------------------------
+# routing / batching
+# ---------------------------------------------------------------------------
+
+
+def plan_budget(sp: SchedParams, budget_now, pw, eff, xp=np):
+    """The budget routing and batching plan against. Reactive: the
+    instantaneous usable energy. Forecast: usable energy plus the
+    closed-form expected harvest over the lookahead window, capped at the
+    buffer's storable ceiling (``core.energy`` conditional expectation)."""
+    if not sp.forecast:
+        return budget_now
+    return forecast_usable_energy(
+        budget_now, pw, sp.lookahead_ticks * sp.dt, e_cap=sp.ECAP,
+        booster_eff=eff, mu=sp.MU, gain=sp.GAIN, xp=xp)
+
+
+def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
+             t, xp=np):
+    """Route queued requests to capable workers; returns ``(ss, a)`` where
+    ``a`` holds per-worker assignment arrays the caller writes into the
+    device state (``p_pending`` and friends).
+
+    Workers are ranked richest-first by ``budget_plan`` (stable sort);
+    queues are served oldest-head-first. Per worker: SMART admission at
+    the workload floor on the *instantaneous* budget (never start work
+    whose fixed cost is unfunded today), batch size and greedy knob
+    refinement on the *planning* budget (forecast inflow funds in-flight
+    units). Queue consumption is a cumulative-sum slice per workload."""
+    i64 = xp.int64
+    score = xp.where(dispatchable, budget_plan, -xp.inf)
+    order = _argsort(-score, xp)  # rank -> worker id, richest first
+    elig = xp.take(dispatchable, order)
+    bn = xp.take(budget_now, order)
+    bp = xp.take(budget_plan, order)
+    head_t = xp.where(
+        ss.q_len > 0,
+        xp.take_along_axis(ss.q_t, ss.q_head[:, None], axis=1)[:, 0],
+        xp.inf)
+    wl_order = _argsort(head_t, xp)
+    q_head, q_len = ss.q_head, ss.q_len
+    taken = xp.zeros(sp.n, dtype=bool)
+    a_wl = xp.zeros(sp.n, dtype=i64)
+    a_units = xp.zeros(sp.n, dtype=i64)
+    a_batch = xp.zeros(sp.n, dtype=i64)
+    g_arr = xp.zeros((sp.n, sp.B))
+    g_retry = xp.zeros((sp.n, sp.B), dtype=i64)
+    jB = xp.arange(sp.B)[None, :]
+    for k in range(sp.W):  # static: one pass per workload queue
+        wl = wl_order[k]
+        cu = xp.take(xp.asarray(sp.CU), wl, axis=0)
+        ucum = xp.take(xp.asarray(sp.UCUM), wl, axis=0)
+        nu = xp.take(xp.asarray(sp.NU), wl)
+        overhead = (xp.take(xp.asarray(sp.FIX), wl)
+                    + xp.take(xp.asarray(sp.EMITC), wl))
+        qrem = xp.take(q_len, wl)
+        head = xp.take(q_head, wl)
+        # admission: largest knob the instantaneous budget affords (-1:
+        # even fixed+emit does not fit), SMART floor for floored workloads
+        k_aff = xp.searchsorted(cu, bn, side="right").astype(i64) - 1
+        p_req = xp.where(xp.take(xp.asarray(sp.IS_SMART), wl),
+                         xp.take(xp.asarray(sp.P_REQ), wl),
+                         xp.maximum(k_aff, 0))
+        afford = (k_aff >= p_req) & (k_aff >= 0)
+        # batch sizing on the *planning* budget (forecast inflow lets more
+        # floor-knob requests ride one power cycle, amortizing fixed+emit
+        # overhead); greedy knob refinement on the *instantaneous* budget
+        # (spend expected inflow on throughput, never on slower service)
+        spend_plan = bp - overhead
+        spend_now = bn - overhead
+        cpr = xp.take(ucum, xp.clip(p_req, 0, ucum.shape[0] - 1))
+        b_want = xp.where(
+            cpr > 0,
+            xp.floor_divide(spend_plan, xp.maximum(cpr, 1e-300)), sp.B)
+        b_want = xp.clip(b_want, 1, sp.B).astype(i64)
+        u_want = xp.clip(
+            xp.searchsorted(ucum, spend_now / xp.maximum(b_want, 1),
+                            side="right").astype(i64) - 1,
+            p_req, nu)
+        ok = elig & ~taken & afford & (u_want > 0)
+        b = xp.where(ok, b_want, 0)
+        c = xp.cumsum(b)
+        start = c - b
+        actual = xp.clip(qrem - start, 0, b)
+        got = ok & (actual > 0)
+        u = xp.clip(
+            xp.searchsorted(ucum, spend_now / xp.maximum(actual, 1),
+                            side="right").astype(i64) - 1,
+            p_req, nu)
+        # consume the queue front: gather each worker's request slice
+        phys = (head + start[:, None] + jB) % sp.Q
+        row_t = xp.take(ss.q_t, wl, axis=0)
+        row_r = xp.take(ss.q_r, wl, axis=0)
+        take_mask = got[:, None] & (jB < actual[:, None])
+        g_arr = xp.where(take_mask, xp.take(row_t, phys), g_arr)
+        g_retry = xp.where(take_mask, xp.take(row_r, phys), g_retry)
+        consumed = xp.sum(actual)
+        onehot = xp.arange(sp.W) == wl
+        q_head = xp.where(onehot, (q_head + consumed) % sp.Q, q_head)
+        q_len = xp.where(onehot, q_len - consumed, q_len)
+        taken = taken | got
+        a_wl = xp.where(got, wl, a_wl)
+        a_units = xp.where(got, u, a_units)
+        a_batch = xp.where(got, actual, a_batch)
+    # rank space -> worker space (order is a permutation)
+    z = lambda dt=i64: xp.zeros(sp.n, dtype=dt)  # noqa: E731
+    batch_w = _scatter_set(z(), order, a_batch, xp)
+    mask_w = batch_w > 0
+    wl_w = _scatter_set(z(), order, a_wl, xp)
+    units_w = _scatter_set(z(), order, a_units, xp)
+    arr_w = _scatter_set(xp.zeros((sp.n, sp.B)), order, g_arr, xp)
+    retry_w = _scatter_set(xp.zeros((sp.n, sp.B), dtype=i64), order,
+                           g_retry, xp)
+    ss = ss._replace(
+        q_head=q_head, q_len=q_len,
+        f_n=xp.where(mask_w, batch_w, ss.f_n),
+        f_wl=xp.where(mask_w, wl_w, ss.f_wl),
+        f_units=xp.where(mask_w, units_w, ss.f_units),
+        f_t0=xp.where(mask_w, t, ss.f_t0),
+        f_arr=xp.where(mask_w[:, None], arr_w, ss.f_arr),
+        f_retry=xp.where(mask_w[:, None], retry_w, ss.f_retry),
+        batch_hist=ss.batch_hist + xp.sum(
+            (batch_w[:, None] == xp.arange(sp.B + 1)[None, :])
+            & mask_w[:, None], axis=0))
+    return ss, Assignment(mask_w, wl_w, units_w, batch_w)
+
+
+# ---------------------------------------------------------------------------
+# completion / loss / eviction
+# ---------------------------------------------------------------------------
+
+
+def _requeue(sp: SchedParams, ss, slots, xp=np):
+    """Grant retries to the in-flight request ``slots`` ((N, B) mask):
+    retry budget exceeded -> lost; otherwise re-enter the owning workload
+    queue at the *front*, preserving (worker, slot) order, with original
+    arrival times (so shedding still sees their true age)."""
+    if xp is np:
+        if not slots.any():
+            return ss  # pure no-op fast path for the reference driver
+        return _requeue_impl(sp, ss, slots, xp)
+    # traced twin: retries are rare relative to ticks — skip the ring
+    # scatter entirely on clean ticks (identical result either way)
+    from jax import lax
+    return lax.cond(xp.any(slots),
+                    lambda s: _requeue_impl(sp, s, slots, xp),
+                    lambda s: s, ss)
+
+
+def _requeue_impl(sp: SchedParams, ss, slots, xp):
+    newr = ss.f_retry + 1
+    give_up = slots & (newr > sp.max_retries)
+    keep = slots & ~give_up
+    q_t, q_r, q_head, q_len = ss.q_t, ss.q_r, ss.q_head, ss.q_len
+    flat_keep = keep.reshape(-1)
+    flat_t = ss.f_arr.reshape(-1)
+    flat_r = newr.reshape(-1)
+    flat_wl = xp.broadcast_to(ss.f_wl[:, None], keep.shape).reshape(-1)
+    for w in range(sp.W):  # static: one front-insert pass per queue
+        m = flat_keep & (flat_wl == w)
+        kcount = xp.sum(m.astype(xp.int64))
+        rank = xp.cumsum(m.astype(xp.int64)) - 1
+        headnew = (q_head[w] - kcount) % sp.Q
+        phys = xp.where(m, (headnew + rank) % sp.Q, sp.Q)  # Q: dump slot
+        ext_t = xp.concatenate([q_t[w], xp.zeros(1)])
+        ext_t = _scatter_set(ext_t, phys, xp.where(m, flat_t, 0.0), xp)
+        ext_r = xp.concatenate([q_r[w], xp.zeros(1, dtype=xp.int64)])
+        ext_r = _scatter_set(ext_r, phys, xp.where(m, flat_r, 0), xp)
+        onehot = xp.arange(sp.W) == w
+        q_t = xp.where(onehot[:, None], ext_t[None, :sp.Q], q_t)
+        q_r = xp.where(onehot[:, None], ext_r[None, :sp.Q], q_r)
+        q_head = xp.where(onehot, headnew, q_head)
+        q_len = xp.where(onehot, q_len + kcount, q_len)
+    return ss._replace(
+        q_t=q_t, q_r=q_r, q_head=q_head, q_len=q_len,
+        lost=ss.lost + xp.sum(give_up),
+        requeued=ss.requeued + xp.sum(keep))
+
+
+def collect(sp: SchedParams, ss, emit, lost, units_done, t, xp=np):
+    """Retire this tick's device outcomes. An emitting worker completes
+    ``units_done // u`` full requests of its batch (plus one partial:
+    anytime semantics — a truncated result is still a result); the
+    unfinished tail and all requests of browned-out workers go through
+    the retry path."""
+    if xp is np:
+        if not (emit.any() or lost.any()):
+            return ss
+        return _collect_impl(sp, ss, emit, lost, units_done, t, xp)
+    from jax import lax
+    return lax.cond(
+        xp.any(emit | lost),
+        lambda s: _collect_impl(sp, s, emit, lost, units_done, t, xp),
+        lambda s: s, ss)
+
+
+def _collect_impl(sp: SchedParams, ss, emit, lost, units_done, t, xp):
+    act = ss.f_n > 0
+    em = emit & act
+    lo = lost & act
+    b = ss.f_n
+    u = ss.f_units
+    safe_u = xp.maximum(u, 1)
+    full = xp.where(u > 0, units_done // safe_u, b)
+    part = xp.where(u > 0, units_done % safe_u, 0)
+    nfull = xp.minimum(full, b)
+    haspart = (part > 0) & (full < b)
+    jB = xp.arange(sp.B)[None, :]
+    slotv = jB < b[:, None]
+    compfull = em[:, None] & slotv & (jB < nfull[:, None])
+    comppart = (em[:, None] & slotv & (jB == nfull[:, None])
+                & haspart[:, None])
+    comp = compfull | comppart
+    unfinished = (em[:, None] & slotv & ~comp) | (lo[:, None] & slotv)
+    units_slot = xp.where(compfull, u[:, None],
+                          xp.where(comppart, part[:, None], 0))
+    lat = t - ss.f_arr
+    # fixed-bin latency histogram: integer scatter-adds agree exactly
+    # across backends; percentiles come from the bins (metrics.py)
+    binw = sp.lat_max_s / sp.lat_bins
+    idx = xp.clip((lat / binw).astype(xp.int64), 0, sp.lat_bins - 1)
+    idx = xp.where(comp, idx, sp.lat_bins)  # non-completions -> dump bin
+    hist_ext = _scatter_add(xp.zeros(sp.lat_bins + 1, dtype=xp.int64),
+                            idx.reshape(-1), 1, xp)
+    # per-workload aggregates via the small one-hot W axis
+    wl1h = ss.f_wl[:, None, None] == xp.arange(sp.W)[None, None, :]
+    compc = (comp[:, :, None] & wl1h).astype(xp.int64)
+    Uw = sp.ACC.shape[1]
+    accv = xp.take(xp.asarray(sp.ACC).reshape(-1),
+                   ss.f_wl[:, None] * Uw + xp.clip(units_slot, 0, Uw - 1))
+    ss = ss._replace(
+        completed=ss.completed + xp.sum(comp),
+        completed_wl=ss.completed_wl + xp.sum(compc, axis=(0, 1)),
+        units_wl=ss.units_wl + xp.sum(units_slot[:, :, None] * compc,
+                                      axis=(0, 1)),
+        acc_wl=ss.acc_wl + xp.sum(xp.where(comp, accv, 0.0)[:, :, None]
+                                  * compc, axis=(0, 1)),
+        lat_sum=ss.lat_sum + xp.sum(xp.where(comp, lat, 0.0)),
+        lat_hist=ss.lat_hist + hist_ext[:sp.lat_bins])
+    ss = _requeue(sp, ss, unfinished, xp)
+    return ss._replace(f_n=xp.where(em | lo, 0, ss.f_n))
+
+
+def evict(sp: SchedParams, ss, t, xp=np):
+    """Straggler pass: revoke assignments that outlived the service
+    deadline implied by the worker's own MCU class (the device browned
+    out before acquiring, or recharges too slowly). Returns ``(ss, ev)``;
+    the caller clears the device's pending/in-flight flags for ``ev``."""
+    act = ss.f_n > 0
+    est = (xp.take(xp.asarray(sp.FIX), ss.f_wl)
+           + xp.take(xp.asarray(sp.EMITC), ss.f_wl)
+           + ss.f_n * xp.take(xp.asarray(sp.FULL), ss.f_wl)) / sp.ACTIVE_P
+    ev = act & (t - ss.f_t0 > sp.grace_s + sp.deadline_factor * est)
+    slots = ev[:, None] & (xp.arange(sp.B)[None, :] < ss.f_n[:, None])
+    ss = ss._replace(evicted=ss.evicted + xp.sum(xp.where(ev, ss.f_n, 0)))
+    ss = _requeue(sp, ss, slots, xp)
+    return ss._replace(f_n=xp.where(ev, 0, ss.f_n)), ev

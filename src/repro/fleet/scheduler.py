@@ -1,55 +1,37 @@
-"""Central energy-aware dispatcher for the fleet worker pool.
+"""Forecast-aware fleet dispatcher: a thin host frontend over the
+array-native control plane (``repro.fleet.sched``).
 
 The scheduler owns the global request stream and answers, every dispatch
 tick, the fleet version of the paper's per-sample question: *which worker
 should run this request, at which knob setting, so the result is emitted
-within the worker's current power cycle?*
+within the worker's current power cycle?* Since PR 3 the answer is
+computed by pure struct-of-arrays ops (queue ring-buffers, cumulative-sum
+batching, stable-sort routing) instead of a per-request Python object
+loop, so the same expressions run in two modes:
 
-Mechanisms (each maps to a single-device concept):
+- ``backend="numpy"`` pools: :class:`FleetScheduler` drives the array ops
+  tick-by-tick on the host — the bit-exact reference cadence;
+- ``backend="jax"`` pools: :func:`run_fleet` hands the whole serve trace
+  to ``backend_jax.run_serve`` — workers **and** scheduler fused into a
+  single ``lax.scan`` device launch with no per-macro-step host
+  round-trips.
 
-- **Admission control** — a bounded queue; arrivals beyond ``max_queue``
-  are rejected outright (the SMART "skip the round" rule, applied at the
-  fleet's front door).
-- **Energy-proportional routing** — idle workers are ranked by usable
-  capacitor energy; the oldest queued request goes to the richest worker,
-  i.e. to the worker whose budget affords the highest expected-accuracy
-  knob. Per-worker knob choice literally reuses ``core.policies``
-  (``Smart`` admission at the workload's accuracy floor, greedy
-  refinement via ``CostTable``).
-- **Batching** — several queued requests of one workload can ride one
-  power cycle, paying the fixed (acquisition/setup) and emission cost
-  once; the batch size is the largest that still affords the floor knob.
-- **Load shedding** — queued requests older than ``shed_after_s`` are
-  dropped: a stale approximate answer is worth less than no answer, and
-  the energy is better spent on fresh requests (the paper processes the
-  *newest* pending sample for the same reason).
-- **Straggler eviction** — assignments that outlive the deadline implied
-  by ``runtime.straggler.StragglerPolicy`` (the worker browned out before
-  acquiring, or recharges too slowly) are evicted and requeued, exactly
-  like a slow shard being skipped for a step; ``runtime.preemption``'s
-  lost-work bookkeeping shows up here as the retry budget.
+Routing is *forecast-aware* (``sched="forecast"``): workers are ranked —
+and batches sized — by the closed-form OU conditional expectation of
+usable energy over the next ``lookahead_s`` window instead of
+instantaneous charge (``repro.core.energy`` forecaster; ROADMAP
+"scheduler lookahead"). ``sched="reactive"`` is the PR-1 behavior.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-
 import numpy as np
 
-from repro.core.policies import Greedy, Policy, Smart
-from repro.fleet.metrics import FleetMetrics, RequestRecord
-from repro.fleet.worker import EMIT, LOST, FleetWorkerPool
+from repro.fleet import backend_numpy, sched as _sched
+from repro.fleet.metrics import sched_summary
+from repro.fleet.state import (sched_state_as_tuple, sched_state_from_tuple)
+from repro.fleet.worker import EMIT, FleetWorkerPool
 from repro.fleet.workloads import FleetWorkload
 from repro.runtime.straggler import StragglerPolicy
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    workload: int
-    t_arrival: float
-    retries: int = 0
-    t_assigned: float = -1.0
 
 
 class RequestStream:
@@ -68,8 +50,27 @@ class RequestStream:
         """Workload indices of the requests arriving at step ``i``."""
         return self.wl[self.offsets[i]:self.offsets[i + 1]]
 
+    def counts_matrix(self, n_workloads: int) -> np.ndarray:
+        """(n_steps, W) per-tick arrival counts — the array-native form
+        the fused serve scan consumes as its ``lax.scan`` input."""
+        n_steps = self.counts.shape[0]
+        out = np.zeros((n_steps, n_workloads), dtype=np.int64)
+        step = np.repeat(np.arange(n_steps), self.counts)
+        np.add.at(out, (step, self.wl), 1)
+        return out
+
 
 class FleetScheduler:
+    """Host handle over (``SchedParams``, ``SchedState``) for one pool.
+
+    Construction compiles the workload tables into stacked arrays and
+    fits the per-trace-row harvest forecaster; ``submit`` / ``dispatch``
+    / ``collect`` evaluate the shared control-plane expressions with
+    ``xp=numpy`` against the pool's live state (the reference path). The
+    fused JAX path bypasses these methods and runs the identical
+    expressions inside the device scan.
+    """
+
     def __init__(self, pool: FleetWorkerPool,
                  workloads: list[FleetWorkload], *,
                  max_queue: int = 4096,
@@ -77,214 +78,126 @@ class FleetScheduler:
                  max_batch: int = 4,
                  max_retries: int = 2,
                  grace_s: float = 20.0,
-                 straggler: StragglerPolicy | None = None):
+                 straggler: StragglerPolicy | None = None,
+                 sched: str = "reactive",
+                 lookahead_s: float = 5.0,
+                 lat_bins: int = 64):
         if pool.mode != "dispatch":
             raise ValueError("scheduler needs a dispatch-mode pool")
         self.pool = pool
         self.workloads = workloads
-        self.max_queue = max_queue
-        self.shed_after_s = shed_after_s
-        self.max_batch = max_batch
-        self.max_retries = max_retries
-        self.grace_s = grace_s
-        self.straggler = straggler or StragglerPolicy()
-        self.queues: list[collections.deque[Request]] = [
-            collections.deque() for _ in workloads]
-        # per-workload admission policy: SMART at the workload's floor
-        # (Greedy when no floor), plus cached cost prefixes for batching
-        self.admission: list[Policy] = [
-            Smart(w.floor) if w.floor > 0 else Greedy() for w in workloads]
-        self._cu = [np.concatenate([[0.0], np.cumsum(w.costs.unit_costs)])
-                    for w in workloads]
-        self.inflight: dict[int, tuple[list[Request], float, int]] = {}
-        self.metrics = FleetMetrics()
-        self._ticket = 0
-        self._rid = 0
+        straggler = straggler or StragglerPolicy()
+        self.params = _sched.make_sched_params(
+            pool.params, workloads, max_queue=max_queue,
+            shed_after_s=shed_after_s, max_batch=max_batch,
+            max_retries=max_retries, grace_s=grace_s,
+            deadline_factor=straggler.deadline_factor, sched=sched,
+            lookahead_s=lookahead_s, lat_bins=lat_bins)
+        self.state = _sched.make_sched_state(self.params)
+
+    # -- state plumbing ------------------------------------------------------
+
+    def _ss(self) -> _sched.SS:
+        return _sched.SS(*sched_state_as_tuple(self.state))
+
+    def _store(self, ss) -> None:
+        self.state = sched_state_from_tuple(tuple(ss))
+
+    @property
+    def backlog(self) -> int:
+        """Requests currently queued (all workloads)."""
+        return int(self.state.q_len.sum())
+
+    @property
+    def inflight_count(self) -> int:
+        """Requests currently assigned to (pending or running on) workers."""
+        return int(self.state.f_n.sum())
+
+    def summary(self, duration_s: float) -> dict:
+        return sched_summary(self.params, self.state, duration_s,
+                             self.pool, [w.name for w in self.workloads])
 
     # -- intake --------------------------------------------------------------
 
     def submit(self, t: float, workload_ids: np.ndarray) -> None:
         """Admit arrivals; reject beyond the global queue bound."""
-        backlog = sum(len(q) for q in self.queues)
-        for wl in workload_ids:
-            self.metrics.submitted += 1
-            if backlog >= self.max_queue:
-                self.metrics.rejected += 1
-                continue
-            self.queues[int(wl)].append(Request(self._rid, int(wl), t))
-            self._rid += 1
-            backlog += 1
+        counts = np.bincount(np.asarray(workload_ids, dtype=np.int64),
+                             minlength=self.params.W).astype(np.int64)
+        self._store(_sched.admit(self.params, self._ss(), counts,
+                                 float(t), np))
 
     # -- dispatch ------------------------------------------------------------
 
-    def dispatch(self, t: float) -> int:
-        """Shed stale work, then route queued requests to capable workers.
-        Returns the number of requests assigned this tick."""
-        self._shed(t)
-        if not any(self.queues):
-            return 0
-        idle = np.nonzero(self.pool.dispatchable())[0]
-        if idle.size == 0:
-            return 0
-        usable = self.pool.usable_energy()
-        order = idle[np.argsort(-usable[idle])]  # richest worker first
-        assigned = 0
-        ptr = 0
-        while ptr < order.size:
-            # oldest head request across workload queues (FIFO fairness)
-            heads = [(q[0].t_arrival, wl) for wl, q in enumerate(self.queues)
-                     if q]
-            if not heads:
-                break
-            heads.sort()
-            w = int(order[ptr])
-            budget = float(usable[w])
-            placed = 0
-            for _, wl in heads:
-                placed = self._try_assign(w, wl, budget, t)
-                if placed:
-                    assigned += placed
-                    break
-            if not placed:
-                # the RICHEST remaining worker cannot afford any queue's
-                # floor knob; poorer workers cannot either — stop here
-                break
-            ptr += 1
-        return assigned
-
-    def _try_assign(self, w: int, wl: int, budget: float, t: float) -> int:
-        """Assign a batch from queue ``wl`` to worker ``w`` if the worker's
-        budget affords the workload's floor knob; returns the batch size
-        (0: not affordable)."""
-        wk = self.workloads[wl]
-        d = self.admission[wl].decide(budget, wk.costs, wk.accuracy)
-        if d.skipped:
-            return 0
-        p_req = d.initial_units
-        cu = self._cu[wl]
-        overhead = wk.costs.fixed_cost + wk.costs.emit_cost
-        spendable = budget - overhead
-        q = self.queues[wl]
-        # batch: how many floor-knob requests ride this power cycle?
-        if cu[p_req] > 0:
-            b = int(spendable // cu[p_req])
-        else:
-            b = self.max_batch
-        b = max(1, min(b, self.max_batch, len(q)))
-        # greedy refinement: the largest per-request knob the batch affords
-        if d.refine_greedily:
-            u = int(np.searchsorted(cu, spendable / b, side="right") - 1)
-            u = max(p_req, min(u, wk.costs.n_units))
-        else:
-            u = p_req
-        if u <= 0:
-            return 0  # zero-work assignment: nothing worth emitting
-        reqs = [q.popleft() for _ in range(b)]
-        for r in reqs:
-            r.t_assigned = t
-        ticket = self._ticket
-        self._ticket += 1
-        self.pool.assign(np.array([w]), np.array([ticket]),
-                         np.array([wl]), np.array([u]), np.array([b]), t)
-        self.inflight[ticket] = (reqs, t, w)
-        return b
+    def dispatch(self, t: float, i: int | None = None) -> int:
+        """Shed stale work, then route queued requests to capable workers
+        (richest planning budget first). Returns requests assigned."""
+        sp = self.params
+        p = self.pool.params
+        s = self.pool.state
+        if i is None:
+            i = int(round(t / p.dt))
+        ss = _sched.shed(sp, self._ss(), float(t), np)
+        budget_now = backend_numpy.usable_energy(p, s)
+        col = (i % p.T) if p.phase is None else (i + p.phase) % p.T
+        pw = p.power[p.trace_index, col]
+        budget_plan = _sched.plan_budget(sp, budget_now, pw, p.eff, np)
+        dispatchable = s.on & ~s.has_work & ~s.p_pending
+        ss, a = _sched.dispatch(sp, ss, dispatchable, budget_now,
+                                budget_plan, float(t), np)
+        s.p_pending = s.p_pending | a.mask
+        s.p_wl = np.where(a.mask, a.wl, s.p_wl)
+        s.p_units = np.where(a.mask, a.units, s.p_units)
+        s.p_batch = np.where(a.mask, np.maximum(a.batch, 1), s.p_batch)
+        s.p_t_assigned = np.where(a.mask, float(t), s.p_t_assigned)
+        self._store(ss)
+        return int(a.batch.sum())
 
     # -- harvest results / losses -------------------------------------------
 
     def collect(self, t: float, evict: bool = False) -> None:
+        """Retire the pool's emit/loss events through the array control
+        plane; optionally run the straggler-eviction pass."""
+        n = self.params.n
+        emit = np.zeros(n, dtype=bool)
+        lost = np.zeros(n, dtype=bool)
+        units = np.zeros(n, dtype=np.int64)
         for ev in self.pool.pop_events():
-            kind, t_ev, w, ticket = ev[0], ev[1], ev[2], ev[3]
-            entry = self.inflight.pop(ticket, None)
-            if entry is None:
-                continue
-            reqs, _, _ = entry
-            if kind == EMIT:
-                _, _, _, _, units_done, req_units, batch = ev
-                full = units_done // req_units if req_units > 0 else len(reqs)
-                part = units_done % req_units if req_units > 0 else 0
-                wl = reqs[0].workload
-                acc = self.workloads[wl].accuracy
-                for j, r in enumerate(reqs):
-                    if j < full:
-                        units = req_units
-                    elif j == full and part > 0:
-                        units = part  # anytime partial result, still emitted
-                    else:
-                        self._retry(r, t)
-                        continue
-                    self.metrics.observe_completion(RequestRecord(
-                        r.rid, r.workload, r.t_arrival, r.t_assigned, t_ev,
-                        int(units), int(w), int(batch),
-                        float(acc[int(units)])))
-            elif kind == LOST:
-                for r in reqs:
-                    self._retry(r, t)
+            w = int(ev[2])
+            if ev[0] == EMIT:
+                emit[w] = True
+                units[w] = int(ev[4])
+            else:
+                lost[w] = True
+        ss = _sched.collect(self.params, self._ss(), emit, lost, units,
+                            float(t), np)
         if evict:
-            self._evict_stragglers(t)
-
-    def _retry(self, r: Request, t: float) -> None:
-        r.retries += 1
-        if r.retries > self.max_retries:
-            self.metrics.lost += 1
-        else:
-            self.metrics.requeued += 1
-            self.queues[r.workload].appendleft(r)
-
-    def _shed(self, t: float) -> None:
-        for q in self.queues:
-            while q and t - q[0].t_arrival > self.shed_after_s:
-                q.popleft()
-                self.metrics.shed += 1
-
-    def _evict_stragglers(self, t: float) -> None:
-        """Revoke assignments that outlived their service deadline: the
-        worker browned out before acquiring, or recharges too slowly."""
-        active_p = self.pool.mcu.active_power_w
-        stale: list[tuple[int, int]] = []
-        for ticket, (reqs, t_assigned, w) in self.inflight.items():
-            wl = reqs[0].workload
-            wk = self.workloads[wl]
-            est = (wk.costs.fixed_cost + wk.costs.emit_cost
-                   + len(reqs) * self._cu[wl][-1]) / active_p
-            if t - t_assigned > self.grace_s + self.straggler.deadline_s(est):
-                stale.append((ticket, w))
-        for ticket, w in stale:
-            revoked = self.pool.evict(np.array([w]))
-            if ticket not in revoked:
-                continue  # raced with an emit/loss; next collect settles it
-            reqs, _, _ = self.inflight.pop(ticket)
-            self.metrics.evicted += len(reqs)
-            for r in reqs:
-                self._retry(r, t)
+            ss, evm = _sched.evict(self.params, ss, float(t), np)
+            s = self.pool.state
+            s.p_pending = s.p_pending & ~evm
+            s.has_work = s.has_work & ~evm
+        self._store(ss)
 
 
 def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
               stream: RequestStream, n_steps: int, *,
               dispatch_every: int = 10) -> dict:
-    """Drive arrivals -> dispatch -> device physics -> collection.
+    """Drive arrivals -> control plane -> device physics -> collection.
 
-    With a NumPy pool the loop advances tick-by-tick (the reference
-    cadence). With a JAX pool the device physics run as fused macro-steps:
-    one ``lax.scan`` launch per scheduler interval, with arrivals logged
-    at their true per-tick times, assignments made at the macro boundary
-    (exactly where the per-tick loop makes them, since ``dispatch`` only
-    fires every ``dispatch_every`` ticks), and the scan's fixed-capacity
-    event arrays collected once per macro-step.
+    With a NumPy pool the loop advances tick-by-tick on the host (the
+    reference cadence). With a JAX pool the *entire* serve trace —
+    arrivals, admission, routing, batching, shedding, eviction, and the
+    device physics — runs as one fused ``lax.scan`` launch
+    (``backend_jax.run_serve``): the arrival counts matrix is the scan
+    input, the dispatch/evict passes fire under a ``lax.cond`` every
+    ``dispatch_every`` ticks, and only the final states return to the
+    host. Both paths evaluate the same control-plane expressions and
+    agree exactly on all discrete counts.
     """
     dt = pool.dt
-    names = [w.name for w in sched.workloads]
     if getattr(pool, "backend", "numpy") == "jax":
-        for i0 in range(0, n_steps, dispatch_every):
-            k = min(dispatch_every, n_steps - i0)
-            sched.submit(i0 * dt, stream.arrivals(i0))
-            sched.dispatch(i0 * dt)
-            for i in range(i0 + 1, i0 + k):
-                wls = stream.arrivals(i)
-                if wls.size:
-                    sched.submit(i * dt, wls)
-            pool.step_macro(i0, k)
-            sched.collect((i0 + k - 1) * dt, evict=True)
-        return sched.metrics.summary(n_steps * dt, pool, names)
+        arrivals = stream.counts_matrix(sched.params.W)[:n_steps]
+        pool.run_serve(sched, arrivals, dispatch_every=dispatch_every)
+        return sched.summary(n_steps * dt)
     for i in range(n_steps):
         t = i * dt
         wls = stream.arrivals(i)
@@ -292,7 +205,7 @@ def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
             sched.submit(t, wls)
         tick = i % dispatch_every == 0
         if tick:
-            sched.dispatch(t)
+            sched.dispatch(t, i)
         pool.step(i)
         sched.collect(t, evict=tick)
-    return sched.metrics.summary(n_steps * dt, pool, names)
+    return sched.summary(n_steps * dt)

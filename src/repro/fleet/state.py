@@ -45,7 +45,7 @@ class FleetParams:
     v_on: float
     v_off: float
     eff: float  # booster efficiency
-    active_power_w: float  # MCU active draw
+    active_power_w: np.ndarray  # (N,) MCU active draw (MCU-class mixing)
     # stacked workload tables: (W, U_max) unit costs padded with +inf
     UC: np.ndarray
     FIX: np.ndarray  # (W,)
@@ -125,6 +125,113 @@ def state_as_tuple(s: FleetState) -> tuple:
 
 def state_from_tuple(t: Sequence) -> FleetState:
     return FleetState(**dict(zip(STATE_FIELDS, t)))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler control plane (array-native: repro.fleet.sched)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedParams:
+    """Static control-plane configuration: everything the array-native
+    scheduler step (``repro.fleet.sched``) reads but never writes. Pure
+    NumPy constants; the JAX backend converts them once at build time."""
+
+    n: int  # workers
+    W: int  # workloads
+    Q: int  # queue ring capacity per workload
+    B: int  # max batch per assignment
+    max_queue: int  # global admission bound (queued requests)
+    max_retries: int
+    shed_after_s: float
+    grace_s: float
+    deadline_factor: float  # straggler deadline = grace + factor * est
+    dt: float
+    # stacked workload tables, padded with +inf beyond each table's units
+    CU: np.ndarray  # (W, U+1) CostTable.cumulative (incl fixed+emit)
+    UCUM: np.ndarray  # (W, U+1) unit-cost prefix (excl fixed/emit)
+    FIX: np.ndarray  # (W,)
+    EMITC: np.ndarray  # (W,)
+    NU: np.ndarray  # (W,) int64
+    FULL: np.ndarray  # (W,) cost of all units (straggler estimate)
+    ACC: np.ndarray  # (W, U+1) expected-accuracy tables
+    P_REQ: np.ndarray  # (W,) SMART floor units (huge sentinel: see
+    # sched._BIG -> the floor is unattainable and admission always skips)
+    IS_SMART: np.ndarray  # (W,) bool; False -> greedy admission
+    # forecast routing (repro.core.energy closed forms)
+    forecast: bool
+    lookahead_ticks: int
+    MU: np.ndarray  # (N,) per-worker trace-row mean power
+    GAIN: np.ndarray  # (N,) forecast_gain(theta_row, lookahead)
+    ECAP: np.ndarray  # (N,) storable usable-energy ceiling
+    ACTIVE_P: np.ndarray  # (N,) per-worker MCU active power
+    # latency histogram (fused-scan-friendly percentile estimates)
+    lat_bins: int
+    lat_max_s: float
+
+
+@dataclasses.dataclass
+class SchedState:
+    """Everything one scheduler tick reads or writes — queue ring-buffers,
+    per-worker in-flight assignments, and aggregate accounting. All
+    counters are arrays (0-d for scalars) so the state threads through a
+    ``lax.scan`` carry unchanged."""
+
+    # per-workload FIFO ring buffers (front = oldest; retries re-enter at
+    # the front with their original arrival time)
+    q_t: np.ndarray  # (W, Q) arrival times
+    q_r: np.ndarray  # (W, Q) retry counts
+    q_head: np.ndarray  # (W,) physical index of the logical front
+    q_len: np.ndarray  # (W,)
+    # per-worker in-flight assignment (mirrors the device's pending/work)
+    f_n: np.ndarray  # (N,) requests in flight; 0 = none
+    f_wl: np.ndarray  # (N,)
+    f_units: np.ndarray  # (N,) per-request knob units
+    f_t0: np.ndarray  # (N,) assignment time
+    f_arr: np.ndarray  # (N, B) request arrival times
+    f_retry: np.ndarray  # (N, B) request retry counts
+    # aggregate accounting (0-d / small arrays; the fused scan returns no
+    # per-request records, exactly like the worker backends' counters)
+    submitted: np.ndarray
+    rejected: np.ndarray
+    shed: np.ndarray
+    lost: np.ndarray
+    evicted: np.ndarray
+    requeued: np.ndarray
+    completed: np.ndarray
+    completed_wl: np.ndarray  # (W,)
+    units_wl: np.ndarray  # (W,)
+    acc_wl: np.ndarray  # (W,)
+    lat_sum: np.ndarray
+    lat_hist: np.ndarray  # (lat_bins,)
+    batch_hist: np.ndarray  # (B+1,) assignments by batch size
+
+
+SCHED_FIELDS: tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(SchedState))
+
+
+def init_sched_state(sp: SchedParams) -> SchedState:
+    i = lambda *s: np.zeros(s, dtype=np.int64)  # noqa: E731
+    f = lambda *s: np.zeros(s, dtype=np.float64)  # noqa: E731
+    return SchedState(
+        q_t=f(sp.W, sp.Q), q_r=i(sp.W, sp.Q), q_head=i(sp.W),
+        q_len=i(sp.W),
+        f_n=i(sp.n), f_wl=i(sp.n), f_units=i(sp.n), f_t0=f(sp.n),
+        f_arr=f(sp.n, sp.B), f_retry=i(sp.n, sp.B),
+        submitted=i(), rejected=i(), shed=i(), lost=i(), evicted=i(),
+        requeued=i(), completed=i(),
+        completed_wl=i(sp.W), units_wl=i(sp.W), acc_wl=f(sp.W),
+        lat_sum=f(), lat_hist=i(sp.lat_bins), batch_hist=i(sp.B + 1))
+
+
+def sched_state_as_tuple(s: SchedState) -> tuple:
+    return tuple(getattr(s, f) for f in SCHED_FIELDS)
+
+
+def sched_state_from_tuple(t: Sequence) -> SchedState:
+    return SchedState(**dict(zip(SCHED_FIELDS, t)))
 
 
 def stack_cost_tables(workloads: Sequence[CostTable]

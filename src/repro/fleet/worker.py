@@ -114,6 +114,7 @@ class FleetWorkerPool:
                  cap: Capacitor | None = None,
                  capacitance_f: np.ndarray | float | None = None,
                  v_max: np.ndarray | float | None = None,
+                 active_power_w: np.ndarray | float | None = None,
                  backend: str = "numpy",
                  use_pallas: bool = False):
         if mode not in ("local", "dispatch"):
@@ -139,6 +140,11 @@ class FleetWorkerPool:
             dtype=np.float64), (n,)).copy()
         UC, FIX, EMITC, NU = stack_cost_tables(workloads)
         self.mcu = mcu or McuEnergyModel()
+        # per-worker active draw: MCU-class mixing (heterogeneous fleets);
+        # a scalar broadcasts to the homogeneous reference device
+        AP = np.broadcast_to(np.asarray(
+            self.mcu.active_power_w if active_power_w is None
+            else active_power_w, dtype=np.float64), (n,)).copy()
         self.params = FleetParams(
             dt=float(dt), n=n, T=T, mode=mode, power=power,
             trace_index=(np.arange(n) % power.shape[0]
@@ -148,7 +154,7 @@ class FleetWorkerPool:
                    else np.asarray(phase, dtype=np.int64) % T),
             C=C, v_max=vmax, v_on=float(cap.v_on), v_off=float(cap.v_off),
             eff=float(cap.booster_eff),
-            active_power_w=float(self.mcu.active_power_w),
+            active_power_w=AP,
             UC=UC, FIX=FIX, EMITC=EMITC, NU=NU, tables=tuple(workloads),
             P=float(sampling_period_s), policy=policy,
             acc=accuracy_table)
@@ -270,6 +276,25 @@ class FleetWorkerPool:
         else:
             for i in range(i0, i0 + n_ticks):
                 self.step(i)
+
+    def run_serve(self, sched, arrivals: np.ndarray, *,
+                  dispatch_every: int = 10) -> None:
+        """Fused serve: device physics AND the array-native scheduler as
+        one ``lax.scan`` launch (JAX backend only; the NumPy reference
+        drives the same control-plane expressions tick-by-tick through
+        ``repro.fleet.scheduler.run_fleet``). ``sched`` is a
+        ``FleetScheduler``; its state is advanced in place."""
+        if self.backend != "jax":
+            raise ValueError("run_serve is the fused jax path; use "
+                             "run_fleet's per-tick driver for numpy pools")
+        if self._jax is None:
+            from repro.fleet.backend_jax import JaxFleetBackend
+            self._jax = JaxFleetBackend(self.params,
+                                        use_pallas=self.use_pallas)
+        self.state, sched.state = self._jax.run_serve(
+            self.state, sched.params, sched.state, arrivals,
+            i0=self.steps_done, dispatch_every=dispatch_every)
+        self.steps_done += int(np.asarray(arrivals).shape[0])
 
     # -- driving + accounting ------------------------------------------------
 

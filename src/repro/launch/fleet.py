@@ -3,16 +3,21 @@
     PYTHONPATH=src python -m repro.launch.fleet --workers 256 --duration 120
     PYTHONPATH=src python -m repro.launch.fleet --workers 1024 \
         --traces RF,SOM,SOR,SIR --scheduler both --json out.json
+    PYTHONPATH=src python -m repro.launch.fleet --workers 1024 \
+        --backend jax --sched forecast --lookahead 5 --traces SOM,SOR
     PYTHONPATH=src python -m repro.launch.fleet --workers 100000 \
-        --backend jax --scheduler off --hetero
+        --backend jax --scheduler off --hetero --hetero-mcu
 
 Builds a harvest-powered worker fleet over a mix of energy-trace families,
 then serves one global HAR + Harris + LM request stream either through the
-central energy-aware scheduler (``repro.fleet.scheduler``) or as
-independent self-sampling workers (the no-scheduler baseline), and prints
-the fleet metrics. ``--backend jax`` runs the device physics as fused
-``lax.scan`` launches (``repro.fleet.backend_jax``); ``--hetero`` mixes
-capacitor sizes across workers. The helpers here are reused by
+array-native control plane (``repro.fleet.sched``) or as independent
+self-sampling workers (the no-scheduler baseline), and prints the fleet
+metrics. ``--backend jax`` fuses the whole serve trace — workers and
+scheduler — into one ``lax.scan`` device launch; ``--sched forecast``
+routes and batches on the closed-form OU harvest forecast over the next
+``--lookahead`` seconds instead of instantaneous charge; ``--hetero``
+mixes capacitor sizes and ``--hetero-mcu`` mixes MCU classes (per-worker
+active power) across the fleet. The helpers here are reused by
 ``benchmarks/fleet_throughput.py`` and ``examples/fleet_serve.py``.
 """
 from __future__ import annotations
@@ -22,8 +27,9 @@ import json
 
 import numpy as np
 
-from repro.core.energy import Capacitor, get_trace
+from repro.core.energy import Capacitor, McuEnergyModel, get_trace
 from repro.core.policies import Greedy, Smart
+from repro.fleet.sched import SCHED_MODES
 from repro.fleet.scheduler import FleetScheduler, RequestStream, run_fleet
 from repro.fleet.worker import FleetWorkerPool, stack_traces
 from repro.fleet.workloads import (FleetWorkload, har_workload,
@@ -63,18 +69,32 @@ def hetero_capacitors(n_workers: int, seed: int = 0,
     return C, v_max
 
 
+def hetero_mcu(n_workers: int, seed: int = 0,
+               mcu: McuEnergyModel | None = None) -> np.ndarray:
+    """Per-worker active power for an MCU-class-heterogeneous fleet:
+    each worker draws one of {0.5x, 1x, 2x} the reference device's active
+    power (low-power, reference, and fast MCU bins)."""
+    mcu = mcu or McuEnergyModel()
+    rng = np.random.default_rng(seed + 1)
+    classes = mcu.active_power_w * np.array([0.5, 1.0, 2.0])
+    return rng.choice(classes, size=n_workers)
+
+
 def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
                         workloads: list[FleetWorkload],
                         seed: int = 0, *, backend: str = "numpy",
                         capacitance_f: np.ndarray | None = None,
-                        v_max: np.ndarray | None = None) -> FleetWorkerPool:
+                        v_max: np.ndarray | None = None,
+                        active_power_w: np.ndarray | None = None
+                        ) -> FleetWorkerPool:
     rng = np.random.default_rng(seed)
     return FleetWorkerPool(
         power, dt, workloads=[w.costs for w in workloads], mode="dispatch",
         n_workers=n_workers,
         trace_index=np.arange(n_workers) % power.shape[0],
         phase=rng.integers(0, power.shape[1], n_workers),
-        backend=backend, capacitance_f=capacitance_f, v_max=v_max)
+        backend=backend, capacitance_f=capacitance_f, v_max=v_max,
+        active_power_w=active_power_w)
 
 
 def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
@@ -82,17 +102,21 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   mix: np.ndarray, n_steps: int, seed: int = 0,
                   max_batch: int = 4, shed_after_s: float = 30.0,
                   dispatch_every: int = 10, backend: str = "numpy",
+                  sched: str = "reactive", lookahead_s: float = 5.0,
                   capacitance_f: np.ndarray | None = None,
-                  v_max: np.ndarray | None = None) -> dict:
+                  v_max: np.ndarray | None = None,
+                  active_power_w: np.ndarray | None = None) -> dict:
     pool = build_dispatch_pool(power, dt, n_workers, workloads, seed,
                                backend=backend, capacitance_f=capacitance_f,
-                               v_max=v_max)
-    sched = FleetScheduler(pool, workloads, max_batch=max_batch,
-                           shed_after_s=shed_after_s)
+                               v_max=v_max, active_power_w=active_power_w)
+    scheduler = FleetScheduler(pool, workloads, max_batch=max_batch,
+                               shed_after_s=shed_after_s, sched=sched,
+                               lookahead_s=lookahead_s)
     stream = RequestStream(rate_rps, mix, n_steps, dt, seed=seed + 1)
-    summary = run_fleet(pool, sched, stream, n_steps,
+    summary = run_fleet(pool, scheduler, stream, n_steps,
                         dispatch_every=dispatch_every)
     summary["mode"] = "scheduled"
+    summary["sched"] = sched
     summary["n_workers"] = n_workers
     summary["backend"] = backend
     return summary
@@ -103,7 +127,8 @@ def run_independent(power: np.ndarray, dt: float, n_workers: int,
                     period_s: float, n_steps: int, seed: int = 0,
                     backend: str = "numpy",
                     capacitance_f: np.ndarray | None = None,
-                    v_max: np.ndarray | None = None) -> dict:
+                    v_max: np.ndarray | None = None,
+                    active_power_w: np.ndarray | None = None) -> dict:
     """No-scheduler baseline: workers are pinned to a workload (by the
     request mix) and self-sample every ``period_s`` — same offered load
     as a ``rate_rps = n_workers / period_s`` stream, no routing.
@@ -135,7 +160,9 @@ def run_independent(power: np.ndarray, dt: float, n_workers: int,
             backend=backend,
             capacitance_f=(None if capacitance_f is None
                            else capacitance_f[sl]),
-            v_max=None if v_max is None else v_max[sl])
+            v_max=None if v_max is None else v_max[sl],
+            active_power_w=(None if active_power_w is None
+                            else active_power_w[sl]))
         st = pool.run(n_steps)
         completed += st.emitted
         skipped += st.skipped
@@ -180,6 +207,14 @@ def main(argv: list[str] | None = None) -> dict:
                          "jax lax.scan macro-steps")
     ap.add_argument("--hetero", action="store_true",
                     help="heterogeneous fleet: per-worker capacitance/v_max")
+    ap.add_argument("--hetero-mcu", action="store_true",
+                    help="MCU-class mixing: per-worker active power")
+    ap.add_argument("--sched", choices=SCHED_MODES, default="reactive",
+                    help="routing/batching budget: instantaneous charge "
+                         "(reactive) or the OU harvest forecast over the "
+                         "next --lookahead seconds (forecast)")
+    ap.add_argument("--lookahead", type=float, default=5.0,
+                    help="forecast horizon in seconds (sched=forecast)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--shed-after", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -202,9 +237,11 @@ def main(argv: list[str] | None = None) -> dict:
                               args.seed)
     n_steps = int(args.duration / args.dt)
     rate = args.workers / args.period
-    cf = vm = None
+    cf = vm = ap_w = None
     if args.hetero:
         cf, vm = hetero_capacitors(args.workers, args.seed)
+    if args.hetero_mcu:
+        ap_w = hetero_mcu(args.workers, args.seed)
 
     out: dict = {"config": vars(args)}
     if args.scheduler in ("on", "both"):
@@ -212,12 +249,14 @@ def main(argv: list[str] | None = None) -> dict:
             power, args.dt, args.workers, workloads, rate_rps=rate, mix=mix,
             n_steps=n_steps, seed=args.seed, max_batch=args.max_batch,
             shed_after_s=args.shed_after, backend=args.backend,
-            capacitance_f=cf, v_max=vm)
+            sched=args.sched, lookahead_s=args.lookahead,
+            capacitance_f=cf, v_max=vm, active_power_w=ap_w)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(
             power, args.dt, args.workers, workloads, mix=mix,
             period_s=args.period, n_steps=n_steps, seed=args.seed,
-            backend=args.backend, capacitance_f=cf, v_max=vm)
+            backend=args.backend, capacitance_f=cf, v_max=vm,
+            active_power_w=ap_w)
     if "scheduled" in out and "independent" in out:
         out["speedup_completed"] = (
             out["scheduled"]["completed"]

@@ -140,18 +140,19 @@ def test_scheduler_serves_all_workloads_and_accounts_requests():
     assert summary["completed"] > 0
     assert set(summary["per_workload"]) == {"har", "harris", "lm"}
     # request conservation: every submitted request is accounted for
-    backlog = sum(len(q) for q in sched.queues)
-    inflight = sum(len(reqs) for reqs, _, _ in sched.inflight.values())
-    pending = int(pool.p_pending.sum() + pool.has_work.sum())
     accounted = (summary["completed"] + summary["rejected"]
-                 + summary["shed"] + summary["lost"] + backlog + inflight)
+                 + summary["shed"] + summary["lost"] + sched.backlog
+                 + sched.inflight_count)
     assert accounted == summary["submitted"]
-    assert inflight >= pending  # every device-side ticket has an owner
-    # SMART admission: completions honor each workload's floor
-    for r in sched.metrics.completed:
-        wl = wls[r.workload]
-        p_floor = int(np.nonzero(wl.accuracy >= wl.floor)[0][0])
-        assert r.units >= min(p_floor, wl.costs.n_units) or r.units > 0
+    # every device-side assignment has a control-plane owner
+    pending = int(pool.p_pending.sum() + pool.has_work.sum())
+    assert int((sched.state.f_n > 0).sum()) >= pending
+    # SMART admission: mean delivered accuracy sits in the floored regime
+    # (partial anytime emissions may dip below a single request's floor,
+    # but the mix cannot collapse to zero-knob spam)
+    for name, per in summary["per_workload"].items():
+        assert per["mean_units"] > 0
+    assert summary["mean_expected_accuracy"] > 0.5
     assert summary["energy"]["conservation_ok"]
 
 
@@ -170,9 +171,9 @@ def test_scheduler_beats_independent_baseline():
     assert sched["completed"] > indep["completed"]
 
 
-def test_dispatch_batching_emits_per_request_results():
-    """A batch of b requests on one worker yields b completion records
-    sharing the fixed+emit overhead."""
+def test_dispatch_batching_amortizes_overhead():
+    """Several cheap requests ride one power cycle: the assignment batch
+    histogram must show multi-request batches."""
     wl = lm_workload()  # cheap workload -> batching actually happens
     power = make_power_matrix(["SOM"], 2, 30.0, DT, seed=7)
     pool = build_dispatch_pool(power, DT, 4, [wl], seed=7)
@@ -181,7 +182,7 @@ def test_dispatch_batching_emits_per_request_results():
     stream = RequestStream(8.0, np.array([1.0]), n_steps, DT, seed=8)
     summary = run_fleet(pool, sched, stream, n_steps)
     assert summary["completed"] > 0
-    assert any(r.batch > 1 for r in sched.metrics.completed)
+    assert sum(summary["batch_hist"][2:]) > 0  # batches of >= 2 happened
 
 
 def test_straggler_eviction_requeues_pending_on_dead_worker():
@@ -196,8 +197,9 @@ def test_straggler_eviction_requeues_pending_on_dead_worker():
     sched = FleetScheduler(pool, [wl], grace_s=5.0, max_retries=0,
                            shed_after_s=1e9)
     sched.submit(0.0, np.array([0]))
-    sched.dispatch(0.0)
+    sched.dispatch(0.0, 0)
     assert pool.p_pending[0]
+    assert sched.inflight_count == 1
     # ...but browns out before acquiring: the assignment is stuck
     pool.on[0] = False
     pool.v[0] = pool.v_off
@@ -206,9 +208,10 @@ def test_straggler_eviction_requeues_pending_on_dead_worker():
         t = i * DT
         pool.step(i)
         sched.collect(t, evict=(i % 10 == 0))
-        if not sched.inflight:
+        if sched.inflight_count == 0:
             t_fire = t
             break
     assert t_fire is not None, "assignment never evicted"
-    assert sched.metrics.evicted == 1
-    assert sched.metrics.lost == 1  # max_retries=0: loss is terminal
+    assert int(sched.state.evicted) == 1
+    assert not pool.p_pending[0]  # the device-side assignment is revoked
+    assert int(sched.state.lost) == 1  # max_retries=0: loss is terminal
