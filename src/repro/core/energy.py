@@ -257,73 +257,14 @@ def power_matrix(names: list[str], n_rows: int, duration_s: float = 600.0,
 
 
 # ---------------------------------------------------------------------------
-# Harvest forecasting (closed-form OU conditional expectation)
+# Harvest forecasting moved to ``repro.core.forecast`` (pluggable
+# forecaster subsystem: OU / occlusion / burst / AR(p)); names re-exported
+# here for compatibility with pre-refactor imports.
 # ---------------------------------------------------------------------------
-#
-# Every synthetic trace family is (a clipped, rescaled function of) the AR(1)
-# recurrence x[i+1] = (1-theta) x[i] + theta mu + sigma eps — the discrete
-# Ornstein-Uhlenbeck process of ``_ou_process``. Its conditional expectation
-# is closed-form:
-#
-#     E[x[i+k] | x[i]] = mu + (1-theta)^k (x[i] - mu)
-#
-# so the *average* forecast power over a lookahead window of L ticks is
-#
-#     E[p̄ | p(t)] = mu + g (p(t) - mu),   g = a (1 - a^L) / (theta L),
-#
-# with a = 1-theta (the geometric sum of the decay weights divided by L).
-# The fleet scheduler uses this to rank workers by *forecast usable energy
-# over the next power cycle* instead of instantaneous charge: a worker on a
-# rich, mean-reverting solar trace that is momentarily occluded still
-# outranks a worker on a scarce trace that is momentarily charged. theta is
-# fit per trace row from the bank itself (lag-1 autocorrelation), so the
-# forecaster needs no out-of-band family labels and degrades gracefully on
-# bursty (RF/KIN) rows: low autocorrelation -> g near the no-memory limit,
-# where the forecast collapses toward the row mean.
 
-
-def fit_ou_theta(power: np.ndarray, eps: float = 1e-12) -> np.ndarray:
-    """Per-row OU mean-reversion rate, fit by the lag-1 autocorrelation of
-    each harvested-power row: for AR(1), corr(x[i], x[i+1]) = 1 - theta.
-    ``power`` is (R, T); returns (R,) theta clipped into (0, 1]."""
-    p = np.asarray(power, dtype=np.float64)
-    mu = p.mean(axis=1, keepdims=True)
-    d = p - mu
-    var = np.mean(d * d, axis=1)
-    cov = np.mean(d[:, :-1] * d[:, 1:], axis=1)
-    rho = cov / np.maximum(var, eps)
-    return np.clip(1.0 - rho, 1e-6, 1.0)
-
-
-def forecast_gain(theta, lookahead_ticks: int, xp=np):
-    """Weight ``g`` of the current deviation-from-mean in the window-average
-    OU forecast: g = a (1 - a^L) / (theta L), a = 1 - theta. Closed form of
-    mean_{k=1..L} (1-theta)^k; g -> 1 as theta -> 0 (random walk: forecast
-    is the present), g -> 0 as theta -> 1 (white noise: forecast is the
-    mean)."""
-    L = max(int(lookahead_ticks), 1)
-    a = 1.0 - theta
-    return a * (1.0 - a ** L) / (theta * L)
-
-
-def forecast_power(p_now, mu, gain, xp=np):
-    """E[mean power over the lookahead window | current power]; ``mu`` is
-    the per-row trace mean, ``gain`` from :func:`forecast_gain`."""
-    return mu + (p_now - mu) * gain
-
-
-def forecast_usable_energy(usable_now, p_now, lookahead_s, *, e_cap,
-                           booster_eff, mu, gain, xp=np):
-    """Forecast usable energy at the end of the lookahead window: the
-    current usable charge (``capacitor_usable_energy``) plus the expected
-    banked harvest, capped at the buffer's storable ceiling ``e_cap`` =
-    0.5 C (v_max^2 - v_off^2). The single implementation of the
-    forecast-budget formula — the fleet control plane's ``plan_budget``
-    delegates here. Same xp-generic contract as the capacitor helpers:
-    scalars or (N,) arrays, numpy or jnp."""
-    inflow = booster_eff * forecast_power(p_now, mu, gain, xp=xp) \
-        * lookahead_s
-    return xp.minimum(usable_now + inflow, e_cap)
+from repro.core.forecast import (fit_ou_theta, forecast_gain,  # noqa: F401,E402
+                                 forecast_power,
+                                 forecast_usable_energy)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,672 @@
+"""Pluggable harvest forecasters: conditional-expectation models per source.
+
+The fleet control plane (``repro.fleet.sched``) routes requests to workers
+and sizes batches against *forecast* usable energy — current charge plus
+the expected banked harvest over a lookahead window. PR 3 hard-wired one
+forecast model (the closed-form OU conditional expectation) into
+``core/energy.py``; this module makes the forecaster pluggable, because
+the paper's own energy sources are regime-switching and a mean-reverting
+conditional expectation is systematically wrong for them:
+
+- ``ou`` — the original lag-1 OU fit (refactored here, bit-exact with the
+  PR-3 closed forms). Right for the smooth static solar families
+  (SOR/SIR), where harvest mean-reverts on one timescale.
+- ``occlusion`` — a two-state (clear/occluded) regime mixture for mobile
+  solar (SOM/SIM): a per-row 1-D 2-means split on power level, Markov
+  transition rates between the regimes, and a forecast conditioned on the
+  *current* regime. A momentarily occluded worker is forecast to recover
+  at the fitted occlusion-clearing rate instead of the (much slower) OU
+  mean reversion.
+- ``burst`` — an on/off burst process for RF (Mementos-style beam
+  sweeps): on/off dwell parameters of the activity indicator and the
+  expected duty-cycled inflow conditioned on whether the beam is on the
+  device right now.
+- ``arp`` — a learned per-row AR(p) least-squares fit with closed-form
+  multi-step window sums (companion-matrix weight recursion evaluated
+  once at fit/compile time), for banks whose family is unknown.
+
+Every forecaster exposes the same surface —
+
+    ``fit(rows) -> params``                 per-row parameter arrays
+    ``gain(params, lookahead_ticks)``       window-mean deviation weights
+    ``compile(params, lookahead_ticks)``    -> :class:`RowForecast`
+    ``forecast_power(...)`` / ``usable_energy(...)``
+
+— and every fitted model compiles to the same *unified runtime form*
+(:class:`RowForecast`), so the scheduler's planning budget stays one
+xp-parametric expression (``xp`` is numpy or jax.numpy) evaluated
+identically by the NumPy host driver and inside the fused JAX serve scan:
+
+    E[mean power over the next L ticks | now]
+        = MU + sum_j W_j * (lag_j - MU) + (HI if p_now >= THRESH else LO)
+
+Continuous models (ou/arp) use the ``MU``/``W`` affine part and disable
+the regime step (``THRESH = +inf``, ``HI = LO = 0``); regime models
+(occlusion/burst) use the step and zero the affine part. Units: power in
+watts, energy in joules, lookaheads in ticks of ``dt`` seconds.
+
+Guarantees (pinned by tests/test_forecast.py): forecasts are nonnegative
+and forecast usable energy is nondecreasing in the lookahead for lag
+values inside the fitted row's observed range — per-step conditional
+expectations are convex combinations of nonnegative quantities for
+ou/occlusion/burst, and the AR(p) step weights are shrunk toward zero
+until the worst-case forecast over the observed lag box is nonnegative
+(which doubles as divergence control for unstable fits).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+# selection modes: the four models plus per-row automatic selection
+FORECASTER_NAMES = ("ou", "occlusion", "burst", "arp")
+FORECASTER_MODES = FORECASTER_NAMES + ("auto",)
+
+# RowForecast.model codes (int8), for reporting which model drives a row
+MODEL_CODES = {name: i for i, name in enumerate(FORECASTER_NAMES)}
+
+# trace family -> matched forecaster ("auto" mode with family labels):
+# mobile solar gets the occlusion regime model, RF/kinetic the burst
+# model, static solar the OU mean reversion
+FAMILY_FORECASTER = {
+    "SOM": "occlusion", "SIM": "occlusion",
+    "SOR": "ou", "SIR": "ou",
+    "RF": "burst", "KIN": "burst",
+}
+
+
+# ---------------------------------------------------------------------------
+# Closed forms (moved verbatim from core/energy.py — the PR-3 OU forecaster)
+# ---------------------------------------------------------------------------
+#
+# Every synthetic solar family is (a clipped, rescaled function of) the
+# AR(1) recurrence x[i+1] = (1-theta) x[i] + theta mu + sigma eps — the
+# discrete Ornstein-Uhlenbeck process. Its conditional expectation is
+# closed-form:
+#
+#     E[x[i+k] | x[i]] = mu + (1-theta)^k (x[i] - mu)
+#
+# so the *average* forecast power over a lookahead window of L ticks is
+#
+#     E[p̄ | p(t)] = mu + g (p(t) - mu),   g = a (1 - a^L) / (theta L),
+#
+# with a = 1-theta (the geometric sum of the decay weights divided by L).
+
+
+def fit_ou_theta(power: np.ndarray, eps: float = 1e-12) -> np.ndarray:
+    """Per-row OU mean-reversion rate, fit by the lag-1 autocorrelation of
+    each harvested-power row: for AR(1), corr(x[i], x[i+1]) = 1 - theta.
+
+    Args:
+        power: (R, T) harvested power rows, watts.
+        eps: variance floor (W^2) guarding constant rows.
+    Returns:
+        (R,) theta, dimensionless per-tick rate, clipped into (0, 1].
+    """
+    p = np.asarray(power, dtype=np.float64)
+    mu = p.mean(axis=1, keepdims=True)
+    d = p - mu
+    var = np.mean(d * d, axis=1)
+    cov = np.mean(d[:, :-1] * d[:, 1:], axis=1)
+    rho = cov / np.maximum(var, eps)
+    return np.clip(1.0 - rho, 1e-6, 1.0)
+
+
+def forecast_gain(theta, lookahead_ticks: int, xp=np):
+    """Weight ``g`` of the current deviation-from-mean in the window-average
+    OU forecast: g = a (1 - a^L) / (theta L), a = 1 - theta. Closed form of
+    mean_{k=1..L} (1-theta)^k; g -> 1 as theta -> 0 (random walk: forecast
+    is the present), g -> 0 as theta -> 1 (white noise: forecast is the
+    mean).
+
+    Args:
+        theta: per-tick mean-reversion rate in (0, 1], scalar or (R,).
+        lookahead_ticks: window length L in ticks (>= 1 enforced).
+    Returns:
+        dimensionless gain, same shape as ``theta``.
+    """
+    L = max(int(lookahead_ticks), 1)
+    a = 1.0 - theta
+    return _geom_mean_weight(a, theta, L)
+
+
+def _geom_mean_weight(a, one_minus_a, L: int):
+    """mean_{k=1..L} a^k — the single closed form behind both
+    :func:`forecast_gain` (a = 1-theta) and the regime models' mixing
+    gain (a = lam). Callers pass both ``a`` and ``1-a`` from their own
+    exact primal so neither path pays a double rounding."""
+    return a * (1.0 - a ** L) / (one_minus_a * L)
+
+
+def forecast_power(p_now, mu, gain, xp=np):
+    """E[mean power over the lookahead window | current power], watts.
+    ``mu`` is the per-row trace mean (W), ``gain`` from
+    :func:`forecast_gain` (dimensionless)."""
+    return mu + (p_now - mu) * gain
+
+
+def forecast_usable_energy(usable_now, p_now, lookahead_s, *, e_cap,
+                           booster_eff, mu, gain, xp=np):
+    """Forecast usable energy (J) at the end of the lookahead window: the
+    current usable charge (``capacitor_usable_energy``) plus the expected
+    banked harvest, capped at the buffer's storable ceiling ``e_cap`` =
+    0.5 C (v_max^2 - v_off^2). Same xp-generic contract as the capacitor
+    helpers: scalars or (N,) arrays, numpy or jnp.
+
+    Args:
+        usable_now: current usable energy above brown-out, joules.
+        p_now: current harvested power, watts.
+        lookahead_s: window length, seconds.
+        e_cap: storable usable-energy ceiling, joules.
+        booster_eff: harvest conversion efficiency, dimensionless.
+        mu, gain: per-row OU forecast constants (W, dimensionless).
+    Returns:
+        forecast usable energy, joules (same shape as inputs).
+    """
+    inflow = booster_eff * forecast_power(p_now, mu, gain, xp=xp) \
+        * lookahead_s
+    return xp.minimum(usable_now + inflow, e_cap)
+
+
+# ---------------------------------------------------------------------------
+# Unified compiled form + shared evaluators
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RowForecast:
+    """Per-row compiled forecast coefficients — the unified runtime form.
+
+    One row per trace row (or per worker after :meth:`take`). All arrays
+    are float64 NumPy constants; evaluation converts via ``xp.asarray``
+    (the JAX path bakes them into the trace), so both backends run the
+    same IEEE expressions.
+
+    Fields (units):
+        order: lag window length P (ticks of history the forecast reads).
+        MU: (R,) affine base term, watts (0 for regime models).
+        W: (R, P) window-mean deviation weights, dimensionless.
+        THRESH: (R,) regime threshold on current power, watts
+            (+inf for continuous models: the step contributes LO = 0).
+        HI/LO: (R,) regime forecast addends, watts.
+        model: (R,) int8 ``MODEL_CODES`` — which forecaster fit each row.
+    """
+
+    order: int
+    MU: np.ndarray
+    W: np.ndarray
+    THRESH: np.ndarray
+    HI: np.ndarray
+    LO: np.ndarray
+    model: np.ndarray
+
+    def take(self, idx: np.ndarray) -> "RowForecast":
+        """Gather rows: trace-row table -> per-worker table (N rows)."""
+        idx = np.asarray(idx)
+        return RowForecast(order=self.order, MU=self.MU[idx],
+                           W=self.W[idx], THRESH=self.THRESH[idx],
+                           HI=self.HI[idx], LO=self.LO[idx],
+                           model=self.model[idx])
+
+
+def forecast_power_rows(rf: RowForecast, lags, xp=np):
+    """E[mean power (W) over the lookahead window | lag observations].
+
+    Args:
+        rf: compiled per-row coefficients (R rows).
+        lags: (R, P) power lag matrix, watts; column j holds x[t-j]
+            (column 0 is the current sample).
+        xp: numpy or jax.numpy.
+    Returns:
+        (R,) forecast window-mean power, watts.
+
+    The deviation sum is unrolled left-to-right (P is a small static
+    int), so numpy and the traced jnp path add in the same order; for the
+    OU model (W = [gain], step = 0) the result is bit-equal to the PR-3
+    ``forecast_power`` closed form.
+    """
+    lags = xp.asarray(lags)
+    MU = xp.asarray(rf.MU)
+    W = xp.asarray(rf.W)
+    acc = (lags[:, 0] - MU) * W[:, 0]
+    for j in range(1, rf.order):
+        acc = acc + (lags[:, j] - MU) * W[:, j]
+    step = xp.where(lags[:, 0] >= xp.asarray(rf.THRESH),
+                    xp.asarray(rf.HI), xp.asarray(rf.LO))
+    return MU + acc + step
+
+
+def usable_energy_rows(rf: RowForecast, usable_now, lags, lookahead_s, *,
+                       e_cap, booster_eff, xp=np):
+    """Forecast usable energy (J) under any compiled forecaster: current
+    usable charge plus expected banked inflow over the window, capped at
+    the buffer ceiling. The single budget formula the fleet control
+    plane's ``plan_budget`` delegates to.
+
+    Args:
+        rf: compiled per-row coefficients.
+        usable_now: (R,) usable energy above brown-out now, joules.
+        lags: (R, P) power lag matrix, watts (column 0 = current).
+        lookahead_s: window length, seconds.
+        e_cap: storable usable-energy ceiling, joules (scalar or (R,)).
+        booster_eff: harvest conversion efficiency, dimensionless.
+    Returns:
+        (R,) forecast usable energy, joules.
+    """
+    inflow = booster_eff * forecast_power_rows(rf, lags, xp=xp) \
+        * lookahead_s
+    return xp.minimum(usable_now + inflow, e_cap)
+
+
+# ---------------------------------------------------------------------------
+# Forecaster implementations
+# ---------------------------------------------------------------------------
+
+OUParams = collections.namedtuple("OUParams", ["theta", "mu"])
+RegimeParams = collections.namedtuple(
+    "RegimeParams", ["m_hi", "m_lo", "lam", "pi_hi", "thresh", "mu",
+                     "valid"])
+ARParams = collections.namedtuple("ARParams",
+                                  ["mu", "coef", "xmin", "xmax"])
+
+
+class Forecaster:
+    """Base surface shared by all harvest forecasters.
+
+    Subclasses implement :meth:`fit` (per-row parameter arrays from an
+    (R, T) power bank), :meth:`gain` (window-mean weights for a given
+    lookahead) and :meth:`compile` (-> :class:`RowForecast`); the base
+    class provides forecast/usable-energy evaluation on top of the
+    compiled form.
+    """
+
+    name: str = "base"
+    order: int = 1
+
+    def fit(self, rows: np.ndarray):
+        """Fit per-row parameters from an (R, T) power bank (watts)."""
+        raise NotImplementedError
+
+    def gain(self, params, lookahead_ticks: int) -> np.ndarray:
+        """Window-mean deviation/mixing weights for a lookahead of
+        ``lookahead_ticks`` ticks (dimensionless)."""
+        raise NotImplementedError
+
+    def compile(self, params, lookahead_ticks: int) -> RowForecast:
+        """Bake (params, lookahead) into the unified runtime form."""
+        raise NotImplementedError
+
+    def forecast_power(self, params, lookahead_ticks: int, lags, xp=np):
+        """E[mean power (W) over the window | lags]; see
+        :func:`forecast_power_rows` for shapes."""
+        return forecast_power_rows(self.compile(params, lookahead_ticks),
+                                   lags, xp=xp)
+
+    def usable_energy(self, params, lookahead_ticks: int, usable_now,
+                      lags, dt: float, *, e_cap, booster_eff, xp=np):
+        """Forecast usable energy (J) over ``lookahead_ticks`` ticks of
+        ``dt`` seconds; see :func:`usable_energy_rows`."""
+        rf = self.compile(params, lookahead_ticks)
+        return usable_energy_rows(
+            rf, usable_now, lags, lookahead_ticks * dt, e_cap=e_cap,
+            booster_eff=booster_eff, xp=xp)
+
+
+class OUForecaster(Forecaster):
+    """The PR-3 closed-form OU conditional expectation, refactored.
+
+    theta is fit per row from lag-1 autocorrelation (label-free); the
+    compiled form is the pure affine ``mu + gain * (p_now - mu)`` and is
+    bit-exact with the historical ``forecast_power`` /
+    ``forecast_usable_energy`` outputs (pinned by tests/test_forecast.py).
+    """
+
+    name = "ou"
+    order = 1
+
+    def fit(self, rows: np.ndarray) -> OUParams:
+        rows = np.asarray(rows, dtype=np.float64)
+        return OUParams(theta=fit_ou_theta(rows), mu=rows.mean(axis=1))
+
+    def gain(self, params: OUParams, lookahead_ticks: int) -> np.ndarray:
+        return np.asarray(forecast_gain(params.theta, lookahead_ticks))
+
+    def compile(self, params: OUParams,
+                lookahead_ticks: int) -> RowForecast:
+        g = self.gain(params, lookahead_ticks)
+        R = g.shape[0]
+        return RowForecast(
+            order=1, MU=np.asarray(params.mu, dtype=np.float64),
+            W=g[:, None], THRESH=np.full(R, np.inf), HI=np.zeros(R),
+            LO=np.zeros(R),
+            model=np.full(R, MODEL_CODES["ou"], dtype=np.int8))
+
+
+def _fit_two_state(rows: np.ndarray, z: np.ndarray,
+                   thresh: np.ndarray) -> RegimeParams:
+    """Shared two-state Markov fit: per-row regime means (W) and dwell
+    parameters of the indicator ``z`` ((R, T) bool, True = hi state).
+
+    ``lam`` is the chain's mixing eigenvalue 1 - p_hl - p_lh, clipped
+    into [0, 1): nonnegative lam makes every k-step conditional
+    expectation a convex combination of the regime means, which is what
+    guarantees nonnegative, lookahead-monotone forecasts. Rows that never
+    leave one regime are marked invalid (the compiled forecast falls back
+    to the row mean).
+    """
+    rows = np.asarray(rows, dtype=np.float64)
+    z = np.asarray(z, dtype=bool)
+    n_hi = z.sum(axis=1)
+    n_lo = (~z).sum(axis=1)
+    valid = (n_hi > 0) & (n_lo > 0)
+    m_hi = (rows * z).sum(axis=1) / np.maximum(n_hi, 1)
+    m_lo = (rows * ~z).sum(axis=1) / np.maximum(n_lo, 1)
+    a, b = z[:, :-1], z[:, 1:]
+    from_hi = a.sum(axis=1)
+    from_lo = (~a).sum(axis=1)
+    p_hl = (a & ~b).sum(axis=1) / np.maximum(from_hi, 1)
+    p_lh = (~a & b).sum(axis=1) / np.maximum(from_lo, 1)
+    lam = np.clip(1.0 - p_hl - p_lh, 0.0, 1.0 - 1e-9)
+    denom = p_hl + p_lh
+    pi_hi = np.where(denom > 0, p_lh / np.maximum(denom, 1e-300),
+                     n_hi / np.maximum(n_hi + n_lo, 1))
+    return RegimeParams(m_hi=m_hi, m_lo=m_lo, lam=lam, pi_hi=pi_hi,
+                        thresh=np.asarray(thresh, dtype=np.float64),
+                        mu=rows.mean(axis=1), valid=valid)
+
+
+def _geom_window_gain(lam: np.ndarray, L: int) -> np.ndarray:
+    """mean_{k=1..L} lam^k — the window-mean weight of the current-regime
+    deviation for a chain mixing at eigenvalue ``lam`` in [0, 1)
+    (``_fit_two_state`` clips lam <= 1-1e-9, so the denominator is
+    bounded away from zero)."""
+    L = max(int(L), 1)
+    return _geom_mean_weight(lam, 1.0 - lam, L)
+
+
+class _RegimeForecaster(Forecaster):
+    """Two-state Markov regime forecaster (occlusion/burst share the
+    math; they differ in how the regime indicator is derived).
+
+    Window-mean forecast conditioned on the current regime r:
+
+        E[p̄ | r] = pibar + G (m_r - pibar),
+        pibar = pi_hi m_hi + (1 - pi_hi) m_lo,   G = mean_k lam^k,
+
+    compiled to the pure regime step ``HI if p_now >= THRESH else LO``
+    (MU and W are zero: given the regime, the forecast does not depend on
+    the exact power value).
+    """
+
+    order = 1
+
+    def _indicator(self, rows: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """(z, thresh): per-row hi-state indicator and threshold (W)."""
+        raise NotImplementedError
+
+    def fit(self, rows: np.ndarray) -> RegimeParams:
+        rows = np.asarray(rows, dtype=np.float64)
+        z, thresh = self._indicator(rows)
+        return _fit_two_state(rows, z, thresh)
+
+    def gain(self, params: RegimeParams,
+             lookahead_ticks: int) -> np.ndarray:
+        return _geom_window_gain(params.lam, lookahead_ticks)
+
+    def compile(self, params: RegimeParams,
+                lookahead_ticks: int) -> RowForecast:
+        g = self.gain(params, lookahead_ticks)
+        pibar = (params.pi_hi * params.m_hi
+                 + (1.0 - params.pi_hi) * params.m_lo)
+        hi = pibar + g * (params.m_hi - pibar)
+        lo = pibar + g * (params.m_lo - pibar)
+        # degenerate rows (one regime, or no real separation): forecast
+        # the row mean unconditionally
+        hi = np.where(params.valid, hi, params.mu)
+        lo = np.where(params.valid, lo, params.mu)
+        thresh = np.where(params.valid, params.thresh, np.inf)
+        R = g.shape[0]
+        return RowForecast(
+            order=1, MU=np.zeros(R), W=np.zeros((R, 1)), THRESH=thresh,
+            HI=hi, LO=lo,
+            model=np.full(R, MODEL_CODES[self.name], dtype=np.int8))
+
+
+class OcclusionForecaster(_RegimeForecaster):
+    """Occlusion-aware mobile-solar model: clear vs occluded regimes.
+
+    The regime indicator is a deterministic per-row 1-D 2-means split on
+    power level (Lloyd iterations from the 20th/80th percentiles); rows
+    whose clusters are not meaningfully separated (< 25% of the clear
+    level) are treated as occlusion-free and fall back to the row mean.
+    """
+
+    name = "occlusion"
+
+    def _indicator(self, rows: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        lo = np.percentile(rows, 20, axis=1)
+        hi = np.percentile(rows, 80, axis=1)
+        for _ in range(16):
+            thr = 0.5 * (lo + hi)
+            z = rows >= thr[:, None]
+            n_hi = z.sum(axis=1)
+            n_lo = rows.shape[1] - n_hi
+            ok = (n_hi > 0) & (n_lo > 0)
+            hi = np.where(ok, (rows * z).sum(axis=1)
+                          / np.maximum(n_hi, 1), hi)
+            lo = np.where(ok, (rows * ~z).sum(axis=1)
+                          / np.maximum(n_lo, 1), lo)
+        thr = 0.5 * (lo + hi)
+        return rows >= thr[:, None], thr
+
+    def fit(self, rows: np.ndarray) -> RegimeParams:
+        params = super().fit(rows)
+        sep = (params.m_hi - params.m_lo) \
+            > 0.25 * np.maximum(params.m_hi, 1e-300)
+        return params._replace(valid=params.valid & sep)
+
+
+class BurstForecaster(_RegimeForecaster):
+    """Burst-process RF model: on/off beam dwell and duty-cycled inflow.
+
+    The activity indicator is ``power > 0.25 * row mean`` (RF gaps are
+    (near-)zero; burst amplitudes are multiples of the mean), dwell
+    parameters come from the indicator's transition counts, and the
+    forecast is the expected duty-cycled inflow conditioned on whether
+    the beam is on the device now. Rows that never switch (e.g. smooth
+    solar fed to the wrong model) degrade to the row mean.
+    """
+
+    name = "burst"
+
+    def _indicator(self, rows: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        thr = 0.25 * rows.mean(axis=1)
+        return rows > thr[:, None], thr
+
+
+class ARPForecaster(Forecaster):
+    """Learned per-row AR(p) fit with closed-form multi-step window sums.
+
+    ``fit`` solves the per-row ridge-stabilized normal equations for the
+    deviation recurrence d[t] = sum_j a_j d[t-j]; ``gain`` unrolls the
+    companion recursion c_k = sum_j a_j c_{k-j} once at compile time and
+    returns the window-mean weight vector sum_{k<=L} c_k / L, so the
+    runtime forecast is ``p`` multiply-adds per worker regardless of L.
+
+    Each step's weight vector is shrunk toward zero until the worst-case
+    forecast over the row's observed lag range [xmin, xmax]^p is
+    nonnegative; the shrunk vector feeds the recursion, which also damps
+    divergent (spectral radius > 1) fits. This is what guarantees
+    ``usable_energy >= 0`` and lookahead-monotonicity for lags drawn
+    from the fitted trace.
+    """
+
+    name = "arp"
+
+    def __init__(self, order: int = 3):
+        if order < 1:
+            raise ValueError("AR order must be >= 1")
+        self.order = int(order)
+
+    def fit(self, rows: np.ndarray) -> ARParams:
+        rows = np.asarray(rows, dtype=np.float64)
+        R, T = rows.shape
+        p = self.order
+        if T <= p + 1:
+            raise ValueError(f"AR({p}) fit needs rows longer than {p + 1}")
+        mu = rows.mean(axis=1)
+        d = rows - mu[:, None]
+        Y = d[:, p:]
+        X = np.stack([d[:, p - j:T - j] for j in range(1, p + 1)], axis=2)
+        XtX = np.einsum("rtp,rtq->rpq", X, X)
+        XtY = np.einsum("rtp,rt->rp", X, Y)
+        tr = np.trace(XtX, axis1=1, axis2=2) / p
+        A = XtX + (1e-8 * tr + 1e-300)[:, None, None] * np.eye(p)
+        coef = np.linalg.solve(A, XtY[..., None])[..., 0]
+        return ARParams(mu=mu, coef=coef, xmin=rows.min(axis=1),
+                        xmax=rows.max(axis=1))
+
+    def gain(self, params: ARParams, lookahead_ticks: int) -> np.ndarray:
+        """(R, p) window-mean deviation weights sum_{k<=L} c_k / L."""
+        L = max(int(lookahead_ticks), 1)
+        return self._window_sum(params, L) / L
+
+    def _window_sum(self, params: ARParams, L: int) -> np.ndarray:
+        mu, coef, xmin, xmax = params
+        R, p = coef.shape
+        # hist[:, m] = c_{k-1-m}; seeded with c_0 = e_0, c_{-1} = e_1, ...
+        # (c_m for m <= 0 selects the observation d[t+m] itself)
+        hist = np.zeros((R, p, p))
+        for m in range(p):
+            hist[:, m, m] = 1.0
+        dev_lo = (xmin - mu)[:, None]
+        dev_hi = (xmax - mu)[:, None]
+        W = np.zeros((R, p))
+        for _ in range(L):
+            c = np.einsum("rj,rjq->rq", coef, hist)
+            # nonnegativity shrink over the observed lag box (see class
+            # docstring); mu == 0 rows forecast exactly zero
+            worst = np.where(c > 0, dev_lo, dev_hi)
+            emin = mu + (c * worst).sum(axis=1)
+            s = np.where(emin < 0.0,
+                         mu / np.maximum(mu - emin, 1e-300), 1.0)
+            s = np.where(mu > 0.0, s, 0.0)
+            c = c * s[:, None]
+            W += c
+            hist = np.concatenate([c[:, None, :], hist[:, :-1]], axis=1)
+        return W
+
+    def compile(self, params: ARParams,
+                lookahead_ticks: int) -> RowForecast:
+        Wm = self.gain(params, lookahead_ticks)
+        R = Wm.shape[0]
+        return RowForecast(
+            order=self.order,
+            MU=np.asarray(params.mu, dtype=np.float64), W=Wm,
+            THRESH=np.full(R, np.inf), HI=np.zeros(R), LO=np.zeros(R),
+            model=np.full(R, MODEL_CODES["arp"], dtype=np.int8))
+
+
+def make_forecaster(name: str, arp_order: int = 3) -> Forecaster:
+    """Instantiate one of the four forecasters by registry name."""
+    if name == "ou":
+        return OUForecaster()
+    if name == "occlusion":
+        return OcclusionForecaster()
+    if name == "burst":
+        return BurstForecaster()
+    if name == "arp":
+        return ARPForecaster(order=arp_order)
+    raise ValueError(f"unknown forecaster {name!r}; "
+                     f"choose from {FORECASTER_NAMES}")
+
+
+# ---------------------------------------------------------------------------
+# Per-row selection ("auto" mode)
+# ---------------------------------------------------------------------------
+
+
+def classify_rows(rows: np.ndarray) -> list[str]:
+    """Label-free per-row forecaster selection from trace statistics:
+    a large near-zero fraction marks a burst process; a well-separated
+    two-level mixture marks occlusion; everything else is OU. Returns
+    one forecaster name per row."""
+    rows = np.asarray(rows, dtype=np.float64)
+    mx = np.maximum(rows.max(axis=1), 1e-300)
+    off_frac = np.mean(rows <= 0.02 * mx[:, None], axis=1)
+    occ_valid = OcclusionForecaster().fit(rows).valid
+    return ["burst" if off_frac[r] > 0.25
+            else ("occlusion" if occ_valid[r] else "ou")
+            for r in range(rows.shape[0])]
+
+
+def fit_row_forecast(power: np.ndarray, mode: str, lookahead_ticks: int, *,
+                     families: Sequence[str] | None = None,
+                     arp_order: int = 3) -> RowForecast:
+    """Fit + compile the per-row forecast table for an (R, T) power bank.
+
+    Args:
+        power: (R, T) harvested power rows, watts.
+        mode: one of ``FORECASTER_MODES``. ``"auto"`` selects a model per
+            row — by ``FAMILY_FORECASTER`` when per-row ``families``
+            labels are given, else by :func:`classify_rows`.
+        lookahead_ticks: forecast window, ticks.
+        families: optional (R,) trace-family names (e.g. "SOM", "RF").
+        arp_order: lag order p of the ``"arp"`` model.
+    Returns:
+        :class:`RowForecast` with R rows; ``order`` is the max lag order
+        across the selected models (unused lag weights are zero).
+    """
+    if mode not in FORECASTER_MODES:
+        raise ValueError(f"unknown forecaster mode {mode!r}; "
+                         f"choose from {FORECASTER_MODES}")
+    power = np.asarray(power, dtype=np.float64)
+    R = power.shape[0]
+    if mode != "auto":
+        f = make_forecaster(mode, arp_order)
+        return f.compile(f.fit(power), lookahead_ticks)
+    if families is not None:
+        if len(families) != R:
+            raise ValueError(f"families has {len(families)} labels for "
+                             f"{R} trace rows")
+        # rows whose family is not in the map (a future trace family)
+        # fall back to label-free classification rather than silently
+        # getting OU
+        classified = None
+        names = []
+        for r, f in enumerate(families):
+            name = FAMILY_FORECASTER.get(str(f).upper())
+            if name is None:
+                if classified is None:
+                    classified = classify_rows(power)
+                name = classified[r]
+            names.append(name)
+    else:
+        names = classify_rows(power)
+    parts = {}
+    for name in sorted(set(names)):
+        idx = np.array([r for r in range(R) if names[r] == name])
+        f = make_forecaster(name, arp_order)
+        parts[name] = (idx, f.compile(f.fit(power[idx]), lookahead_ticks))
+    order = max(rf.order for _, rf in parts.values())
+    MU = np.zeros(R)
+    W = np.zeros((R, order))
+    THRESH = np.full(R, np.inf)
+    HI = np.zeros(R)
+    LO = np.zeros(R)
+    model = np.zeros(R, dtype=np.int8)
+    for idx, rf in parts.values():
+        MU[idx] = rf.MU
+        W[idx, :rf.order] = rf.W
+        THRESH[idx] = rf.THRESH
+        HI[idx] = rf.HI
+        LO[idx] = rf.LO
+        model[idx] = rf.model
+    return RowForecast(order=order, MU=MU, W=W, THRESH=THRESH, HI=HI,
+                       LO=LO, model=model)

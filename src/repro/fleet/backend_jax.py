@@ -214,10 +214,11 @@ class JaxFleetBackend:
                 fsn, ss = args
                 ss = S.shed(sp, ss, t, jnp)
                 budget_now = self._usable(fsn.v)
-                col = ((i % p.T) if self.phase is None
-                       else (i + self.phase) % p.T)
-                pw = self.power[self.trace_index, col]
-                budget_plan = S.plan_budget(sp, budget_now, pw, p.eff, jnp)
+                pw_lags = S.power_lags(self.power, self.trace_index, i,
+                                       p.T, sp.fc_order, phase=self.phase,
+                                       xp=jnp)
+                budget_plan = S.plan_budget(sp, budget_now, pw_lags,
+                                            p.eff, jnp)
                 dispatchable = fsn.on & ~fsn.has_work & ~fsn.p_pending
                 ss, a = S.dispatch(sp, ss, dispatchable, budget_now,
                                    budget_plan, t, jnp)

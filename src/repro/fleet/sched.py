@@ -28,10 +28,12 @@ Mechanisms (array formulation of the PR-1 semantics):
 - **Routing** — dispatchable workers are ranked by a *budget score*
   (stable argsort, richest first); queues are served oldest-head-first.
   Reactive mode scores instantaneous usable energy; forecast mode scores
-  the closed-form OU conditional expectation of usable energy over the
-  next ``lookahead`` window (``repro.core.energy.forecast_usable_energy``)
-  — a momentarily occluded worker on a rich mean-reverting trace outranks
-  a momentarily charged worker on a scarce one.
+  the conditional expectation of usable energy over the next
+  ``lookahead`` window under the worker's *compiled harvest forecaster*
+  (``repro.core.forecast``: OU mean reversion, occlusion/burst regime
+  models, or a learned AR(p) fit — selected per trace row) — a
+  momentarily occluded worker on a rich trace outranks a momentarily
+  charged worker on a scarce one.
 - **Batching** — each assigned worker takes the largest batch of
   floor-knob requests its *planning* budget affords (forecast mode plans
   with expected inflow: harvest arriving while the batch executes funds
@@ -60,8 +62,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.energy import (fit_ou_theta, forecast_gain,
-                               forecast_usable_energy)
+from repro.core.forecast import (FORECASTER_MODES, RowForecast,
+                                 fit_row_forecast, usable_energy_rows)
 from repro.fleet.state import (SCHED_FIELDS, FleetParams, SchedParams,
                                SchedState, init_sched_state)
 
@@ -85,16 +87,41 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
                       max_batch: int = 4, max_retries: int = 2,
                       grace_s: float = 20.0, deadline_factor: float = 1.5,
                       sched: str = "reactive", lookahead_s: float = 5.0,
+                      forecaster: str = "ou",
+                      trace_families: Sequence[str] | None = None,
+                      arp_order: int = 3,
                       lat_bins: int = 64) -> SchedParams:
-    """Stack the workload tables and fit the per-row harvest forecaster.
+    """Compile the control-plane constants for one fleet.
 
-    The forecaster is trace-model-driven but label-free: theta is fit per
-    power-matrix row by lag-1 autocorrelation (``fit_ou_theta``), so solar
-    rows get a high-gain conditional-expectation forecast while bursty
-    RF/KIN rows degrade toward the row mean."""
+    Stacks the workload cost/accuracy tables (joules / dimensionless),
+    then fits + compiles the pluggable harvest forecaster
+    (``repro.core.forecast``) per power-matrix row and gathers it per
+    worker via ``p.trace_index``.
+
+    Args:
+        p: the fleet's static device configuration.
+        workloads: ``FleetWorkload`` sequence (cost tables in J).
+        max_queue: global admission bound, requests.
+        shed_after_s / grace_s: staleness / straggler windows, seconds.
+        max_batch: per-assignment batch cap, requests.
+        max_retries: retry budget before a request counts as lost.
+        deadline_factor: straggler deadline multiplier (dimensionless).
+        sched: "reactive" (instantaneous budget) or "forecast".
+        lookahead_s: forecast window, seconds (rounded to >= 1 tick).
+        forecaster: one of ``repro.core.forecast.FORECASTER_MODES``;
+            "auto" picks a model per trace row (by ``trace_families``
+            labels when given, else label-free classification).
+        trace_families: optional per-power-row family names ("SOM", ...).
+        arp_order: lag order p of the "arp" model (ticks).
+    Returns:
+        a frozen :class:`SchedParams`.
+    """
     if sched not in SCHED_MODES:
         raise ValueError(f"unknown sched mode {sched!r}; "
                          f"choose from {SCHED_MODES}")
+    if forecaster not in FORECASTER_MODES:
+        raise ValueError(f"unknown forecaster {forecaster!r}; "
+                         f"choose from {FORECASTER_MODES}")
     W = len(workloads)
     u_max = max(w.costs.n_units for w in workloads)
     CU = np.full((W, u_max + 2), np.inf)
@@ -121,8 +148,18 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
             ok = np.nonzero(wk.accuracy >= wk.floor)[0]
             P_REQ[w] = int(ok[0]) if ok.size else _BIG
     L = max(int(round(lookahead_s / p.dt)), 1)
-    theta = fit_ou_theta(p.power)
-    mu_rows = p.power.mean(axis=1)
+    if sched == "forecast":
+        rf = fit_row_forecast(p.power, forecaster, L,
+                              families=trace_families,
+                              arp_order=arp_order).take(p.trace_index)
+    else:
+        # reactive planning never reads the forecast: skip the fit and
+        # carry a trivial zero-forecast table (keeps params uniform and
+        # the lag gather at order 1)
+        z = np.zeros(p.n)
+        rf = RowForecast(order=1, MU=z, W=z[:, None],
+                         THRESH=np.full(p.n, np.inf), HI=z, LO=z,
+                         model=np.zeros(p.n, dtype=np.int8))
     return SchedParams(
         n=p.n, W=W, Q=int(max_queue + p.n * max_batch), B=int(max_batch),
         max_queue=int(max_queue), max_retries=int(max_retries),
@@ -131,8 +168,9 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
         CU=CU, UCUM=UCUM, FIX=FIX, EMITC=EMITC, NU=NU, FULL=FULL, ACC=ACC,
         P_REQ=P_REQ, IS_SMART=IS_SMART,
         forecast=(sched == "forecast"), lookahead_ticks=L,
-        MU=mu_rows[p.trace_index],
-        GAIN=np.asarray(forecast_gain(theta, L))[p.trace_index],
+        forecaster=str(forecaster), fc_order=int(rf.order),
+        FC_MU=rf.MU, FC_W=rf.W, FC_THRESH=rf.THRESH, FC_HI=rf.HI,
+        FC_LO=rf.LO, FC_MODEL=rf.model,
         ECAP=0.5 * p.C * (p.v_max * p.v_max - p.v_off * p.v_off),
         ACTIVE_P=np.asarray(p.active_power_w, dtype=np.float64),
         lat_bins=int(lat_bins),
@@ -140,7 +178,26 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
 
 
 def make_sched_state(sp: SchedParams) -> SchedState:
+    """Empty :class:`SchedState` sized for ``sp`` (see
+    ``state.init_sched_state``)."""
     return init_sched_state(sp)
+
+
+def power_lags(power, trace_index, i, T, order: int, phase=None, xp=np):
+    """Gather the (N, P) power lag window the forecast planners read.
+
+    Column j holds each worker's harvested power (watts) at trace tick
+    ``i - j`` (column 0 is the current tick), indexed modulo the trace
+    length ``T`` — traces are cyclic, matching the tick transition's own
+    column arithmetic. ``phase`` is the optional (N,) per-worker tick
+    offset. ``order`` (= ``SchedParams.fc_order``) is a static small int,
+    so the gather unrolls identically under numpy and jax tracing.
+    """
+    cols = []
+    for j in range(order):
+        c = ((i - j) % T) if phase is None else (i + phase - j) % T
+        cols.append(power[trace_index, c])
+    return xp.stack(cols, axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -178,10 +235,17 @@ def _scatter_add(a, idx, v, xp):
 
 
 def admit(sp: SchedParams, ss, counts, t, xp=np):
-    """Admit this tick's arrivals (``counts``: (W,) per-workload) up to the
-    global backlog bound; reject the remainder. All arrivals of one tick
-    share the arrival time ``t``, so a push is a masked fill of the ring
-    segment past each queue's tail."""
+    """Admit this tick's arrivals up to the global backlog bound; reject
+    the remainder.
+
+    Args:
+        counts: (W,) per-workload arrival counts this tick.
+        t: arrival time stamped on admitted requests, seconds.
+    Returns:
+        the updated ``SchedState`` namedtuple view.
+
+    All arrivals of one tick share the arrival time ``t``, so a push is a
+    masked fill of the ring segment past each queue's tail."""
     if xp is np and int(np.sum(counts)) == 0:
         return ss  # pure no-op (identical to the masked write below)
     if xp is not np:
@@ -227,9 +291,10 @@ def _admit_impl(sp: SchedParams, ss, counts, t, xp):
 
 
 def shed(sp: SchedParams, ss, t, xp=np):
-    """Drop the stale prefix of each queue (age > shed_after_s): a stale
-    approximate answer is worth less than no answer. Prefix, not filter —
-    ring contiguity is preserved and matches the PR-1 head-pop loop."""
+    """Drop the stale prefix of each queue (age ``t - arrival`` beyond
+    ``shed_after_s`` seconds): a stale approximate answer is worth less
+    than no answer. Prefix, not filter — ring contiguity is preserved
+    and matches the PR-1 head-pop loop. Returns the updated state."""
     j = xp.arange(sp.Q)[None, :]
     phys = (ss.q_head[:, None] + j) % sp.Q
     log_t = xp.take_along_axis(ss.q_t, phys, axis=1)
@@ -246,23 +311,47 @@ def shed(sp: SchedParams, ss, t, xp=np):
 # ---------------------------------------------------------------------------
 
 
-def plan_budget(sp: SchedParams, budget_now, pw, eff, xp=np):
-    """The budget routing and batching plan against. Reactive: the
-    instantaneous usable energy. Forecast: usable energy plus the
-    closed-form expected harvest over the lookahead window, capped at the
-    buffer's storable ceiling (``core.energy`` conditional expectation)."""
+def plan_budget(sp: SchedParams, budget_now, pw_lags, eff, xp=np):
+    """The budget (joules) routing and batching plan against.
+
+    Reactive: the instantaneous usable energy. Forecast: usable energy
+    plus the expected harvest over the lookahead window under each
+    worker's compiled forecaster, capped at the buffer's storable
+    ceiling (``repro.core.forecast.usable_energy_rows`` — one expression
+    for all four models).
+
+    Args:
+        budget_now: (N,) instantaneous usable energy, J.
+        pw_lags: (N, fc_order) power lag window from :func:`power_lags`,
+            watts (ignored in reactive mode).
+        eff: booster conversion efficiency (dimensionless).
+    Returns:
+        (N,) planning budget, J.
+    """
     if not sp.forecast:
         return budget_now
-    return forecast_usable_energy(
-        budget_now, pw, sp.lookahead_ticks * sp.dt, e_cap=sp.ECAP,
-        booster_eff=eff, mu=sp.MU, gain=sp.GAIN, xp=xp)
+    rf = RowForecast(order=sp.fc_order, MU=sp.FC_MU, W=sp.FC_W,
+                     THRESH=sp.FC_THRESH, HI=sp.FC_HI, LO=sp.FC_LO,
+                     model=sp.FC_MODEL)
+    return usable_energy_rows(
+        rf, budget_now, pw_lags, sp.lookahead_ticks * sp.dt,
+        e_cap=sp.ECAP, booster_eff=eff, xp=xp)
 
 
 def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
              t, xp=np):
-    """Route queued requests to capable workers; returns ``(ss, a)`` where
-    ``a`` holds per-worker assignment arrays the caller writes into the
-    device state (``p_pending`` and friends).
+    """Route queued requests to capable workers.
+
+    Args:
+        dispatchable: (N,) bool — on, idle, nothing pending.
+        budget_now: (N,) instantaneous usable energy, J.
+        budget_plan: (N,) planning budget from :func:`plan_budget`, J.
+        t: assignment time, seconds.
+    Returns:
+        ``(ss, a)`` — the updated state and an :class:`Assignment` of
+        per-worker arrays (mask, workload id, per-request knob units,
+        batch size) the caller writes into the device state
+        (``p_pending`` and friends).
 
     Workers are ranked richest-first by ``budget_plan`` (stable sort);
     queues are served oldest-head-first. Per worker: SMART admission at
@@ -421,11 +510,19 @@ def _requeue_impl(sp: SchedParams, ss, slots, xp):
 
 
 def collect(sp: SchedParams, ss, emit, lost, units_done, t, xp=np):
-    """Retire this tick's device outcomes. An emitting worker completes
-    ``units_done // u`` full requests of its batch (plus one partial:
-    anytime semantics — a truncated result is still a result); the
-    unfinished tail and all requests of browned-out workers go through
-    the retry path."""
+    """Retire this tick's device outcomes.
+
+    Args:
+        emit / lost: (N,) bool — workers that emitted / browned out.
+        units_done: (N,) int64 units finished by emitting workers.
+        t: completion time, seconds (drives the latency histogram).
+    Returns:
+        the updated state.
+
+    An emitting worker completes ``units_done // u`` full requests of its
+    batch (plus one partial: anytime semantics — a truncated result is
+    still a result); the unfinished tail and all requests of browned-out
+    workers go through the retry path."""
     if xp is np:
         if not (emit.any() or lost.any()):
             return ss
@@ -485,10 +582,12 @@ def _collect_impl(sp: SchedParams, ss, emit, lost, units_done, t, xp):
 
 
 def evict(sp: SchedParams, ss, t, xp=np):
-    """Straggler pass: revoke assignments that outlived the service
-    deadline implied by the worker's own MCU class (the device browned
-    out before acquiring, or recharges too slowly). Returns ``(ss, ev)``;
-    the caller clears the device's pending/in-flight flags for ``ev``."""
+    """Straggler pass: revoke assignments older than the service
+    deadline ``grace_s + deadline_factor * est`` (seconds), where
+    ``est`` prices the batch at the worker's own MCU active power (the
+    device browned out before acquiring, or recharges too slowly).
+    Returns ``(ss, ev)`` with ``ev`` the (N,) evicted mask; the caller
+    clears the device's pending/in-flight flags for ``ev``."""
     act = ss.f_n > 0
     est = (xp.take(xp.asarray(sp.FIX), ss.f_wl)
            + xp.take(xp.asarray(sp.EMITC), ss.f_wl)

@@ -17,10 +17,12 @@ loop, so the same expressions run in two modes:
   round-trips.
 
 Routing is *forecast-aware* (``sched="forecast"``): workers are ranked —
-and batches sized — by the closed-form OU conditional expectation of
-usable energy over the next ``lookahead_s`` window instead of
-instantaneous charge (``repro.core.energy`` forecaster; ROADMAP
-"scheduler lookahead"). ``sched="reactive"`` is the PR-1 behavior.
+and batches sized — by the conditional expectation of usable energy over
+the next ``lookahead_s`` window instead of instantaneous charge, under a
+*pluggable* harvest forecaster (``repro.core.forecast``): the closed-form
+OU mean reversion, the occlusion/burst regime models, a learned AR(p)
+fit, or per-row automatic selection (``forecaster="auto"``, matched to
+each row's trace family). ``sched="reactive"`` is the PR-1 behavior.
 """
 from __future__ import annotations
 
@@ -81,6 +83,9 @@ class FleetScheduler:
                  straggler: StragglerPolicy | None = None,
                  sched: str = "reactive",
                  lookahead_s: float = 5.0,
+                 forecaster: str = "ou",
+                 trace_families: list[str] | None = None,
+                 arp_order: int = 3,
                  lat_bins: int = 64):
         if pool.mode != "dispatch":
             raise ValueError("scheduler needs a dispatch-mode pool")
@@ -92,7 +97,9 @@ class FleetScheduler:
             shed_after_s=shed_after_s, max_batch=max_batch,
             max_retries=max_retries, grace_s=grace_s,
             deadline_factor=straggler.deadline_factor, sched=sched,
-            lookahead_s=lookahead_s, lat_bins=lat_bins)
+            lookahead_s=lookahead_s, forecaster=forecaster,
+            trace_families=trace_families, arp_order=arp_order,
+            lat_bins=lat_bins)
         self.state = _sched.make_sched_state(self.params)
 
     # -- state plumbing ------------------------------------------------------
@@ -138,9 +145,10 @@ class FleetScheduler:
             i = int(round(t / p.dt))
         ss = _sched.shed(sp, self._ss(), float(t), np)
         budget_now = backend_numpy.usable_energy(p, s)
-        col = (i % p.T) if p.phase is None else (i + p.phase) % p.T
-        pw = p.power[p.trace_index, col]
-        budget_plan = _sched.plan_budget(sp, budget_now, pw, p.eff, np)
+        pw_lags = _sched.power_lags(p.power, p.trace_index, i, p.T,
+                                    sp.fc_order, phase=p.phase, xp=np)
+        budget_plan = _sched.plan_budget(sp, budget_now, pw_lags, p.eff,
+                                         np)
         dispatchable = s.on & ~s.has_work & ~s.p_pending
         ss, a = _sched.dispatch(sp, ss, dispatchable, budget_now,
                                 budget_plan, float(t), np)

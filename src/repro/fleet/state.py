@@ -103,6 +103,9 @@ STATE_FIELDS: tuple[str, ...] = tuple(
 
 
 def init_state(n: int) -> FleetState:
+    """Fresh device state for ``n`` workers: discharged capacitors (0 V),
+    everything off/idle, all counters zero. Returns a :class:`FleetState`
+    of (N,) arrays (voltages in volts, energies in joules)."""
     z = lambda dt=np.float64: np.zeros(n, dtype=dt)  # noqa: E731
     return FleetState(
         v=z(), on=z(bool), cycles=z(np.int64), acquired=z(np.int64),
@@ -120,10 +123,13 @@ def init_state(n: int) -> FleetState:
 
 
 def state_as_tuple(s: FleetState) -> tuple:
+    """Field-ordered flat tuple of the state arrays (``STATE_FIELDS``
+    order) — the pytree form the JAX scan carries."""
     return tuple(getattr(s, f) for f in STATE_FIELDS)
 
 
 def state_from_tuple(t: Sequence) -> FleetState:
+    """Inverse of :func:`state_as_tuple`."""
     return FleetState(**dict(zip(STATE_FIELDS, t)))
 
 
@@ -136,39 +142,50 @@ def state_from_tuple(t: Sequence) -> FleetState:
 class SchedParams:
     """Static control-plane configuration: everything the array-native
     scheduler step (``repro.fleet.sched``) reads but never writes. Pure
-    NumPy constants; the JAX backend converts them once at build time."""
+    NumPy constants; the JAX backend converts them on use (``xp.asarray``
+    inside the shared ops, baked into the trace as constants).
+
+    Units: every cost/energy table is in joules, power in watts, times in
+    seconds, windows/lookaheads in ticks of ``dt`` seconds."""
 
     n: int  # workers
     W: int  # workloads
-    Q: int  # queue ring capacity per workload
-    B: int  # max batch per assignment
+    Q: int  # queue ring capacity per workload (requests)
+    B: int  # max batch per assignment (requests)
     max_queue: int  # global admission bound (queued requests)
-    max_retries: int
-    shed_after_s: float
-    grace_s: float
+    max_retries: int  # retries granted before a request counts as lost
+    shed_after_s: float  # queue-age shedding threshold, seconds
+    grace_s: float  # straggler grace period, seconds
     deadline_factor: float  # straggler deadline = grace + factor * est
-    dt: float
+    dt: float  # tick length, seconds
     # stacked workload tables, padded with +inf beyond each table's units
-    CU: np.ndarray  # (W, U+1) CostTable.cumulative (incl fixed+emit)
-    UCUM: np.ndarray  # (W, U+1) unit-cost prefix (excl fixed/emit)
-    FIX: np.ndarray  # (W,)
-    EMITC: np.ndarray  # (W,)
-    NU: np.ndarray  # (W,) int64
-    FULL: np.ndarray  # (W,) cost of all units (straggler estimate)
-    ACC: np.ndarray  # (W, U+1) expected-accuracy tables
+    CU: np.ndarray  # (W, U+2) CostTable.cumulative, J (incl fixed+emit)
+    UCUM: np.ndarray  # (W, U+2) unit-cost prefix, J (excl fixed/emit)
+    FIX: np.ndarray  # (W,) fixed acquisition cost, J
+    EMITC: np.ndarray  # (W,) emission (BLE packet) cost, J
+    NU: np.ndarray  # (W,) int64 unit counts
+    FULL: np.ndarray  # (W,) cost of all units, J (straggler estimate)
+    ACC: np.ndarray  # (W, U+1) expected-accuracy tables (dimensionless)
     P_REQ: np.ndarray  # (W,) SMART floor units (huge sentinel: see
     # sched._BIG -> the floor is unattainable and admission always skips)
     IS_SMART: np.ndarray  # (W,) bool; False -> greedy admission
-    # forecast routing (repro.core.energy closed forms)
-    forecast: bool
-    lookahead_ticks: int
-    MU: np.ndarray  # (N,) per-worker trace-row mean power
-    GAIN: np.ndarray  # (N,) forecast_gain(theta_row, lookahead)
-    ECAP: np.ndarray  # (N,) storable usable-energy ceiling
-    ACTIVE_P: np.ndarray  # (N,) per-worker MCU active power
+    # forecast routing: the compiled pluggable forecaster
+    # (repro.core.forecast), gathered per worker
+    forecast: bool  # False -> reactive (instantaneous-charge) planning
+    lookahead_ticks: int  # forecast window L, ticks
+    forecaster: str  # selection mode ("ou"/"occlusion"/"burst"/"arp"/"auto")
+    fc_order: int  # lag window P the planners gather (ticks of history)
+    FC_MU: np.ndarray  # (N,) affine forecast base, W (0 for regime rows)
+    FC_W: np.ndarray  # (N, P) window-mean deviation weights (dimensionless)
+    FC_THRESH: np.ndarray  # (N,) regime threshold on current power, W
+    FC_HI: np.ndarray  # (N,) regime forecast addend (p_now >= THRESH), W
+    FC_LO: np.ndarray  # (N,) regime forecast addend (p_now < THRESH), W
+    FC_MODEL: np.ndarray  # (N,) int8 forecast.MODEL_CODES per worker
+    ECAP: np.ndarray  # (N,) storable usable-energy ceiling, J
+    ACTIVE_P: np.ndarray  # (N,) per-worker MCU active power, W
     # latency histogram (fused-scan-friendly percentile estimates)
-    lat_bins: int
-    lat_max_s: float
+    lat_bins: int  # histogram bins
+    lat_max_s: float  # histogram range, seconds
 
 
 @dataclasses.dataclass
@@ -213,6 +230,9 @@ SCHED_FIELDS: tuple[str, ...] = tuple(
 
 
 def init_sched_state(sp: SchedParams) -> SchedState:
+    """Empty control-plane state sized for ``sp``: empty ring buffers,
+    no in-flight assignments, all counters zero. Arrival times are
+    seconds; retry counts and all counters are int64."""
     i = lambda *s: np.zeros(s, dtype=np.int64)  # noqa: E731
     f = lambda *s: np.zeros(s, dtype=np.float64)  # noqa: E731
     return SchedState(
@@ -227,19 +247,25 @@ def init_sched_state(sp: SchedParams) -> SchedState:
 
 
 def sched_state_as_tuple(s: SchedState) -> tuple:
+    """Field-ordered flat tuple (``SCHED_FIELDS`` order) — the pytree
+    form the fused serve scan carries alongside the device state."""
     return tuple(getattr(s, f) for f in SCHED_FIELDS)
 
 
 def sched_state_from_tuple(t: Sequence) -> SchedState:
+    """Inverse of :func:`sched_state_as_tuple`."""
     return SchedState(**dict(zip(SCHED_FIELDS, t)))
 
 
 def stack_cost_tables(workloads: Sequence[CostTable]
                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
                                  np.ndarray]:
-    """(UC, FIX, EMITC, NU): per-worker gathers make the progression loop
-    workload-heterogeneous without Python branching; unit slots beyond a
-    table's length are +inf (never affordable, never started)."""
+    """Stack per-workload :class:`CostTable` columns into (W, U_max)
+    arrays. Returns ``(UC, FIX, EMITC, NU)``: per-unit costs (J), fixed
+    acquisition cost (J), emission cost (J), and unit counts (int64).
+    Per-worker gathers make the progression loop workload-heterogeneous
+    without Python branching; unit slots beyond a table's length are
+    +inf (never affordable, never started)."""
     u_max = max(c.n_units for c in workloads)
     UC = np.full((len(workloads), u_max), np.inf)
     for w, c in enumerate(workloads):

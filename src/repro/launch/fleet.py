@@ -5,6 +5,8 @@
         --traces RF,SOM,SOR,SIR --scheduler both --json out.json
     PYTHONPATH=src python -m repro.launch.fleet --workers 1024 \
         --backend jax --sched forecast --lookahead 5 --traces SOM,SOR
+    PYTHONPATH=src python -m repro.launch.fleet --workers 1024 \
+        --sched forecast --forecaster auto --traces SIM,RF
     PYTHONPATH=src python -m repro.launch.fleet --workers 100000 \
         --backend jax --scheduler off --hetero --hetero-mcu
 
@@ -14,8 +16,10 @@ array-native control plane (``repro.fleet.sched``) or as independent
 self-sampling workers (the no-scheduler baseline), and prints the fleet
 metrics. ``--backend jax`` fuses the whole serve trace — workers and
 scheduler — into one ``lax.scan`` device launch; ``--sched forecast``
-routes and batches on the closed-form OU harvest forecast over the next
-``--lookahead`` seconds instead of instantaneous charge; ``--hetero``
+routes and batches on the forecast harvest over the next ``--lookahead``
+seconds instead of instantaneous charge, under the ``--forecaster``
+model (``repro.core.forecast``: OU / occlusion / burst / AR(p), or
+``auto`` to match each worker's trace family); ``--hetero``
 mixes capacitor sizes and ``--hetero-mcu`` mixes MCU classes (per-worker
 active power) across the fleet. The helpers here are reused by
 ``benchmarks/fleet_throughput.py`` and ``examples/fleet_serve.py``.
@@ -28,6 +32,7 @@ import json
 import numpy as np
 
 from repro.core.energy import Capacitor, McuEnergyModel, get_trace
+from repro.core.forecast import FORECASTER_MODES
 from repro.core.policies import Greedy, Smart
 from repro.fleet.sched import SCHED_MODES
 from repro.fleet.scheduler import FleetScheduler, RequestStream, run_fleet
@@ -42,15 +47,23 @@ WORKLOAD_FACTORIES = {
 }
 
 
+def trace_family_labels(trace_names: list[str], n_rows: int) -> list[str]:
+    """Per-row family labels matching :func:`make_power_matrix`'s row
+    cycling — the one place the rule exists, so forecaster family labels
+    cannot drift from the rows they describe."""
+    return [trace_names[r % len(trace_names)] for r in range(n_rows)]
+
+
 def make_power_matrix(trace_names: list[str], n_rows: int,
                       duration_s: float, dt: float = 0.01,
                       seed: int = 0) -> np.ndarray:
-    """(n_rows, T) harvested-power matrix cycling through the families;
+    """(n_rows, T) harvested-power matrix cycling through the families
+    (row r gets ``trace_family_labels(trace_names, n_rows)[r]``);
     distinct seeds per row. Workers share rows (with phase offsets) so a
     1000-worker fleet does not pay 1000 trace syntheses."""
-    rows = [get_trace(trace_names[r % len(trace_names)], seed=seed + r,
-                      duration_s=duration_s, dt=dt)
-            for r in range(n_rows)]
+    rows = [get_trace(fam, seed=seed + r, duration_s=duration_s, dt=dt)
+            for r, fam in enumerate(trace_family_labels(trace_names,
+                                                        n_rows))]
     return stack_traces(rows)
 
 
@@ -103,6 +116,8 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   max_batch: int = 4, shed_after_s: float = 30.0,
                   dispatch_every: int = 10, backend: str = "numpy",
                   sched: str = "reactive", lookahead_s: float = 5.0,
+                  forecaster: str = "ou",
+                  trace_families: list[str] | None = None,
                   capacitance_f: np.ndarray | None = None,
                   v_max: np.ndarray | None = None,
                   active_power_w: np.ndarray | None = None) -> dict:
@@ -111,12 +126,15 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                                v_max=v_max, active_power_w=active_power_w)
     scheduler = FleetScheduler(pool, workloads, max_batch=max_batch,
                                shed_after_s=shed_after_s, sched=sched,
-                               lookahead_s=lookahead_s)
+                               lookahead_s=lookahead_s,
+                               forecaster=forecaster,
+                               trace_families=trace_families)
     stream = RequestStream(rate_rps, mix, n_steps, dt, seed=seed + 1)
     summary = run_fleet(pool, scheduler, stream, n_steps,
                         dispatch_every=dispatch_every)
     summary["mode"] = "scheduled"
     summary["sched"] = sched
+    summary["forecaster"] = forecaster
     summary["n_workers"] = n_workers
     summary["backend"] = backend
     return summary
@@ -215,6 +233,11 @@ def main(argv: list[str] | None = None) -> dict:
                          "next --lookahead seconds (forecast)")
     ap.add_argument("--lookahead", type=float, default=5.0,
                     help="forecast horizon in seconds (sched=forecast)")
+    ap.add_argument("--forecaster", choices=FORECASTER_MODES, default="ou",
+                    help="harvest forecast model (sched=forecast): OU "
+                         "mean reversion, occlusion/burst regime models, "
+                         "a learned AR(p) fit, or auto per-row selection "
+                         "matched to each trace row's family")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--shed-after", type=float, default=30.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -244,12 +267,14 @@ def main(argv: list[str] | None = None) -> dict:
         ap_w = hetero_mcu(args.workers, args.seed)
 
     out: dict = {"config": vars(args)}
+    families = trace_family_labels(names, n_rows)
     if args.scheduler in ("on", "both"):
         out["scheduled"] = run_scheduled(
             power, args.dt, args.workers, workloads, rate_rps=rate, mix=mix,
             n_steps=n_steps, seed=args.seed, max_batch=args.max_batch,
             shed_after_s=args.shed_after, backend=args.backend,
             sched=args.sched, lookahead_s=args.lookahead,
+            forecaster=args.forecaster, trace_families=families,
             capacitance_f=cf, v_max=vm, active_power_w=ap_w)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(

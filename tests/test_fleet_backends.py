@@ -273,6 +273,28 @@ def test_fused_sched_agreement_under_losses_and_retries():
     assert a["shed"] + a["lost"] + a["requeued"] > 0  # paths exercised
 
 
+@pytest.mark.parametrize("forecaster", ["occlusion", "burst", "arp",
+                                        "auto"])
+def test_fused_sched_agreement_pluggable_forecasters(forecaster):
+    """The pluggable-forecaster contract: every forecast model (and the
+    per-row auto selection) evaluates identically in the host driver and
+    inside the fused scan — same ranks, same batches, same counters."""
+    from repro.launch.fleet import trace_family_labels
+    wls = [har_workload(), lm_workload()]
+    names = ["SIM", "RF", "SOM", "SIR"]
+    power = make_power_matrix(names, 8, 40.0, DT, seed=9)
+    fams = trace_family_labels(names, 8)
+    n_steps = int(40.0 / DT)
+    out = _serve_pair(power, 96, wls, n_steps, rate=9.6,
+                      mix=np.array([0.6, 0.4]), seed=9, sched="forecast",
+                      forecaster=forecaster, trace_families=fams)
+    _assert_sched_agreement(out)
+    assert out["numpy"][0]["completed"] > 0
+    if forecaster == "auto":  # regime + OU rows genuinely mixed
+        sp = out["numpy"][1].params
+        assert len(np.unique(sp.FC_MODEL)) > 1
+
+
 def test_forecast_routing_beats_reactive_on_solar_traces():
     """The ROADMAP 'scheduler lookahead' claim at test scale: on smooth
     mean-reverting solar harvest, planning batches against the OU
@@ -299,7 +321,7 @@ def test_forecaster_closed_forms():
     """fit_ou_theta recovers the synthesis theta on a clean OU row, and
     the window-average gain interpolates 1 (random walk) -> 0 (white
     noise)."""
-    from repro.core.energy import fit_ou_theta, forecast_gain
+    from repro.core.forecast import fit_ou_theta, forecast_gain
     rng = np.random.default_rng(0)
     n = 200_000
     theta = 0.01

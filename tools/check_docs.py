@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Docs-consistency gate: CLI flags mentioned in the docs must exist.
+
+Collects every ``--flag`` token in README.md and docs/*.md and asserts
+each one appears in the ``--help`` output of the CLIs the docs describe
+(``repro.launch.fleet`` and ``benchmarks.fleet_throughput``). Catches
+the classic drift where a flag is renamed or removed but the prose keeps
+recommending it. Run from the repo root:
+
+    PYTHONPATH=src python tools/check_docs.py
+
+(CI runs it after the fleet smoke; an editable install makes PYTHONPATH
+unnecessary.)
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CLIS = ("repro.launch.fleet", "benchmarks.fleet_throughput")
+DOCS = ("README.md", "docs")
+
+# `--flag` with a word boundary before it (skips ---- rules and
+# mid-word dashes); flags are lowercase kebab-case in this repo
+FLAG_RE = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
+
+
+def help_text(module: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    res = subprocess.run([sys.executable, "-m", module, "--help"],
+                        capture_output=True, text=True, env=env,
+                        cwd=ROOT)
+    if res.returncode != 0:
+        sys.stderr.write(res.stderr)
+        raise SystemExit(f"--help failed for {module}")
+    return res.stdout
+
+
+def doc_flags() -> dict[str, list[str]]:
+    found: dict[str, list[str]] = {}
+    files: list[Path] = []
+    for entry in DOCS:
+        p = ROOT / entry
+        files.extend(sorted(p.glob("*.md")) if p.is_dir() else [p])
+    for f in files:
+        for flag in FLAG_RE.findall(f.read_text()):
+            found.setdefault(flag, []).append(str(f.relative_to(ROOT)))
+    return found
+
+
+def main() -> int:
+    known = set()
+    for module in CLIS:
+        known |= set(FLAG_RE.findall(help_text(module)))
+    found = doc_flags()
+    missing = {flag: sorted(set(where))
+               for flag, where in sorted(found.items())
+               if flag not in known}
+    if missing:
+        print("docs mention CLI flags that no CLI --help declares:",
+              file=sys.stderr)
+        for flag, where in missing.items():
+            print(f"  {flag}  (in {', '.join(where)})", file=sys.stderr)
+        return 1
+    print(f"docs-consistency OK: {len(found)} doc flags all exist "
+          f"in {' + '.join(CLIS)} --help")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
