@@ -1,0 +1,261 @@
+"""Measured quality plane: the accuracy-throughput Pareto at fleet scale.
+
+The throughput suites price every request off accuracy *tables*; this
+suite closes the loop with *measured* quality-of-result: the oracle
+tables (``repro.quality.oracles`` — real anytime-SVM inference, Harris
+corner-set equivalence, real anytime-LM decodes through a calibrated
+engine) replace the analytic proxies, and every completion is scored by
+the control plane's quality ledger.
+
+Claims checked:
+- the NumPy host driver and the fused JAX serve scan agree *bit-exactly*
+  on every ledgered quality counter (measured-correct completions,
+  nanojoule spend) — the ledger is integer arithmetic by construction;
+- ``--sched quality`` (queues served by marginal measured-accuracy-per-
+  joule) dominates reactive shedding on the accuracy-throughput Pareto
+  for at least one harvest family: at the same offered load it completes
+  at least as many requests at strictly higher mean measured accuracy;
+- the HAR measured-accuracy column reproduces the paper's headline QoR
+  shape: mean measured accuracy of completed HAR requests within
+  ``RATIO_TOL`` of ``PAPER_QOR_RATIO`` (83%-of-88%) times the measured
+  all-features ceiling (floors are placed at that ratio by
+  ``repro.quality.calibrate``, so this checks the serving stack actually
+  lands where the tables say it should);
+- the proxy-vs-measured gap is recorded per run (what planning on
+  analytic tables mis-reports about real output quality).
+
+    python -m benchmarks.fleet_quality           # full Pareto suite
+    python -m benchmarks.fleet_quality --smoke   # CI ledger-agreement gate
+
+JSON lands in experiments/fleet_quality.json; docs/experiments.md
+documents the schema. The smoke gate calibrates the HAR + Harris oracles
+(seconds) and keeps the proxy LM tables (the LM engine calibration is
+compile-dominated, ~2 min — the full suite pays it once per process).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.launch.fleet import make_power_matrix, run_scheduled
+from repro.quality.ledger import pareto_point
+from repro.quality.oracles import PAPER_QOR_RATIO
+
+DT = 0.01
+PERIOD_S = 10.0  # offered load at multiplier 1.0 is N/10 rps
+FAMILIES = ("SOM", "SIM", "RF")
+LOADS = (0.5, 1.0, 2.0)  # multipliers on the N/10 baseline rate
+SCHEDS = ("reactive", "forecast", "quality")
+RATIO_TOL = 0.08  # |har_ratio - PAPER_QOR_RATIO| tolerance (dimensionless)
+
+_COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
+               "evicted", "requeued")
+_LEDGER_KEYS = ("meas_wl", "joules_nj_wl", "completed_wl", "units_wl")
+
+
+def _measured_workloads(with_lm: bool = True):
+    from repro.quality.calibrate import measured_workloads
+    names = ("har", "harris", "lm") if with_lm else ("har", "harris")
+    wls = list(measured_workloads(names))
+    if not with_lm:
+        from repro.fleet.workloads import lm_workload
+        wls.append(lm_workload())
+    return wls
+
+
+def _run(power, n_workers, wls, duration_s, rate, *, sched, backend,
+         seed=0):
+    n_steps = int(duration_s / DT)
+    return run_scheduled(power, DT, n_workers, wls, rate_rps=rate,
+                         mix=np.array([0.4, 0.3, 0.3]), n_steps=n_steps,
+                         seed=seed, backend=backend, sched=sched)
+
+
+# ---------------------------------------------------------------------------
+# ledger agreement: the bit-exactness gate
+# ---------------------------------------------------------------------------
+
+
+def ledger_agreement(n_workers: int = 64, duration_s: float = 30.0,
+                     n_rows: int = 8, seed: int = 0, *,
+                     wls=None, sched: str = "quality") -> dict:
+    """One definition of *quality-ledger* agreement: both backends serve
+    the same stream over one trace bank and must match bit-exactly on
+    every request-lifecycle counter AND every ledgered quality counter
+    (measured-correct counts, nanojoule spend, per-workload units).
+    Used by the recorded benchmark and the CI smoke gate alike."""
+    from repro.fleet.scheduler import FleetScheduler, RequestStream, \
+        run_fleet
+    from repro.launch.fleet import build_dispatch_pool
+    if wls is None:
+        wls = _measured_workloads(with_lm=False)
+    power = make_power_matrix(["SOM", "RF"], n_rows, duration_s, DT, seed)
+    n_steps = int(duration_s / DT)
+    # mix sized to the workload list (front-loaded like the suites'
+    # 0.4/0.3/0.3; RequestStream normalizes)
+    mix = np.array([0.4] + [0.3] * (len(wls) - 1))
+    res, states = {}, {}
+    for backend in ("numpy", "jax"):
+        pool = build_dispatch_pool(power, DT, n_workers, wls, seed,
+                                   backend=backend)
+        s = FleetScheduler(pool, wls, sched=sched)
+        stream = RequestStream(n_workers / PERIOD_S, mix, n_steps, DT,
+                               seed=seed + 1)
+        res[backend] = run_fleet(pool, s, stream, n_steps)
+        states[backend] = s.state
+    counts_agree = all(res["numpy"][k] == res["jax"][k]
+                       for k in _COUNT_KEYS)
+    ledger_agree = all(
+        np.array_equal(getattr(states["numpy"], k),
+                       getattr(states["jax"], k)) for k in _LEDGER_KEYS)
+    return {
+        "n_workers": n_workers, "duration_s": duration_s, "sched": sched,
+        "counts_agree": bool(counts_agree),
+        "ledger_agree": bool(ledger_agree),
+        "ledger": {b: {"meas_wl": [int(x) for x in states[b].meas_wl],
+                       "joules_nj_wl": [int(x)
+                                        for x in states[b].joules_nj_wl]}
+                   for b in ("numpy", "jax")},
+        "completed": {b: res[b]["completed"] for b in ("numpy", "jax")},
+    }
+
+
+# ---------------------------------------------------------------------------
+# the accuracy-throughput Pareto
+# ---------------------------------------------------------------------------
+
+
+def pareto_suite(n_workers: int = 256, duration_s: float = 240.0,
+                 seed: int = 0, families=FAMILIES, loads=LOADS,
+                 scheds=SCHEDS, backend: str = "jax") -> dict:
+    """Per harvest family x scheduler x offered load: one fused serve
+    trace over the measured workloads, reduced to a Pareto point
+    (completed requests vs mean measured accuracy, with the proxy
+    accuracy and ledgered J/request alongside)."""
+    wls = _measured_workloads()
+    # "best" = the measured table's maximum (the knob where accuracy
+    # peaks), matching ratio_floor's denominator: CI-sized measured
+    # curves are non-monotonic, so the all-units endpoint understates
+    # the attainable ceiling
+    har_best = float(np.max(wls[0].accuracy))
+    out: dict = {"n_workers": n_workers, "duration_s": duration_s,
+                 "har_measured_best": har_best,
+                 "paper_qor_ratio": PAPER_QOR_RATIO,
+                 "ratio_tol": RATIO_TOL,
+                 "workload_floors": {w.name: w.floor for w in wls},
+                 "families": {}}
+    for fam in families:
+        power = make_power_matrix([fam], min(16, n_workers), duration_s,
+                                  DT, seed)
+        per: dict = {}
+        for sched in scheds:
+            pts = {}
+            for load in loads:
+                r = _run(power, n_workers, wls, duration_s,
+                         load * n_workers / PERIOD_S, sched=sched,
+                         backend=backend, seed=seed)
+                p = pareto_point(r)
+                p["shed"] = r["shed"]
+                har = r["per_workload"].get("har")
+                p["har_measured_accuracy"] = (
+                    har["mean_measured_accuracy"] if har else None)
+                p["har_ratio"] = (p["har_measured_accuracy"] / har_best
+                                  if har else None)
+                p["per_workload_completed"] = {
+                    k: v["completed"] for k, v in r["per_workload"].items()}
+                pts[str(load)] = p
+            per[sched] = pts
+        # dominance at matched offered load: quality completes >= and
+        # scores strictly higher mean measured accuracy than reactive
+        per["quality_dominates_reactive"] = any(
+            per["quality"][l]["completed"]
+            >= per["reactive"][l]["completed"]
+            and per["quality"][l]["mean_measured_accuracy"]
+            > per["reactive"][l]["mean_measured_accuracy"]
+            for l in per["quality"]) if "quality" in per else False
+        out["families"][fam] = per
+    out["quality_dominates_reactive_any_family"] = any(
+        out["families"][f]["quality_dominates_reactive"]
+        for f in out["families"])
+    # the headline QoR shape: har ratio at the quality scheduler's
+    # baseline load, per family (only computable when that grid cell
+    # was actually swept)
+    base = str(1.0)
+    have_cell = "quality" in scheds and any(str(l) == base for l in loads)
+    ratios = ([out["families"][f]["quality"][base]["har_ratio"]
+               for f in out["families"]] if have_cell else [])
+    out["har_ratio_quality_load1"] = ratios
+    # every family must have a ratio (HAR completions > 0) AND land
+    # within tolerance — a family with no HAR completions is a failure
+    # of the claim, not a skip
+    out["har_ratio_within_tol"] = bool(ratios) and all(
+        r is not None and abs(r - PAPER_QOR_RATIO) <= RATIO_TOL
+        for r in ratios)
+    return out
+
+
+def run_suite(n_workers: int = 256, duration_s: float = 240.0) -> dict:
+    t0 = time.perf_counter()
+    agree = ledger_agreement(wls=_measured_workloads())
+    pareto = pareto_suite(n_workers, duration_s)
+    total = time.perf_counter() - t0
+    res = {"agreement": agree, "pareto": pareto}
+    us = total * 1e6 / max(len(pareto["families"]) * len(LOADS), 1)
+    emit("quality.ledger_bitexact", us,
+         str(agree["counts_agree"] and agree["ledger_agree"]))
+    emit("quality.sched_dominates_reactive", us,
+         str(pareto["quality_dominates_reactive_any_family"]))
+    for f, per in pareto["families"].items():
+        q = per["quality"]["1.0"]
+        emit(f"quality.measured_accuracy_{f}", us,
+             f"{q['mean_measured_accuracy']:.3f}")
+    emit("quality.har_ratio_within_tol", us,
+         str(pareto["har_ratio_within_tol"]))
+    out = Path("experiments")
+    out.mkdir(exist_ok=True)
+    (out / "fleet_quality.json").write_text(
+        json.dumps(res, indent=1, default=str))
+    return res
+
+
+def run_smoke() -> dict:
+    """CI gate: HAR + Harris oracles calibrate (seconds; the LM engine
+    stays proxy — its calibration is compile-dominated), then both
+    backends must agree bit-exactly on every ledgered quality counter
+    under both the quality and reactive schedulers."""
+    out = {}
+    wls = _measured_workloads(with_lm=False)
+    for sched in ("quality", "reactive"):
+        r = ledger_agreement(wls=wls, sched=sched)
+        out[sched] = r
+        if not (r["counts_agree"] and r["ledger_agree"]):
+            print(json.dumps(r, indent=1), file=sys.stderr)
+            raise SystemExit(
+                f"quality ledger smoke FAILED under sched={sched}")
+        if r["completed"]["numpy"] <= 0:
+            raise SystemExit(f"quality smoke vacuous under sched={sched}")
+    return out
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=256)
+    ap.add_argument("--duration", type=float, default=240.0,
+                    help="serve-trace length per Pareto point, seconds")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: numpy-vs-jax bit-exact ledger "
+                         "agreement over measured HAR+Harris oracles")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return run_smoke()
+    return run_suite(args.workers, args.duration)
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1, default=str))

@@ -268,7 +268,8 @@ _COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
 
 def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
                      seed: int = 0, sched: str = "forecast",
-                     traces=None, forecaster: str = "ou") -> dict:
+                     traces=None, forecaster: str = "ou",
+                     workloads=None) -> dict:
     """One definition of *scheduler* agreement: the NumPy per-tick driver
     and the fused JAX launch serve the same stream over one trace bank
     and must match on every request-lifecycle counter and on the pool's
@@ -283,9 +284,10 @@ def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
     res = {}
     for backend in ("numpy", "jax"):
         res[backend] = run_scheduled(
-            power, DT, n_workers, _workloads(), rate_rps=rate, mix=MIX,
-            n_steps=n_steps, seed=seed, backend=backend, sched=sched,
-            forecaster=forecaster, trace_families=families)
+            power, DT, n_workers, workloads or _workloads(),
+            rate_rps=rate, mix=MIX, n_steps=n_steps, seed=seed,
+            backend=backend, sched=sched, forecaster=forecaster,
+            trace_families=families)
     agree = all(res["numpy"][k] == res["jax"][k] for k in _COUNT_KEYS)
     return {
         "n_workers": n_workers,
@@ -522,8 +524,10 @@ def run_control_plane_suite(n_workers: int = 1024,
 def run_smoke(n_workers: int = 256, duration_s: float = 30.0) -> dict:
     """CI gate: short shared trace, both backends, counts must match
     exactly (exercises the scan path on interpret-mode-only hosts) —
-    for the local-mode pools, the fused forecast control plane, AND the
-    per-row automatic forecaster selection (regime + OU rows mixed)."""
+    for the local-mode pools, the fused forecast control plane, the
+    per-row automatic forecaster selection (regime + OU rows mixed),
+    AND the quality scheduler over a real trained-and-measured HAR
+    workload (the measured-oracle path)."""
     res = _backend_agreement(n_workers, duration_s, 16)
     if not res["counts_agree"]:
         print(json.dumps(res, indent=1), file=sys.stderr)
@@ -538,8 +542,19 @@ def run_smoke(n_workers: int = 256, duration_s: float = 30.0) -> dict:
         print(json.dumps(ares, indent=1), file=sys.stderr)
         raise SystemExit("fleet forecaster-auto smoke FAILED: "
                          "counts disagree")
+    # the measured-quality path: a REAL trained-and-measured HAR
+    # workload (per-sample oracle table wired as qtab; CI-sized build)
+    # served under the quality scheduler must also agree exactly
+    qres = _sched_agreement(
+        64, duration_s, 8, sched="quality",
+        workloads=[har_workload(real=True), harris_workload(),
+                   lm_workload()])
+    if not qres["counts_agree"]:
+        print(json.dumps(qres, indent=1), file=sys.stderr)
+        raise SystemExit("fleet quality-sched (real har) smoke FAILED: "
+                         "counts disagree")
     return {"local": res, "sched_forecast": sres,
-            "sched_forecast_auto": ares}
+            "sched_forecast_auto": ares, "sched_quality_real_har": qres}
 
 
 def run_scheduler_suite() -> dict:

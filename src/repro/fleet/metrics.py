@@ -54,6 +54,27 @@ def _energy_block(pool, completed: int) -> dict:
     }
 
 
+def quality_block(sp, ss) -> dict:
+    """The summary's quality-plane block: fleet-wide measured accuracy,
+    the proxy-vs-measured gap, and the ledgered spend, all derived from
+    the control plane's bit-exact integer counters (``meas_wl``,
+    ``joules_nj_wl`` — see ``repro.quality.ledger`` for the richer
+    per-workload record views over the same arrays)."""
+    completed = int(np.asarray(ss.completed_wl).sum())
+    correct = int(np.asarray(ss.meas_wl).sum())
+    joules = float(np.asarray(ss.joules_nj_wl).sum()) * 1e-9
+    proxy = float(np.asarray(ss.acc_wl).sum()) / max(completed, 1)
+    measured = correct / max(completed, 1)
+    return {
+        "tables": sp.quality,  # "proxy" | "measured"
+        "measured_correct": correct,
+        "mean_measured_accuracy": measured,
+        "proxy_minus_measured": proxy - measured,
+        "ledger_joules": joules,
+        "j_per_completed_ledger": joules / max(completed, 1),
+    }
+
+
 def _hist_percentile(hist: np.ndarray, lat_max_s: float, q: float) -> float:
     """Percentile estimate from the fixed-bin latency histogram (bin
     centers; the fused scan's records-free substitute for exact order
@@ -91,6 +112,9 @@ def sched_summary(sp, ss, duration_s: float, pool=None,
                                    / max(completed, 1)),
         "batch_hist": [int(x) for x in np.asarray(ss.batch_hist)],
     }
+    # the quality plane's ledgered counters (measured correctness +
+    # table-priced spend; see repro.quality.ledger)
+    out["quality"] = quality_block(sp, ss)
     out["per_workload"] = {}
     for w in range(sp.W):
         c = int(ss.completed_wl[w])
@@ -101,6 +125,8 @@ def sched_summary(sp, ss, duration_s: float, pool=None,
             "completed": c,
             "mean_units": float(ss.units_wl[w]) / c,
             "mean_expected_accuracy": float(ss.acc_wl[w]) / c,
+            "mean_measured_accuracy": float(ss.meas_wl[w]) / c,
+            "ledger_joules": float(ss.joules_nj_wl[w]) * 1e-9,
         }
     if pool is not None:
         out["energy"] = _energy_block(pool, completed)

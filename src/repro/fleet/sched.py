@@ -45,6 +45,24 @@ Mechanisms (array formulation of the PR-1 semantics):
   ``grace + deadline_factor * est`` (``est`` from the per-worker MCU
   active power: heterogeneous fleets straggle heterogeneously) are
   revoked and requeued, the ``runtime.straggler`` deadline rule.
+- **Quality-aware service** (``sched="quality"``) — queues are served in
+  descending *marginal accuracy-per-joule* order (``SchedParams.QVALUE``,
+  computed from the workload accuracy tables — measured oracle tables
+  under ``repro.quality``) instead of oldest-head-first: when harvested
+  energy cannot serve the whole backlog, the joules go to the requests
+  that buy the most measured accuracy, and the starved low-value queues
+  age out through the ordinary stale-prefix shed — value-ranked shedding
+  without a second drop mechanism. Reactive and forecast modes are
+  untouched (the rank key is the only difference, guarded by
+  ``value_order``).
+- **Quality ledger** — on every completion, ``collect`` gathers the
+  request's *measured* quality from the precomputed
+  ``(workload, sample, units)`` oracle table (``repro.quality.oracles``)
+  and its table-priced spend in integer nanojoules, accumulating both
+  into per-workload ``SchedState`` counters. Sample ids are assigned
+  deterministically (the per-workload completion counter, cycling mod
+  the oracle set size), so the fused scan needs no per-request records
+  and both backends ledger identically.
 
 Agreement contract: every *decision* (ranking, admission, batch sizes,
 knob units, shed/evict counts) is integer arithmetic or elementwise IEEE
@@ -72,9 +90,14 @@ SS = collections.namedtuple("SS", SCHED_FIELDS)
 Assignment = collections.namedtuple("Assignment",
                                     ["mask", "wl", "units", "batch"])
 
-SCHED_MODES = ("reactive", "forecast")
+SCHED_MODES = ("reactive", "forecast", "quality")
 
 _BIG = np.int64(1) << 40  # sentinel: floor unattainable -> never afford
+
+_S_PROXY = 64  # synthetic oracle rows for workloads without a measured
+# per-sample table: row s of the quantized table scores "correct" at u
+# units iff s < round(accuracy[u] * _S_PROXY), so the ledgered mean
+# reproduces the proxy accuracy curve to 1/64 without any randomness.
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +129,9 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
         max_batch: per-assignment batch cap, requests.
         max_retries: retry budget before a request counts as lost.
         deadline_factor: straggler deadline multiplier (dimensionless).
-        sched: "reactive" (instantaneous budget) or "forecast".
+        sched: "reactive" (instantaneous budget), "forecast", or
+            "quality" (reactive budget, queues served by marginal
+            measured-accuracy-per-joule instead of age).
         lookahead_s: forecast window, seconds (rounded to >= 1 tick).
         forecaster: one of ``repro.core.forecast.FORECASTER_MODES``;
             "auto" picks a model per trace row (by ``trace_families``
@@ -114,7 +139,9 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
         trace_families: optional per-power-row family names ("SOM", ...).
         arp_order: lag order p of the "arp" model (ticks).
     Returns:
-        a frozen :class:`SchedParams`.
+        a frozen :class:`SchedParams`. Its ``quality`` provenance label
+        is inferred: "measured" when any workload carries a per-sample
+        oracle table (``qtab``), "proxy" otherwise.
     """
     if sched not in SCHED_MODES:
         raise ValueError(f"unknown sched mode {sched!r}; "
@@ -133,6 +160,13 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
     FULL = np.zeros(W)
     P_REQ = np.zeros(W, dtype=np.int64)
     IS_SMART = np.zeros(W, dtype=bool)
+    qtabs = [getattr(wk, "qtab", None) for wk in workloads]
+    S_Q = np.array([_S_PROXY if q is None else q.shape[0] for q in qtabs],
+                   dtype=np.int64)
+    QTAB = np.zeros((W, int(S_Q.max()), u_max + 1), dtype=np.int64)
+    QJ_NJ = np.zeros((W, u_max + 1), dtype=np.int64)
+    QVALUE = np.zeros(W)
+    QTARGET = np.zeros(W, dtype=np.int64)
     for w, wk in enumerate(workloads):
         nu = wk.costs.n_units
         NU[w] = nu
@@ -147,6 +181,21 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
             IS_SMART[w] = True
             ok = np.nonzero(wk.accuracy >= wk.floor)[0]
             P_REQ[w] = int(ok[0]) if ok.size else _BIG
+        # quality tables: measured per-sample oracle rows when the
+        # workload carries them, the deterministic quantized proxy rows
+        # otherwise; spend is priced from the cumulative cost table and
+        # quantized to integer nanojoules (bit-exact ledger sums)
+        if qtabs[w] is not None:
+            QTAB[w, :S_Q[w], :nu + 1] = np.asarray(qtabs[w], np.int64)
+        else:
+            QTAB[w, :_S_PROXY, :nu + 1] = (
+                np.arange(_S_PROXY)[:, None]
+                < np.round(wk.accuracy[None, :] * _S_PROXY))
+        QJ_NJ[w, :nu + 1] = np.round(CU[w, :nu + 1] * 1e9)
+        u_eff = int(min(P_REQ[w] if IS_SMART[w] else nu, nu))
+        QVALUE[w] = ((ACC[w, u_eff] - ACC[w, 0])
+                     / max(CU[w, u_eff], 1e-300))
+        QTARGET[w] = int(np.argmax(wk.accuracy))  # first knob at the max
     L = max(int(round(lookahead_s / p.dt)), 1)
     if sched == "forecast":
         rf = fit_row_forecast(p.power, forecaster, L,
@@ -174,7 +223,13 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
         ECAP=0.5 * p.C * (p.v_max * p.v_max - p.v_off * p.v_off),
         ACTIVE_P=np.asarray(p.active_power_w, dtype=np.float64),
         lat_bins=int(lat_bins),
-        lat_max_s=2.0 * (float(shed_after_s) + float(grace_s)))
+        lat_max_s=2.0 * (float(shed_after_s) + float(grace_s)),
+        quality=("measured" if any(q is not None for q in qtabs)
+                 else "proxy"),
+        value_order=(sched == "quality"),
+        S_Q=S_Q, QTAB=QTAB, QJ_NJ=QJ_NJ, QVALUE=QVALUE,
+        WL_RANK=np.argsort(-QVALUE, kind="stable").astype(np.int64),
+        QTARGET=QTARGET)
 
 
 def make_sched_state(sp: SchedParams) -> SchedState:
@@ -354,7 +409,8 @@ def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
         (``p_pending`` and friends).
 
     Workers are ranked richest-first by ``budget_plan`` (stable sort);
-    queues are served oldest-head-first. Per worker: SMART admission at
+    queues are served oldest-head-first (or, under ``sp.value_order``,
+    best marginal-accuracy-per-joule first). Per worker: SMART admission at
     the workload floor on the *instantaneous* budget (never start work
     whose fixed cost is unfunded today), batch size and greedy knob
     refinement on the *planning* budget (forecast inflow funds in-flight
@@ -365,11 +421,16 @@ def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
     elig = xp.take(dispatchable, order)
     bn = xp.take(budget_now, order)
     bp = xp.take(budget_plan, order)
-    head_t = xp.where(
-        ss.q_len > 0,
-        xp.take_along_axis(ss.q_t, ss.q_head[:, None], axis=1)[:, 0],
-        xp.inf)
-    wl_order = _argsort(head_t, xp)
+    if sp.value_order:
+        # sched="quality": serve queues richest-in-accuracy-per-joule
+        # first (a params constant, so the order is static under tracing)
+        wl_order = xp.asarray(sp.WL_RANK)
+    else:
+        head_t = xp.where(
+            ss.q_len > 0,
+            xp.take_along_axis(ss.q_t, ss.q_head[:, None], axis=1)[:, 0],
+            xp.inf)
+        wl_order = _argsort(head_t, xp)
     q_head, q_len = ss.q_head, ss.q_len
     taken = xp.zeros(sp.n, dtype=bool)
     a_wl = xp.zeros(sp.n, dtype=i64)
@@ -397,18 +458,34 @@ def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
         # batch sizing on the *planning* budget (forecast inflow lets more
         # floor-knob requests ride one power cycle, amortizing fixed+emit
         # overhead); greedy knob refinement on the *instantaneous* budget
-        # (spend expected inflow on throughput, never on slower service)
+        # (spend expected inflow on throughput, never on slower service).
+        # Quality mode sizes batches at the max-measured-accuracy knob
+        # instead of the floor knob: fewer requests ride one power cycle,
+        # each affording the knob where the oracle says accuracy peaks —
+        # under scarcity the target degrades back to the floor (b_want
+        # clips to >= 1 and refinement still bounds at p_req).
         spend_plan = bp - overhead
         spend_now = bn - overhead
         cpr = xp.take(ucum, xp.clip(p_req, 0, ucum.shape[0] - 1))
+        if sp.value_order:
+            # quality mode also CAPS refinement at the target knob:
+            # measured tables are non-monotonic, so units past the peak
+            # cost strictly more joules for no more (often less)
+            # measured accuracy
+            u_cap = xp.maximum(xp.take(xp.asarray(sp.QTARGET), wl), p_req)
+            cpq = xp.take(ucum, xp.clip(u_cap, 0, ucum.shape[0] - 1))
+            cpb = xp.maximum(cpq, cpr)  # never below the admission knob
+        else:
+            u_cap = nu
+            cpb = cpr
         b_want = xp.where(
-            cpr > 0,
-            xp.floor_divide(spend_plan, xp.maximum(cpr, 1e-300)), sp.B)
+            cpb > 0,
+            xp.floor_divide(spend_plan, xp.maximum(cpb, 1e-300)), sp.B)
         b_want = xp.clip(b_want, 1, sp.B).astype(i64)
         u_want = xp.clip(
             xp.searchsorted(ucum, spend_now / xp.maximum(b_want, 1),
                             side="right").astype(i64) - 1,
-            p_req, nu)
+            p_req, u_cap)
         ok = elig & ~taken & afford & (u_want > 0)
         b = xp.where(ok, b_want, 0)
         c = xp.cumsum(b)
@@ -418,7 +495,7 @@ def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
         u = xp.clip(
             xp.searchsorted(ucum, spend_now / xp.maximum(actual, 1),
                             side="right").astype(i64) - 1,
-            p_req, nu)
+            p_req, u_cap)
         # consume the queue front: gather each worker's request slice
         phys = (head + start[:, None] + jB) % sp.Q
         row_t = xp.take(ss.q_t, wl, axis=0)
@@ -568,6 +645,23 @@ def _collect_impl(sp: SchedParams, ss, emit, lost, units_done, t, xp):
     Uw = sp.ACC.shape[1]
     accv = xp.take(xp.asarray(sp.ACC).reshape(-1),
                    ss.f_wl[:, None] * Uw + xp.clip(units_slot, 0, Uw - 1))
+    # quality ledger: each completion is scored against a deterministic
+    # oracle sample — per workload, this tick's completions are numbered
+    # in flat (worker, slot) order continuing the run-long completed_wl
+    # counter, cycling mod the oracle set size — then measured
+    # correctness (0/1) and the table-priced spend (integer nanojoules)
+    # are gathered from the precomputed (workload, sample, units)
+    # tables. Integer arithmetic only: both backends ledger bit-exactly.
+    cc2 = compc.reshape(-1, sp.W)  # (N*B, W)
+    sample = ((ss.completed_wl[None, :] + xp.cumsum(cc2, axis=0) - cc2)
+              % xp.asarray(sp.S_Q)[None, :])
+    Smax, Uq = sp.QTAB.shape[1], sp.QTAB.shape[2]
+    uq = xp.clip(units_slot, 0, Uq - 1)
+    qv = xp.take(xp.asarray(sp.QTAB).reshape(-1),
+                 (xp.arange(sp.W)[None, :] * Smax + sample) * Uq
+                 + uq.reshape(-1)[:, None])
+    jnj = xp.take(xp.asarray(sp.QJ_NJ).reshape(-1),
+                  ss.f_wl[:, None] * Uq + uq)
     ss = ss._replace(
         completed=ss.completed + xp.sum(comp),
         completed_wl=ss.completed_wl + xp.sum(compc, axis=(0, 1)),
@@ -575,6 +669,9 @@ def _collect_impl(sp: SchedParams, ss, emit, lost, units_done, t, xp):
                                       axis=(0, 1)),
         acc_wl=ss.acc_wl + xp.sum(xp.where(comp, accv, 0.0)[:, :, None]
                                   * compc, axis=(0, 1)),
+        meas_wl=ss.meas_wl + xp.sum(qv * cc2, axis=0),
+        joules_nj_wl=ss.joules_nj_wl + xp.sum(
+            jnj.reshape(-1)[:, None] * cc2, axis=0),
         lat_sum=ss.lat_sum + xp.sum(xp.where(comp, lat, 0.0)),
         lat_hist=ss.lat_hist + hist_ext[:sp.lat_bins])
     ss = _requeue(sp, ss, unfinished, xp)

@@ -186,6 +186,20 @@ class SchedParams:
     # latency histogram (fused-scan-friendly percentile estimates)
     lat_bins: int  # histogram bins
     lat_max_s: float  # histogram range, seconds
+    # quality plane (repro.quality): per-sample oracle tables the ledger
+    # gathers at completion time. QTAB rows beyond a workload's S_Q are
+    # padding; sample ids cycle mod S_Q. Costs are quantized to integer
+    # nanojoules so the ledger counters stay bit-exact across backends.
+    quality: str  # table provenance: "proxy" | "measured"
+    value_order: bool  # sched="quality": serve queues by WL_RANK, not age
+    S_Q: np.ndarray  # (W,) int64 oracle samples per workload
+    QTAB: np.ndarray  # (W, S_max, U+1) int64 0/1 per-sample correctness
+    QJ_NJ: np.ndarray  # (W, U+1) int64 nanojoules per completed request
+    QVALUE: np.ndarray  # (W,) marginal accuracy-per-joule at the admission
+    # knob (dimensionless per joule; the sched="quality" rank key)
+    WL_RANK: np.ndarray  # (W,) int64 queue service order by QVALUE desc
+    QTARGET: np.ndarray  # (W,) int64 smallest knob reaching max measured
+    # accuracy (sched="quality" sizes batches so each request affords it)
 
 
 @dataclasses.dataclass
@@ -223,6 +237,10 @@ class SchedState:
     lat_sum: np.ndarray
     lat_hist: np.ndarray  # (lat_bins,)
     batch_hist: np.ndarray  # (B+1,) assignments by batch size
+    # quality ledger (repro.quality.ledger): measured-correct completions
+    # and table-priced spend, both integer so backends agree bit-exactly
+    meas_wl: np.ndarray  # (W,) int64 oracle-correct completed requests
+    joules_nj_wl: np.ndarray  # (W,) int64 nanojoules spent on completions
 
 
 SCHED_FIELDS: tuple[str, ...] = tuple(
@@ -243,7 +261,8 @@ def init_sched_state(sp: SchedParams) -> SchedState:
         submitted=i(), rejected=i(), shed=i(), lost=i(), evicted=i(),
         requeued=i(), completed=i(),
         completed_wl=i(sp.W), units_wl=i(sp.W), acc_wl=f(sp.W),
-        lat_sum=f(), lat_hist=i(sp.lat_bins), batch_hist=i(sp.B + 1))
+        lat_sum=f(), lat_hist=i(sp.lat_bins), batch_hist=i(sp.B + 1),
+        meas_wl=i(sp.W), joules_nj_wl=i(sp.W))
 
 
 def sched_state_as_tuple(s: SchedState) -> tuple:

@@ -223,7 +223,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                     # through a cache-sized masked all-reduce (measured,
                     # §Perf iterations 2-3 — refuted). shard_map pins the
                     # slice to each shard's local blocks.
-                    from jax import shard_map as _shard_map
+                    from repro.sharding import shard_map_compat
 
                     stride = 4
                     kept = shape.seq_len // stride
@@ -244,10 +244,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                         return x
 
                     state_specs = jax.tree.map(lambda s: s.spec, state_sh)
-                    slice_fn = _shard_map(
+                    slice_fn = shard_map_compat(
                         lambda st: jax.tree.map(_slice_local, st),
                         mesh=ctx.mesh, in_specs=(state_specs,),
-                        out_specs=state_specs, check_vma=False)
+                        out_specs=state_specs, check=False)
 
                     def serve_step(params, state, token, cache_len):
                         small = slice_fn(state)

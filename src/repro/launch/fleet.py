@@ -9,6 +9,8 @@
         --sched forecast --forecaster auto --traces SIM,RF
     PYTHONPATH=src python -m repro.launch.fleet --workers 100000 \
         --backend jax --scheduler off --hetero --hetero-mcu
+    PYTHONPATH=src python -m repro.launch.fleet --workers 256 \
+        --quality measured --sched quality --traces SIM,RF
 
 Builds a harvest-powered worker fleet over a mix of energy-trace families,
 then serves one global HAR + Harris + LM request stream either through the
@@ -21,8 +23,13 @@ seconds instead of instantaneous charge, under the ``--forecaster``
 model (``repro.core.forecast``: OU / occlusion / burst / AR(p), or
 ``auto`` to match each worker's trace family); ``--hetero``
 mixes capacitor sizes and ``--hetero-mcu`` mixes MCU classes (per-worker
-active power) across the fleet. The helpers here are reused by
-``benchmarks/fleet_throughput.py`` and ``examples/fleet_serve.py``.
+active power) across the fleet. ``--quality measured`` swaps the
+analytic accuracy proxies for tables measured by the quality oracles
+(``repro.quality``: real SVM inference, Harris corner equivalence, real
+anytime-LM decodes), and ``--sched quality`` serves queues by marginal
+measured-accuracy-per-joule instead of age. The helpers here are reused
+by ``benchmarks/fleet_throughput.py``, ``benchmarks/fleet_quality.py``
+and ``examples/fleet_serve.py``.
 """
 from __future__ import annotations
 
@@ -229,8 +236,17 @@ def main(argv: list[str] | None = None) -> dict:
                     help="MCU-class mixing: per-worker active power")
     ap.add_argument("--sched", choices=SCHED_MODES, default="reactive",
                     help="routing/batching budget: instantaneous charge "
-                         "(reactive) or the OU harvest forecast over the "
-                         "next --lookahead seconds (forecast)")
+                         "(reactive), the harvest forecast over the next "
+                         "--lookahead seconds (forecast), or reactive "
+                         "budgets with queues served by marginal "
+                         "measured-accuracy-per-joule (quality)")
+    ap.add_argument("--quality", choices=("proxy", "measured"),
+                    default="proxy",
+                    help="accuracy-table provenance: analytic proxies "
+                         "(proxy) or tables measured by the quality "
+                         "oracles — real SVM inference, Harris corner "
+                         "equivalence, real anytime-LM decodes "
+                         "(measured; calibrates once per process)")
     ap.add_argument("--lookahead", type=float, default=5.0,
                     help="forecast horizon in seconds (sched=forecast)")
     ap.add_argument("--forecaster", choices=FORECASTER_MODES, default="ou",
@@ -250,7 +266,11 @@ def main(argv: list[str] | None = None) -> dict:
     if unknown:
         ap.error(f"unknown workload(s) {unknown}; "
                  f"choose from {sorted(WORKLOAD_FACTORIES)}")
-    workloads = [WORKLOAD_FACTORIES[n]() for n in wl_names]
+    if args.quality == "measured":
+        from repro.quality.calibrate import measured_workloads
+        workloads = measured_workloads(wl_names, seed=args.seed)
+    else:
+        workloads = [WORKLOAD_FACTORIES[n]() for n in wl_names]
     mix = np.array([float(x) for x in args.mix.split(",")])
     if mix.shape[0] != len(workloads):
         ap.error(f"--mix has {mix.shape[0]} entries for "

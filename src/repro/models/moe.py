@@ -141,7 +141,6 @@ def _moe_replicated_ep(x, router, wi, wo, shared, *, n_experts, topk,
     down-projection. Cuts resident+streamed expert bytes by dp_size — the
     1T-MoE decode memory fix.
     """
-    ep_size = jax.lax.axis_size(tp_axis)
     e_local = wi.shape[0]  # already the local shard
     B, S, D = x.shape
     k = topk_override if topk_override is not None else topk
@@ -202,7 +201,6 @@ def _moe_replicated_ep(x, router, wi, wo, shared, *, n_experts, topk,
         keep.astype(jnp.float32))
     f_e = assign / jnp.maximum(assign.sum(), 1.0)
     aux = n_experts * jnp.sum(f_e * probs.mean(0))
-    del ep_size
     return y_tok.reshape(B, S, D).astype(x.dtype), aux
 
 
@@ -210,9 +208,8 @@ def moe_ffn_distributed(x, p, cfg, *, compute_dtype, topk_override=None):
     """Mesh-aware MoE: shard_map EP when a mesh context is active, plain
     local computation otherwise. x: (B, S, D) global."""
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
 
-    from repro.sharding import current_mesh_context
+    from repro.sharding import current_mesh_context, shard_map_compat
 
     ctx = current_mesh_context()
     kw = dict(n_experts=cfg.n_experts, topk=cfg.moe_topk,
@@ -254,12 +251,12 @@ def moe_ffn_distributed(x, p, cfg, *, compute_dtype, topk_override=None):
                              ep_size=ctx.tp_size, **kw)
             return y, jax.lax.pmean(aux, ctx.all_axes)
 
-        fn = shard_map(
+        fn = shard_map_compat(
             local_fn, mesh=mesh,
             in_specs=(P(dp, tp, None), P(None, None),
                       P(tp, None, None), P(tp, None, None), *shared_in),
             out_specs=(P(dp, tp, None), P()),
-            check_vma=False)
+            check=False)
         y, aux = fn(x, p["router"], p["wi"], p["wo"], *shared_args)
         return _with_shared(y), aux
 
@@ -281,10 +278,10 @@ def moe_ffn_distributed(x, p, cfg, *, compute_dtype, topk_override=None):
     # note: in decode mode x is NOT batch-sharded over dp when ep2d is on
     # (every dp rank needs all tokens for its partial contraction)
     x_spec = P(None, None, None) if ep2d else P(dp, None, None)
-    fn = shard_map(
+    fn = shard_map_compat(
         wrapped, mesh=mesh,
         in_specs=(x_spec, P(None, None), wi_spec, wi_spec, *shared_in),
         out_specs=(x_spec, P()),
-        check_vma=False)
+        check=False)
     y, aux = fn(x, p["router"], p["wi"], p["wo"], *shared_args)
     return _with_shared(y), aux

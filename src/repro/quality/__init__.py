@@ -1,0 +1,23 @@
+"""Measured quality plane: end-to-end QoR scoring for the fleet.
+
+The fleet's throughput stack (PRs 1-4) priced every request off analytic
+proxy accuracy tables and never scored a real output. This package is the
+measurement plane over it:
+
+- :mod:`repro.quality.oracles` — per-workload *measured* scorers behind
+  one :class:`~repro.quality.oracles.QualityOracle` surface: real OvR
+  anytime-SVM inference over the synthetic HAR set, perforated-vs-exact
+  Harris corner equivalence (the paper's §6.3 criterion), and real
+  anytime-LM decodes through a calibrated ``serve.engine.AnytimeEngine``;
+- :mod:`repro.quality.ledger` — host-side views over the per-request
+  quality record the control plane accumulates (``SchedState.meas_wl`` /
+  ``joules_nj_wl``, integer counters ledgered identically by the NumPy
+  host driver and inside the fused JAX serve scan);
+- :mod:`repro.quality.calibrate` — ``FleetWorkload`` constructors whose
+  accuracy tables (and per-sample ``qtab`` oracle tables) are measured
+  instead of analytic (``--quality measured``).
+
+Import submodules directly; this package intentionally re-exports
+nothing (the oracles pull in JAX model code the control plane must not
+depend on).
+"""

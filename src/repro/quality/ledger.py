@@ -1,0 +1,86 @@
+"""Host-side views over the control plane's quality ledger.
+
+The ledger itself lives in ``SchedState`` as struct-of-arrays counters
+(``fleet/state.py``): per workload, the number of completions the oracle
+scored correct (``meas_wl``, int64) and the table-priced spend on those
+completions in integer nanojoules (``joules_nj_wl``, int64), alongside
+the pre-existing ``completed_wl`` / ``units_wl`` / ``acc_wl`` (proxy)
+columns. Both evaluation modes — the NumPy host driver and the fused JAX
+serve scan — accumulate them through the same integer expressions in
+``fleet/sched.py:collect``, so the counters agree bit-exactly; this
+module only *reads* them into records and Pareto points. (The summary
+dict's fleet-wide ``quality`` block is computed by
+``fleet.metrics.quality_block`` from the same counters — the fleet
+layer never imports this package.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityRecord:
+    """Aggregated per-workload quality-of-result over one serve trace.
+
+    ``measured_accuracy`` is the oracle-scored fraction of completions;
+    ``proxy_accuracy`` is what the analytic tables *predicted* for the
+    same completions — the gap is the price of planning on proxies.
+    """
+
+    workload: str
+    completed: int
+    units: int
+    measured_correct: int
+    joules: float  # table-priced spend on completions, J
+
+    proxy_accuracy: float
+
+    @property
+    def measured_accuracy(self) -> float:
+        return self.measured_correct / max(self.completed, 1)
+
+    @property
+    def joules_per_completed(self) -> float:
+        return self.joules / max(self.completed, 1)
+
+    @property
+    def accuracy_per_joule(self) -> float:
+        """Measured accuracy mass bought per joule (the ``sched=quality``
+        rank currency, evaluated ex post)."""
+        return self.measured_correct / max(self.joules, 1e-300)
+
+
+def ledger_records(sp, ss, workload_names=None) -> list[QualityRecord]:
+    """Materialize the ledgered counters of one run into records.
+
+    Args:
+        sp / ss: the run's ``SchedParams`` / final ``SchedState``.
+        workload_names: optional display names (defaults to indices).
+    """
+    out = []
+    for w in range(sp.W):
+        name = workload_names[w] if workload_names else str(w)
+        c = int(ss.completed_wl[w])
+        out.append(QualityRecord(
+            workload=name, completed=c,
+            units=int(ss.units_wl[w]),
+            measured_correct=int(ss.meas_wl[w]),
+            joules=float(ss.joules_nj_wl[w]) * 1e-9,
+            proxy_accuracy=float(ss.acc_wl[w]) / max(c, 1)))
+    return out
+
+
+def pareto_point(summary: dict) -> dict:
+    """One accuracy-throughput Pareto point from a run summary: completed
+    requests (x) vs mean measured accuracy (y), with the proxy accuracy
+    and ledgered J/request along for the ride."""
+    q = summary["quality"]
+    return {
+        "completed": summary["completed"],
+        "throughput_rps": summary["throughput_rps"],
+        "mean_measured_accuracy": q["mean_measured_accuracy"],
+        "mean_proxy_accuracy": summary["mean_expected_accuracy"],
+        "j_per_completed": q["j_per_completed_ledger"],
+    }

@@ -1,0 +1,242 @@
+"""Per-workload measured quality oracles (the paper's QoR criteria).
+
+A :class:`QualityOracle` is a precomputed per-sample correctness table:
+``qtab[s, u]`` is 1 iff oracle sample ``s`` scores *correct* when served
+with ``u`` knob units, 0 otherwise. The three constructors mirror the
+paper's evaluation apps and their quality criteria:
+
+- :func:`har_oracle` — real OvR anytime-SVM inference over the synthetic
+  HAR set: correct iff the prefix classification at ``u`` importance-
+  ordered features matches the ground-truth activity label (the paper's
+  83%-vs-88% accuracy axis).
+- :func:`harris_oracle` — perforated-vs-exact Harris corner detection:
+  correct iff the corner set at ``u`` kept structure-tensor taps is
+  *equivalent* to the exact output — same corner count, each corner
+  closer to its counterpart than to any other (§6.3, the "equivalent in
+  84% of cases" criterion, via ``data.images.corners_equivalent``).
+- :func:`lm_oracle` — real anytime-LM decodes dispatched through a
+  calibrated ``serve.engine.AnytimeEngine``: correct iff the argmax
+  token at early-exit depth ``u`` matches the exact (full-depth) model's
+  (the Eq.-3 coherence event, per probe prompt instead of averaged).
+
+Tables are small (``S x (n_units+1)`` int64 0/1) and deterministic under
+a fixed seed, so the control plane can bake them into ``SchedParams``
+and the fused serve scan can gather measured quality per completion
+without ever leaving the device (``fleet/sched.py:collect``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# The paper's headline QoR shape: 83% HAR accuracy where the continuous
+# (all-features) best is 88%. Measured-mode workloads place their SMART
+# floors at this fraction of the *measured* best so the fleet reproduces
+# the ratio rather than an absolute number that depends on dataset size.
+PAPER_QOR_RATIO = 0.83 / 0.88
+
+
+def ratio_floor(accuracy: np.ndarray) -> float:
+    """SMART floor at :data:`PAPER_QOR_RATIO` of the measured best,
+    snapped *down* to an attainable table entry — a floor epsilon above
+    every entry would silently disable the workload.
+
+    "Best" is the table *maximum*, not the all-units endpoint: measured
+    curves on CI-sized test splits are non-monotonic (low-importance
+    tail features add noise, so accuracy can peak mid-table), and the
+    paper's "continuous best" is the best the pipeline attains, not the
+    most expensive setting."""
+    accuracy = np.asarray(accuracy, dtype=np.float64)
+    target = PAPER_QOR_RATIO * float(accuracy.max())
+    attainable = accuracy[accuracy <= target]
+    return float(attainable.max()) if attainable.size else float(target)
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityOracle:
+    """A measured per-sample correctness table for one workload.
+
+    ``qtab``: (S, n_units + 1) int64 of 0/1 — sample ``s`` correct at
+    ``u`` granted knob units. ``meta`` records calibration context
+    (dataset sizes, seeds, model accuracy) for the experiment artifacts.
+    """
+
+    name: str
+    qtab: np.ndarray
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        q = np.asarray(self.qtab, dtype=np.int64)
+        if q.ndim != 2:
+            raise ValueError("qtab must be (samples, n_units + 1)")
+        if not np.isin(q, (0, 1)).all():
+            raise ValueError("qtab entries must be 0/1 correctness")
+        object.__setattr__(self, "qtab", q)
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.qtab.shape[0])
+
+    @property
+    def n_units(self) -> int:
+        return int(self.qtab.shape[1] - 1)
+
+    def accuracy(self) -> np.ndarray:
+        """(n_units + 1,) measured mean accuracy per granted unit count —
+        the SMART lookup table, from measurement instead of analysis."""
+        return self.qtab.mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# HAR: real anytime-SVM inference over the synthetic set
+# ---------------------------------------------------------------------------
+
+
+def har_oracle(*, n_train: int = 40, n_test: int = 24, seed: int = 0):
+    """Train the OvR SVM and measure per-sample prefix correctness.
+
+    ``n_train``/``n_test`` are windows *per class* (defaults sized for
+    CI: the whole build — synthesis, JAX feature extraction, training,
+    table — is a few seconds). Returns ``(oracle, model)``; the model's
+    importance order also drives the workload's cost table.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import anytime_svm as asvm
+    from repro.data import har
+
+    Xw_tr, ytr = har.generate_windows(n_train, seed=seed)
+    Xw_te, yte = har.generate_windows(n_test, seed=seed + 1)
+    Ftr = np.asarray(har.extract_features(jnp.asarray(Xw_tr)))
+    Fte = np.asarray(har.extract_features(jnp.asarray(Xw_te)))
+    model = asvm.train_ovr_svm(Ftr, ytr, 6)
+    Xo = model.standardize(Fte)[:, model.order]
+    Wo = model.W[:, model.order]
+    n = model.n_features
+    # incremental prefix scoring (the anytime trick itself): one pass
+    # over ordered features, reusing partial scores per prefix length
+    scores = np.tile(model.b, (Fte.shape[0], 1))
+    qtab = np.empty((Fte.shape[0], n + 1), dtype=np.int64)
+    qtab[:, 0] = scores.argmax(1) == yte  # 0 features: bias-only argmax
+    for p in range(1, n + 1):
+        scores += Xo[:, p - 1:p] @ Wo[:, p - 1:p].T
+        qtab[:, p] = scores.argmax(1) == yte
+    oracle = QualityOracle("har", qtab, meta={
+        "n_train_per_class": int(n_train), "n_test_per_class": int(n_test),
+        "seed": int(seed), "full_accuracy": float(qtab[:, -1].mean())})
+    return oracle, model
+
+
+# ---------------------------------------------------------------------------
+# Harris: perforated-vs-exact corner equivalence
+# ---------------------------------------------------------------------------
+
+
+def harris_tap_order(n_taps: int = 25) -> np.ndarray:
+    """Deterministic importance order of the 5x5 structure-tensor taps:
+    descending Gaussian weight, stable (center-out). The workload's knob
+    grants taps in this order, mirroring the SVM's coefficient-magnitude
+    feature order."""
+    g = np.outer([1, 4, 6, 4, 1], [1, 4, 6, 4, 1]).reshape(-1)
+    return np.argsort(-g[:n_taps], kind="stable")
+
+
+def harris_oracle(*, kinds=None, n_per_kind: int = 3, n_taps: int = 25,
+                  size: int = 96, seed: int = 0) -> QualityOracle:
+    """Measure corner-set equivalence per picture per kept-tap count.
+
+    One oracle sample = one synthetic picture (graded corner density);
+    ``qtab[s, u]`` = 1 iff the corner set with the first ``u`` taps (in
+    :func:`harris_tap_order`, with kept-mass compensation) is equivalent
+    to the exact 25-tap output under the paper's §6.3 criterion.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.images import (PICTURE_KINDS, corners_equivalent,
+                                   detect_corners, make_picture,
+                                   harris_response_perforated_window)
+
+    kinds = tuple(kinds) if kinds is not None else PICTURE_KINDS
+    order = harris_tap_order(n_taps)
+    resp_fn = jax.jit(harris_response_perforated_window)
+    images = [make_picture(k, size=size, seed=seed + i)
+              for k in kinds for i in range(n_per_kind)]
+    qtab = np.zeros((len(images), n_taps + 1), dtype=np.int64)
+    for s, img in enumerate(images):
+        imgj = jnp.asarray(img)
+        ref = detect_corners(resp_fn(imgj, jnp.ones(n_taps, bool)))
+        qtab[s, n_taps] = 1  # all taps == exact computation
+        for u in range(n_taps):
+            keep = np.zeros(n_taps, dtype=bool)
+            keep[order[:u]] = True
+            approx = detect_corners(resp_fn(imgj, jnp.asarray(keep)))
+            qtab[s, u] = corners_equivalent(ref, approx)
+    return QualityOracle("harris", qtab, meta={
+        "kinds": list(kinds), "n_per_kind": int(n_per_kind),
+        "size": int(size), "seed": int(seed),
+        "equivalent_at_70pct_taps": float(
+            qtab[:, int(round(0.7 * n_taps))].mean())})
+
+
+# ---------------------------------------------------------------------------
+# LM: real anytime decodes through a calibrated AnytimeEngine
+# ---------------------------------------------------------------------------
+
+
+def lm_oracle(*, steps: int = 40, n_probe: int = 32, prompt_len: int = 48,
+              seed: int = 0, flops_per_second: float = 5e9):
+    """Train the example decoder LM briefly, calibrate an
+    ``serve.engine.AnytimeEngine`` over every early-exit depth, and
+    measure per-prompt argmax coherence vs the exact model.
+
+    Real decodes, not the cost-table proxy: each ``qtab[s, d]`` entry is
+    one actual early-exit decode of probe prompt ``s`` through the
+    engine's depth-``d`` compiled bucket, compared with the full-depth
+    bucket's token. Returns ``(oracle, engine, cfg)`` so the caller can
+    price the workload off the same engine (``lm_workload(engine=...)``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+    from repro.launch.train import example_config
+    from repro.serve.engine import AnytimeEngine
+    from repro.train.optimizer import adamw
+    from repro.train.schedule import warmup_cosine
+    from repro.train.train_step import build_train_step, init_train_state
+
+    cfg = example_config("small")
+    opt = adamw(warmup_cosine(3e-3, 10, steps))
+    state = init_train_state(cfg, opt, jax.random.key(seed))
+    step_fn = jax.jit(build_train_step(cfg, opt), donate_argnums=0)
+    pipe = TokenPipeline(TokenPipelineConfig(cfg.vocab_size, 128, 64,
+                                             seed=seed + 3))
+    for i in range(steps):
+        batch = jax.tree.map(lambda x: jnp.asarray(x[:8]), pipe.batch(i))
+        state, _ = step_fn(state, batch)
+    probe = jnp.asarray(
+        pipe.batch(10_000)["tokens"][:n_probe, :prompt_len])
+    depths = list(range(1, cfg.n_layers + 1))
+    eng = AnytimeEngine(cfg, state.params, max_len=prompt_len + 16,
+                        depths=depths, keeps=[1.0], probe_prompts=probe,
+                        flops_per_second=flops_per_second)
+    # per-sample coherence: one real decode step per depth bucket on the
+    # shared prefill cache, argmax-compared against the exact depth
+    from repro.models.transformer import prefill
+    _, cache, pos = prefill(state.params, probe, cfg, eng.max_len)
+    last = probe[:, -1]
+    exact = np.asarray(eng._decode_with(cfg.n_layers, 1.0, last, cache,
+                                        jnp.int32(pos)).argmax(-1))
+    qtab = np.zeros((int(probe.shape[0]), cfg.n_layers + 1),
+                    dtype=np.int64)
+    for d in depths:
+        pred = np.asarray(eng._decode_with(d, 1.0, last, cache,
+                                           jnp.int32(pos)).argmax(-1))
+        qtab[:, d] = pred == exact
+    oracle = QualityOracle("lm", qtab, meta={
+        "train_steps": int(steps), "n_probe": int(n_probe),
+        "seed": int(seed), "arch": cfg.arch_id,
+        "coherence_by_depth": [float(c) for c in qtab.mean(0)]})
+    return oracle, eng, cfg

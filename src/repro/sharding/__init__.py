@@ -1,6 +1,7 @@
 """Mesh axes, partition rules, and the ambient mesh context."""
 from repro.sharding.context import (MeshContext, current_mesh_context,
-                                    mesh_context, shard_hint)
+                                    mesh_context, shard_hint,
+                                    shard_map_compat)
 
 __all__ = ["MeshContext", "current_mesh_context", "mesh_context",
-           "shard_hint"]
+           "shard_hint", "shard_map_compat"]

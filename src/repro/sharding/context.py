@@ -25,6 +25,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _STATE = threading.local()
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions: the stable name with its
+    ``check_vma`` kwarg when available (jax >= 0.6), otherwise the
+    ``jax.experimental.shard_map`` location with the older ``check_rep``
+    spelling of the same switch."""
+    import inspect
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    kw = ("check_vma" if "check_vma" in inspect.signature(sm).parameters
+          else "check_rep")
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check})
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshContext:
     mesh: Mesh

@@ -1,0 +1,226 @@
+"""Quality-plane contracts: bit-exact ledgers, deterministic oracles,
+and value-ranked (marginal measured-accuracy-per-joule) scheduling.
+
+The ledger counters (``SchedState.meas_wl`` / ``joules_nj_wl``) are
+integer arithmetic by construction, so the NumPy host driver and the
+fused JAX serve scan must agree *exactly* — not approximately — at the
+acceptance grid N in {1, 256}. Oracles must be pure functions of their
+seeds. The quality scheduler's rank keys are pinned against hand
+computation, and a contrived two-workload scarcity case pins the
+value-ranked shedding behavior the mode exists for.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.budget import CostTable
+from repro.fleet import sched as _sched
+from repro.fleet.scheduler import FleetScheduler, RequestStream, run_fleet
+from repro.fleet.workloads import (FleetWorkload, har_workload,
+                                   harris_workload, lm_workload)
+from repro.launch.fleet import build_dispatch_pool, make_power_matrix
+
+DT = 0.01
+
+LEDGER_KEYS = ("meas_wl", "joules_nj_wl", "completed_wl", "units_wl")
+COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
+              "evicted", "requeued")
+
+
+def _serve_pair(power, n_workers, wls, n_steps, *, rate, mix, seed,
+                sched="quality", **kw):
+    out = {}
+    for backend in ("numpy", "jax"):
+        pool = build_dispatch_pool(power, DT, n_workers, wls, seed,
+                                   backend=backend)
+        s = FleetScheduler(pool, wls, sched=sched, **kw)
+        stream = RequestStream(rate, mix, n_steps, DT, seed=seed + 1)
+        out[backend] = (run_fleet(pool, s, stream, n_steps), s)
+    return out
+
+
+def _assert_ledger_agreement(out):
+    a, b = out["numpy"][0], out["jax"][0]
+    for k in COUNT_KEYS:
+        assert a[k] == b[k], k
+    sa, sb = out["numpy"][1].state, out["jax"][1].state
+    for k in LEDGER_KEYS:
+        assert np.array_equal(getattr(sa, k), getattr(sb, k)), k
+    # the ledger cannot score more correct than completed, and scores
+    # exactly the completions (conservation of the integer counters)
+    assert (sa.meas_wl <= sa.completed_wl).all()
+    assert int(sa.completed_wl.sum()) == a["completed"]
+
+
+# ---------------------------------------------------------------------------
+# numpy-vs-jax ledger agreement at the acceptance grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sched", ["reactive", "quality"])
+def test_ledger_agreement_single_worker(sched):
+    wls = [har_workload(), lm_workload()]
+    power = make_power_matrix(["SOM"], 1, 60.0, DT, seed=5)
+    n_steps = int(60.0 / DT)
+    out = _serve_pair(power, 1, wls, n_steps, rate=0.4,
+                      mix=np.array([0.6, 0.4]), seed=5, sched=sched)
+    _assert_ledger_agreement(out)
+    assert out["numpy"][0]["completed"] > 0
+
+
+@pytest.mark.parametrize("sched", ["reactive", "quality"])
+def test_ledger_agreement_256_workers(sched):
+    wls = [har_workload(), harris_workload(), lm_workload()]
+    power = make_power_matrix(["SOM", "SOR", "RF", "SIR"], 8, 40.0, DT,
+                              seed=6)
+    n_steps = int(40.0 / DT)
+    out = _serve_pair(power, 256, wls, n_steps, rate=25.6,
+                      mix=np.array([0.4, 0.3, 0.3]), seed=6, sched=sched)
+    _assert_ledger_agreement(out)
+    a = out["numpy"][0]
+    assert a["completed"] > 0
+    # the summary's quality block is derived from the ledgered counters
+    q = a["quality"]
+    assert q["measured_correct"] == int(
+        out["numpy"][1].state.meas_wl.sum())
+    assert 0.0 <= q["mean_measured_accuracy"] <= 1.0
+
+
+def test_ledger_agreement_with_measured_qtab():
+    """A workload carrying a real per-sample oracle table (not the
+    quantized proxy expansion) must ledger identically on both backends;
+    the cheap real HAR build is the canonical carrier."""
+    wls = [har_workload(real=True, n_train=12, n_test=8),
+           lm_workload()]
+    assert wls[0].qtab is not None
+    power = make_power_matrix(["SOM", "RF"], 4, 40.0, DT, seed=9)
+    n_steps = int(40.0 / DT)
+    out = _serve_pair(power, 64, wls, n_steps, rate=6.4,
+                      mix=np.array([0.6, 0.4]), seed=9)
+    _assert_ledger_agreement(out)
+    assert out["numpy"][0]["quality"]["tables"] == "measured"
+    assert out["numpy"][0]["completed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# oracle determinism + table contracts
+# ---------------------------------------------------------------------------
+
+
+def test_harris_oracle_deterministic_and_anytime_shaped():
+    from repro.quality.oracles import harris_oracle
+    a = harris_oracle(n_per_kind=1, size=64, seed=3)
+    b = harris_oracle(n_per_kind=1, size=64, seed=3)
+    assert np.array_equal(a.qtab, b.qtab)
+    assert a.qtab[:, -1].all()  # all taps == exact == equivalent
+    acc = a.accuracy()
+    assert acc[-1] == 1.0
+    # equivalence at 70% of taps must beat equivalence at 20% (Fig. 12)
+    assert acc[int(0.7 * a.n_units)] >= acc[int(0.2 * a.n_units)]
+    c = harris_oracle(n_per_kind=1, size=64, seed=4)
+    assert not np.array_equal(a.qtab, c.qtab)  # seed actually threads
+
+
+def test_har_oracle_deterministic_and_consistent_with_workload():
+    from repro.quality.oracles import har_oracle
+    a, _ = har_oracle(n_train=12, n_test=8, seed=1)
+    b, _ = har_oracle(n_train=12, n_test=8, seed=1)
+    assert np.array_equal(a.qtab, b.qtab)
+    wl = har_workload(real=True, n_train=12, n_test=8, seed=1)
+    assert np.array_equal(wl.qtab, a.qtab)
+    np.testing.assert_allclose(wl.accuracy, a.accuracy())
+    # the default floor sits at the paper ratio of the measured best
+    # (the table max — measured curves are non-monotonic) and is
+    # attainable (P_REQ exists), so the workload actually serves
+    assert 0 < wl.floor <= wl.accuracy.max()
+    assert (wl.accuracy >= wl.floor).any()
+
+
+def test_proxy_qtab_quantizes_accuracy_table():
+    """Workloads without an oracle table are ledgered against the
+    deterministic quantized expansion of their accuracy proxy: the
+    expansion's mean must reproduce the proxy to the 1/64 quantum."""
+    wl = har_workload()
+    pool = build_dispatch_pool(
+        make_power_matrix(["SOM"], 1, 10.0, DT, seed=0), DT, 1, [wl], 0)
+    sp = FleetScheduler(pool, [wl]).params
+    nu = wl.costs.n_units
+    got = sp.QTAB[0, :, :nu + 1].mean(axis=0) * (_sched._S_PROXY
+                                                 / sp.S_Q[0])
+    np.testing.assert_allclose(got, wl.accuracy,
+                               atol=0.5 / _sched._S_PROXY + 1e-12)
+
+
+def test_qtab_validation():
+    costs = CostTable(np.full(4, 1e-4))
+    acc = np.linspace(0, 1, 5)
+    with pytest.raises(ValueError):
+        FleetWorkload("bad", costs, acc, qtab=np.ones((3, 4), np.int64))
+    from repro.quality.oracles import QualityOracle
+    with pytest.raises(ValueError):
+        QualityOracle("bad", np.full((3, 5), 2))  # non-0/1 entries
+
+
+# ---------------------------------------------------------------------------
+# pinned marginal-accuracy-per-joule scheduling
+# ---------------------------------------------------------------------------
+
+
+def _value_pair():
+    """Two contrived workloads: A buys ~25x more measured accuracy per
+    joule than B (cheap units, steep curve vs expensive units, shallow
+    curve). Both greedy-admitted (floor 0)."""
+    a = FleetWorkload(
+        "a", CostTable(np.full(4, 2e-4), emit_cost=1e-4, fixed_cost=1e-4),
+        np.array([0.0, 0.5, 0.8, 0.9, 1.0]))
+    b = FleetWorkload(
+        "b", CostTable(np.full(4, 5e-3), emit_cost=1e-4, fixed_cost=1e-4),
+        np.array([0.0, 0.1, 0.2, 0.3, 0.4]))
+    return [a, b]
+
+
+def test_quality_rank_keys_pinned():
+    wls = _value_pair()
+    pool = build_dispatch_pool(
+        make_power_matrix(["SOM"], 1, 10.0, DT, seed=0), DT, 4, wls, 0)
+    sp = FleetScheduler(pool, wls, sched="quality").params
+    # hand computation: greedy workloads rank at the full knob
+    cu_a = 4 * 2e-4 + 2e-4
+    cu_b = 4 * 5e-3 + 2e-4
+    np.testing.assert_allclose(sp.QVALUE, [1.0 / cu_a, 0.4 / cu_b])
+    assert list(sp.WL_RANK) == [0, 1]  # A first: ~25x the value
+    assert list(sp.QTARGET) == [4, 4]  # accuracy peaks at the full knob
+    assert sp.value_order and not sp.forecast
+    # reactive params on the same workloads keep age-ordered service
+    sp_r = FleetScheduler(pool, wls, sched="reactive").params
+    assert not sp_r.value_order
+
+
+def test_quality_sched_starves_low_value_queue_under_scarcity():
+    """The value-ranked shedding pin: under overload, the quality
+    scheduler spends the scarce joules on the high-accuracy-per-joule
+    queue (B's backlog ages out through the stale-prefix shed), and its
+    mean measured accuracy strictly beats age-ordered reactive service
+    at no fewer completions — on both backends, bit-identically."""
+    wls = _value_pair()
+    power = make_power_matrix(["SIR"], 4, 120.0, DT, seed=11)
+    n_steps = int(120.0 / DT)
+    res = {}
+    for sched in ("reactive", "quality"):
+        out = _serve_pair(power, 16, wls, n_steps, rate=16.0,
+                          mix=np.array([0.5, 0.5]), seed=11, sched=sched,
+                          shed_after_s=15.0)
+        _assert_ledger_agreement(out)
+        res[sched] = out["numpy"][0]
+    q, r = res["quality"], res["reactive"]
+    assert q["shed"] > 0 and r["shed"] > 0  # genuinely overloaded
+    # quality serves more of A than reactive does...
+    qa = q["per_workload"]["a"]["completed"]
+    ra = r["per_workload"]["a"]["completed"]
+    assert qa > ra
+    # ...and converts that into strictly better measured accuracy at no
+    # fewer completions (the Pareto-dominance shape of the benchmark)
+    assert q["completed"] >= r["completed"]
+    assert (q["quality"]["mean_measured_accuracy"]
+            > r["quality"]["mean_measured_accuracy"])

@@ -1,11 +1,18 @@
 #!/usr/bin/env python
-"""Docs-consistency gate: CLI flags mentioned in the docs must exist.
+"""Docs-consistency gate: CLI flags and artifacts mentioned must exist.
 
-Collects every ``--flag`` token in README.md and docs/*.md and asserts
-each one appears in the ``--help`` output of the CLIs the docs describe
-(``repro.launch.fleet`` and ``benchmarks.fleet_throughput``). Catches
-the classic drift where a flag is renamed or removed but the prose keeps
-recommending it. Run from the repo root:
+Two checks:
+
+- every ``--flag`` token in README.md and docs/*.md appears in the
+  ``--help`` output of the CLIs the docs describe (``repro.launch.fleet``,
+  ``benchmarks.fleet_throughput``, ``benchmarks.fleet_quality``) —
+  catches the classic drift where a flag is renamed or removed but the
+  prose keeps recommending it;
+- every committed ``experiments/*.json`` artifact has a schema entry in
+  ``docs/experiments.md`` (its filename is mentioned there) — catches
+  benchmarks that grow a new artifact without documenting its fields.
+
+Run from the repo root:
 
     PYTHONPATH=src python tools/check_docs.py
 
@@ -21,7 +28,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-CLIS = ("repro.launch.fleet", "benchmarks.fleet_throughput")
+CLIS = ("repro.launch.fleet", "benchmarks.fleet_throughput",
+        "benchmarks.fleet_quality")
 DOCS = ("README.md", "docs")
 
 # `--flag` with a word boundary before it (skips ---- rules and
@@ -55,6 +63,15 @@ def doc_flags() -> dict[str, list[str]]:
     return found
 
 
+def undocumented_artifacts() -> list[str]:
+    """Committed experiments/*.json files whose filenames never appear
+    in docs/experiments.md (no schema entry)."""
+    schema_doc = ROOT / "docs" / "experiments.md"
+    text = schema_doc.read_text() if schema_doc.exists() else ""
+    return sorted(p.name for p in (ROOT / "experiments").glob("*.json")
+                  if p.name not in text)
+
+
 def main() -> int:
     known = set()
     for module in CLIS:
@@ -69,8 +86,16 @@ def main() -> int:
         for flag, where in missing.items():
             print(f"  {flag}  (in {', '.join(where)})", file=sys.stderr)
         return 1
+    undoc = undocumented_artifacts()
+    if undoc:
+        print("experiments/*.json artifacts with no schema entry in "
+              "docs/experiments.md:", file=sys.stderr)
+        for name in undoc:
+            print(f"  {name}", file=sys.stderr)
+        return 1
     print(f"docs-consistency OK: {len(found)} doc flags all exist "
-          f"in {' + '.join(CLIS)} --help")
+          f"in {' + '.join(CLIS)} --help; all experiments/*.json "
+          "artifacts documented")
     return 0
 
 
