@@ -47,5 +47,35 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def timed(fn, *args):
+    """``(result, wall_seconds)`` for one call (jax results blocked)."""
+    import jax
+
+    t0 = time.perf_counter()
+    res = fn(*args)
+    try:
+        jax.block_until_ready(res)
+    except TypeError:  # plain-python result (dicts of host scalars)
+        pass
+    return res, time.perf_counter() - t0
+
+
+def timeit_split(fn, *args, iters: int = 5) -> dict:
+    """Cold/warm wall-clock split for a compiled callable.
+
+    The first call (compile + run) is reported as ``cold_s``; the
+    subsequent ``iters`` calls give ``warm_s`` (median) and
+    ``warm_s_std`` (population std-dev) — the uniform shape every fleet
+    benchmark reports (see docs/benchmarks.md).
+    """
+    _, cold = timed(fn, *args)
+    ws = [timed(fn, *args)[1] for _ in range(iters)]
+    import statistics
+
+    return {"cold_s": cold, "warm_s": float(np.median(ws)),
+            "warm_s_std": (statistics.pstdev(ws) if len(ws) > 1 else 0.0),
+            "iters": iters}
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")

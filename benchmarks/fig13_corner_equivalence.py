@@ -13,14 +13,12 @@ scalar-vs-tile-grain accuracy gap promised in DESIGN.md is quantified.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timed
 from repro.core.perforation import perforation_mask, strided_mask
 from repro.data.images import (PICTURE_KINDS, corners_equivalent,
                                detect_corners, harris_response,
@@ -73,10 +71,9 @@ def tile_grain_table(size: int = 128) -> dict:
 
 
 def main() -> dict:
-    t0 = time.perf_counter()
-    rows = equivalence_table()
-    tile_rows = tile_grain_table()
-    us = (time.perf_counter() - t0) * 1e6 / (len(RATES) * 40)
+    (rows, tile_rows), wall = timed(
+        lambda: (equivalence_table(), tile_grain_table()))
+    us = wall * 1e6 / (len(RATES) * 40)
     upto42 = [v for kind in rows for r, v in rows[kind].items()
               if float(r) <= 0.42]
     frac = float(np.mean(upto42))

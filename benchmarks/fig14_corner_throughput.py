@@ -12,7 +12,6 @@ Claims checked:
 from __future__ import annotations
 
 import functools
-import time
 
 import numpy as np
 
@@ -20,7 +19,7 @@ import jax.numpy as jnp
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timed
 from repro.core.energy import Capacitor, get_trace
 from repro.core.intermittent import IntermittentExecutor, score_results
 from repro.core.perforation import perforation_mask
@@ -93,9 +92,8 @@ def run_all(duration: float = 1800.0) -> dict:
 
 
 def main() -> dict:
-    t0 = time.perf_counter()
-    res = run_all()
-    us = (time.perf_counter() - t0) * 1e6 / (len(TRACES) * 3)
+    res, wall = timed(run_all)
+    us = wall * 1e6 / (len(TRACES) * 3)
     ratios = {t: (res[t]["approximate"]["n"]
                   / max(res[t]["checkpoint"]["n"], 1)) for t in TRACES}
     eqs = [res[t]["approximate"]["equivalent_frac"] for t in TRACES]

@@ -10,11 +10,9 @@ Headline claims checked:
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import emit, har_fixture
+from benchmarks.common import emit, har_fixture, timed
 from repro.core.energy import Capacitor, kinetic_trace
 from repro.core.intermittent import IntermittentExecutor, score_results
 from repro.core.policies import Continuous, Greedy, Smart
@@ -58,9 +56,8 @@ def run_all(duration: float = DURATION, seeds=SEEDS) -> dict:
 
 
 def main() -> dict:
-    t0 = time.perf_counter()
-    res = run_all()
-    us = (time.perf_counter() - t0) * 1e6 / 18
+    res, wall = timed(run_all)
+    us = wall * 1e6 / 18
     cont = res["continuous"]["throughput_per_h"]
     ratio = (res["greedy"]["throughput_per_h"]
              / max(res["chinchilla"]["throughput_per_h"], 1e-9))

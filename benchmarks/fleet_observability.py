@@ -1,0 +1,199 @@
+"""Observability plane: cost and correctness of in-scan telemetry.
+
+Claims checked (see docs/observability.md):
+- **zero perturbation** — serving the same stream with ``--obs`` off,
+  ``tele``, or ``trace`` yields bit-identical request-lifecycle counters
+  on BOTH backends (obs_tick never writes fleet/scheduler state);
+- **bit-exact channels** — every int64 telemetry channel (energy books,
+  power-cycle/lifecycle counts, forecast error, quality-ledger deltas,
+  sampled depths, the voltage histogram) agrees exactly between the
+  NumPy per-tick reference and the fused JAX ``lax.scan``;
+- **overhead** — at 1024 workers / 600 s the *warm* fused launch with
+  windowed telemetry costs < 10% over the uninstrumented scan; the
+  event-ring ``trace`` mode's extra cost is recorded alongside;
+- the exported Chrome trace-event / Perfetto JSON loads in
+  ``chrome://tracing`` (schema round-trip is gated in tests/test_obs.py;
+  the committed example is experiments/fleet_trace_example.json).
+
+    python -m benchmarks.fleet_observability          # full recorded suite
+    python -m benchmarks.fleet_observability --smoke  # CI gate (N in {1,256})
+
+JSON lands in experiments/fleet_observability.json (suite) and
+experiments/fleet_trace_example.json (a committed example trace);
+docs/experiments.md documents both schemas.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, timeit_split
+from benchmarks.fleet_throughput import (DT, MIX, PERIOD_S, TRACES,
+                                         _COUNT_KEYS, _sched_agreement,
+                                         _workloads)
+from repro.launch.fleet import (build_dispatch_pool, make_power_matrix,
+                                run_scheduled)
+
+OBS_WINDOW_S = 1.0
+
+
+def zero_perturbation(n_workers: int, duration_s: float, n_rows: int,
+                      seed: int = 0, sched: str = "forecast") -> dict:
+    """Serve the identical stream with obs off / tele / trace on both
+    backends; every lifecycle counter must be bit-identical."""
+    rows = min(n_rows, n_workers)
+    power = make_power_matrix(TRACES, rows, duration_s, DT, seed)
+    n_steps = int(duration_s / DT)
+    rate = n_workers / PERIOD_S
+    counts: dict = {}
+    for backend in ("numpy", "jax"):
+        counts[backend] = {}
+        for mode in ("off", "tele", "trace"):
+            r = run_scheduled(power, DT, n_workers, _workloads(),
+                              rate_rps=rate, mix=MIX, n_steps=n_steps,
+                              seed=seed, backend=backend, sched=sched,
+                              obs_mode=mode, obs_window_s=OBS_WINDOW_S)
+            counts[backend][mode] = {k: r[k] for k in _COUNT_KEYS}
+    ok = all(counts[b][m] == counts[b]["off"]
+             for b in counts for m in ("tele", "trace"))
+    return {"n_workers": n_workers, "duration_s": duration_s,
+            "sched": sched, "zero_perturbation": bool(ok),
+            "counts": counts}
+
+
+def _warm_serve_timer(obs_mode: str, n_workers: int, duration_s: float,
+                      seed: int = 0):
+    """A zero-arg callable serving one fixed stream on the fused JAX
+    launch; repeated calls reuse the compiled scan (fresh states each
+    call), so ``timeit_split`` prices compile (cold) and steady state
+    (warm) separately."""
+    from repro.fleet.sched import make_sched_state
+    from repro.fleet.scheduler import (FleetScheduler, RequestStream,
+                                       run_fleet)
+    from repro.obs import make_fleet_obs
+
+    power = make_power_matrix(TRACES, min(32, n_workers), duration_s, DT,
+                              seed)
+    n_steps = int(duration_s / DT)
+    wls = _workloads()
+    pool = build_dispatch_pool(power, DT, n_workers, wls, seed,
+                               backend="jax")
+    sched = FleetScheduler(pool, wls, sched="forecast")
+    stream = RequestStream(n_workers / PERIOD_S, MIX, n_steps, DT,
+                           seed=seed + 1)
+
+    def once():
+        pool.reset()
+        sched.state = make_sched_state(sched.params)
+        obs = None
+        if obs_mode != "off":
+            obs = make_fleet_obs(
+                obs_mode, pool.params, sched.params, n_steps,
+                window=max(int(round(OBS_WINDOW_S / DT)), 1))
+        return run_fleet(pool, sched, stream, n_steps, obs=obs)
+
+    return once
+
+
+def overhead(n_workers: int = 1024, duration_s: float = 600.0,
+             seed: int = 0, iters: int = 3) -> dict:
+    """Warm fused-launch cost of each obs mode at the headline fleet
+    size. The gate: tele < 10% over off, warm."""
+    out: dict = {"n_workers": n_workers, "duration_s": duration_s}
+    for mode in ("off", "tele", "trace"):
+        out[mode] = timeit_split(_warm_serve_timer(mode, n_workers,
+                                                   duration_s, seed),
+                                 iters=iters)
+    base = out["off"]["warm_s"]
+    out["tele_overhead_warm"] = out["tele"]["warm_s"] / base - 1.0
+    out["trace_overhead_warm"] = out["trace"]["warm_s"] / base - 1.0
+    out["tele_overhead_under_10pct"] = bool(
+        out["tele_overhead_warm"] < 0.10)
+    return out
+
+
+def example_trace(path: str = "experiments/fleet_trace_example.json",
+                  n_workers: int = 24, duration_s: float = 60.0,
+                  seed: int = 0) -> dict:
+    """A small committed Perfetto export (open in chrome://tracing):
+    24 workers x 60 s on the fused launch, trace mode."""
+    rows = min(8, n_workers)
+    power = make_power_matrix(TRACES, rows, duration_s, DT, seed)
+    r = run_scheduled(power, DT, n_workers, _workloads(),
+                      rate_rps=n_workers / PERIOD_S, mix=MIX,
+                      n_steps=int(duration_s / DT), seed=seed,
+                      backend="jax", sched="forecast", obs_mode="trace",
+                      obs_window_s=OBS_WINDOW_S, trace_out=path)
+    n_events = len(json.loads(Path(path).read_text())["traceEvents"])
+    return {"path": path, "n_workers": n_workers,
+            "duration_s": duration_s, "events": r["obs"]["events"],
+            "trace_events": n_events}
+
+
+def run_suite(n_workers: int = 1024, duration_s: float = 600.0) -> dict:
+    agree = _sched_agreement(256, 60.0, 32, sched="forecast",
+                             obs_mode="trace",
+                             obs_window_s=OBS_WINDOW_S)
+    zp = zero_perturbation(256, 60.0, 32)
+    ovh = overhead(n_workers, duration_s)
+    ex = example_trace()
+    res = {"channel_agreement": agree, "zero_perturbation": zp,
+           "overhead": ovh, "example_trace": ex}
+    us = ovh["off"]["warm_s"] * 1e6
+    emit("obs.channels_agree", us, str(agree["obs_channels_agree"]))
+    emit("obs.zero_perturbation", us, str(zp["zero_perturbation"]))
+    emit("obs.tele_overhead_warm_1024", us,
+         f"{ovh['tele_overhead_warm'] * 100:.1f}%")
+    emit("obs.trace_overhead_warm_1024", us,
+         f"{ovh['trace_overhead_warm'] * 100:.1f}%")
+    out = Path("experiments")
+    out.mkdir(exist_ok=True)
+    (out / "fleet_observability.json").write_text(
+        json.dumps(res, indent=1, default=str))
+    return res
+
+
+def run_smoke(duration_s: float = 20.0) -> dict:
+    """CI gate: at N=1 and N=256, instrumented runs must (a) leave the
+    serve bit-identical on both backends and (b) fill every telemetry
+    channel bit-exactly numpy-vs-jax."""
+    res = {}
+    for n in (1, 256):
+        a = _sched_agreement(n, duration_s, 8, sched="forecast",
+                             obs_mode="trace",
+                             obs_window_s=OBS_WINDOW_S)
+        if not (a["counts_agree"] and a["obs_channels_agree"]):
+            print(json.dumps(a, indent=1), file=sys.stderr)
+            raise SystemExit(
+                f"obs smoke FAILED at N={n}: channels disagree")
+        zp = zero_perturbation(n, duration_s, 8)
+        if not zp["zero_perturbation"]:
+            print(json.dumps(zp, indent=1), file=sys.stderr)
+            raise SystemExit(
+                f"obs smoke FAILED at N={n}: serve perturbed")
+        res[str(n)] = {"agreement": a,
+                       "zero_perturbation": zp["zero_perturbation"]}
+    return res
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workers", type=int, default=1024,
+                    help="fleet size for the overhead measurement")
+    ap.add_argument("--duration", type=float, default=600.0,
+                    help="serve length (s) for the overhead measurement")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: zero perturbation + channel "
+                         "bit-equality at N in {1, 256}")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return run_smoke()
+    return run_suite(args.workers, args.duration)
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1, default=str))

@@ -269,12 +269,16 @@ _COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
 def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
                      seed: int = 0, sched: str = "forecast",
                      traces=None, forecaster: str = "ou",
-                     workloads=None) -> dict:
+                     workloads=None, obs_mode: str = "off",
+                     obs_window_s: float = 1.0,
+                     trace_out: str = "") -> dict:
     """One definition of *scheduler* agreement: the NumPy per-tick driver
     and the fused JAX launch serve the same stream over one trace bank
     and must match on every request-lifecycle counter and on the pool's
     emitted/skipped/power-cycle counts. Used by the recorded benchmark
-    and the CI smoke gate alike."""
+    and the CI smoke gate alike. With ``obs_mode`` on, both runs are
+    instrumented (repro.obs) and every telemetry channel must *also*
+    agree bit-exactly (``obs_channels_agree``)."""
     names = traces or TRACES
     rows = min(n_rows, n_workers)
     power = make_power_matrix(names, rows, duration_s, DT, seed)
@@ -287,9 +291,11 @@ def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
             power, DT, n_workers, workloads or _workloads(),
             rate_rps=rate, mix=MIX, n_steps=n_steps, seed=seed,
             backend=backend, sched=sched, forecaster=forecaster,
-            trace_families=families)
+            trace_families=families, obs_mode=obs_mode,
+            obs_window_s=obs_window_s,
+            trace_out=(trace_out if backend == "jax" else ""))
     agree = all(res["numpy"][k] == res["jax"][k] for k in _COUNT_KEYS)
-    return {
+    out = {
         "n_workers": n_workers,
         "duration_s": duration_s,
         "sched": sched,
@@ -298,6 +304,13 @@ def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
         "counts": {b: {k: res[b][k] for k in _COUNT_KEYS}
                    for b in ("numpy", "jax")},
     }
+    if obs_mode != "off":
+        a = res["numpy"]["obs"]["channels"]
+        b = res["jax"]["obs"]["channels"]
+        out["obs_channels_agree"] = bool(
+            all(a[name] == b[name] for name in a))
+        out["obs_events"] = res["jax"]["obs"]["events"]
+    return out
 
 
 def control_plane_comparison(n_workers: int = 1024,
@@ -497,10 +510,15 @@ def run_forecaster_suite(n_workers: int = 1024,
 
 def run_control_plane_suite(n_workers: int = 1024,
                             duration_s: float = 600.0,
-                            forecaster: str = "ou") -> dict:
+                            forecaster: str = "ou",
+                            obs_mode: str = "off",
+                            obs_window_s: float = 1.0,
+                            trace_out: str = "") -> dict:
     t0 = time.perf_counter()
     agree = _sched_agreement(n_workers, duration_s, 32, sched="forecast",
-                             forecaster=forecaster)
+                             forecaster=forecaster, obs_mode=obs_mode,
+                             obs_window_s=obs_window_s,
+                             trace_out=trace_out)
     comp = control_plane_comparison(n_workers, duration_s)
     scaling = control_plane_scaling()
     total = time.perf_counter() - t0
@@ -508,6 +526,9 @@ def run_control_plane_suite(n_workers: int = 1024,
            "host_vs_fused_scaling": scaling}
     us = total * 1e6 / 3
     emit("fleet.sched_counts_agree", us, str(agree["counts_agree"]))
+    if obs_mode != "off":
+        emit("fleet.obs_channels_agree", us,
+             str(agree["obs_channels_agree"]))
     for fam, per in comp.items():
         emit(f"fleet.forecast_over_reactive_{fam}", us,
              f"{per['forecast_over_reactive']:.3f}x")
@@ -604,6 +625,16 @@ def main(argv: list[str] | None = None) -> dict:
                          "(1024 workers, 600 s, on --backend; counts are "
                          "backend-identical) -> "
                          "experiments/fleet_forecasters.json")
+    ap.add_argument("--obs", choices=("off", "tele", "trace"),
+                    default="off",
+                    help="instrument the --control-plane agreement runs "
+                         "with the repro.obs telemetry plane (channels "
+                         "must agree bit-exactly across backends)")
+    ap.add_argument("--obs-window", type=float, default=1.0,
+                    help="telemetry window length in seconds")
+    ap.add_argument("--trace-out", default="",
+                    help="write the fused run's Perfetto JSON here "
+                         "(--obs trace)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI agreement gate (256 workers, 30 s)")
     args = ap.parse_args(argv)
@@ -612,7 +643,10 @@ def main(argv: list[str] | None = None) -> dict:
     if args.forecasters:
         return run_forecaster_suite(backend=args.backend)
     if args.control_plane:
-        return run_control_plane_suite(forecaster=args.forecaster)
+        return run_control_plane_suite(forecaster=args.forecaster,
+                                       obs_mode=args.obs,
+                                       obs_window_s=args.obs_window,
+                                       trace_out=args.trace_out)
     if args.backend == "jax":
         return run_backend_suite(args.max_workers)
     return run_scheduler_suite()

@@ -102,6 +102,7 @@ class JaxFleetBackend:
         self._compiled: dict[int, callable] = {}
         self._serve_compiled: dict[tuple, callable] = {}
         self._serve_sp: SchedParams | None = None
+        self._pow_cs = None  # lazy shared power prefix-sum (obs)
 
     # -- public API ----------------------------------------------------------
 
@@ -166,19 +167,26 @@ class JaxFleetBackend:
 
     def run_serve(self, state: FleetState, sp: SchedParams,
                   sched_state: SchedState, arrivals: np.ndarray, *,
-                  i0: int = 0, dispatch_every: int = 10
+                  i0: int = 0, dispatch_every: int = 10, obs=None
                   ) -> tuple[FleetState, SchedState]:
         """The whole serve trace — device physics AND the array-native
         control plane (``repro.fleet.sched``) — as one ``lax.scan``: the
         per-tick arrival counts are the scan input, admission/collection
         run every tick, the shed/dispatch/evict passes fire under a
         ``lax.cond`` at the dispatch cadence, and only the two final
-        states come back to the host. No per-macro-step transfers."""
+        states come back to the host. No per-macro-step transfers.
+
+        ``obs`` (a ``repro.obs.FleetObs``) threads the telemetry /
+        event-ring arrays through the scan carry and writes them back
+        here — the serve expressions themselves are untouched (the
+        zero-perturbation contract), and with ``obs=None`` the compiled
+        program is byte-identical to the uninstrumented build."""
         if self.p.mode != "dispatch":
             raise ValueError("run_serve needs a dispatch-mode fleet")
         arrivals = np.asarray(arrivals, dtype=np.int64)
         n_ticks = arrivals.shape[0]
-        key = (n_ticks, int(dispatch_every))
+        op = None if obs is None else obs.op
+        key = (n_ticks, int(dispatch_every), op)
         if self._serve_sp is not sp:  # new control-plane config: re-trace
             self._serve_compiled = {}
             self._serve_sp = sp
@@ -188,24 +196,64 @@ class JaxFleetBackend:
                        for x in sched_state_as_tuple(sched_state))
             fn = self._serve_compiled.get(key)
             if fn is None:
-                fn = self._build_serve(sp, n_ticks, int(dispatch_every))
+                fn = self._build_serve(sp, n_ticks, int(dispatch_every),
+                                       op=op)
                 self._serve_compiled[key] = fn
-            fs, ss = fn(fs, ss, jnp.asarray(arrivals),
-                        jnp.asarray(i0, jnp.int64))
+            if op is None:
+                fs, ss = fn(fs, ss, jnp.asarray(arrivals),
+                            jnp.asarray(i0, jnp.int64))
+            else:
+                from repro.obs.state import (ring_as_tuple,
+                                             ring_from_tuple,
+                                             tele_as_tuple,
+                                             tele_from_tuple)
+                tele = tuple(jnp.asarray(x)
+                             for x in tele_as_tuple(obs.tele))
+                ring = (None if obs.ring is None else
+                        tuple(jnp.asarray(x)
+                              for x in ring_as_tuple(obs.ring)))
+                fs, ss, tele, ring = fn(fs, ss, tele, ring,
+                                        jnp.asarray(arrivals),
+                                        jnp.asarray(i0, jnp.int64))
+                obs.tele = tele_from_tuple(
+                    tuple(np.asarray(x) for x in tele))
+                if ring is not None:
+                    obs.ring = ring_from_tuple(
+                        tuple(np.asarray(x) for x in ring))
             fs = tuple(np.array(x) for x in fs)
             ss = tuple(np.asarray(x) for x in ss)
         return state_from_tuple(fs), sched_state_from_tuple(ss)
 
+    def _power_cumsum(self):
+        """Shared (R, T+1) power prefix-sum, computed once in NumPy (so
+        the obs forecast-error gathers read values bit-identical to the
+        host driver's) and cached on device."""
+        if self._pow_cs is None:
+            from repro.obs.telemetry import power_cumsum
+            with enable_x64():
+                self._pow_cs = jnp.asarray(
+                    power_cumsum(np.asarray(self.p.power)))
+        return self._pow_cs
+
     def _build_serve(self, sp: SchedParams, n_ticks: int,
-                     dispatch_every: int):
+                     dispatch_every: int, op=None):
         from repro.fleet import sched as S
+        if op is not None:
+            from repro.obs import telemetry as O
+            obs_cs = self._power_cumsum() if sp.forecast else None
         p = self.p
         n = p.n
         tick = self._tick
 
         def body(carry, xs):
-            fs, ss = carry
-            i, counts = xs
+            if op is None:
+                fs, ss = carry
+                i, counts = xs
+            else:
+                (fs, ss), (tele, ring) = carry
+                i, j, counts = xs
+            fs0 = _S(*fs)
+            ssb = ss  # tick-start snapshot (immutable namedtuple view)
             t = i * p.dt
             ss = S.admit(sp, ss, counts, t, jnp)
             is_tick = (i % dispatch_every) == 0
@@ -232,7 +280,7 @@ class JaxFleetBackend:
                 return fsn, ss
 
             fsn, ss = lax.cond(is_tick, do_dispatch, lambda x: x,
-                               (_S(*fs), ss))
+                               (fs0, ss))
             ev0 = (jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.float64),
                    jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.int64))
             fs2, ev = tick(tuple(fsn), ev0, i)
@@ -246,14 +294,41 @@ class JaxFleetBackend:
                 return fsn._replace(p_pending=fsn.p_pending & ~evm,
                                     has_work=fsn.has_work & ~evm), ss
 
+            fs2s = _S(*fs2)
             fsn2, ss = lax.cond(is_tick, do_evict, lambda x: x,
-                                (_S(*fs2), ss))
-            return (tuple(fsn2), ss), None
+                                (fs2s, ss))
+            if op is None:
+                return (tuple(fsn2), ss), None
+            # observability: pure reads of the before/after snapshots
+            # above — never feeds back into fs/ss (zero perturbation)
+            col = ((i % p.T) if self.phase is None
+                   else (i + self.phase) % p.T)
+            pw = self.power[self.trace_index, col]
+            tele, ring = O.obs_tick(
+                op, sp, tele, ring, i=i, j=j, is_tick=is_tick, pw=pw,
+                eff=p.eff, dt=p.dt, b=O.dev_snap(fs0),
+                sb=O.sched_snap(ssb, jnp),
+                assign_mask=fsn.p_pending & ~fs0.p_pending,
+                assign_wl=fsn.p_wl,
+                evict_mask=((fs2s.p_pending | fs2s.has_work)
+                            & ~(fsn2.p_pending | fsn2.has_work)),
+                fs=fsn2, ss=ss, power=self.power, cs=obs_cs,
+                trace_index=self.trace_index, phase=self.phase, T=p.T,
+                xp=jnp)
+            return ((tuple(fsn2), ss), (tele, ring)), None
 
-        def serve_fn(fs, ss, arr, i0):
-            xs = (i0 + jnp.arange(n_ticks, dtype=jnp.int64), arr)
-            (fs, ss), _ = lax.scan(body, (fs, S.SS(*ss)), xs)
-            return fs, tuple(ss)
+        if op is None:
+            def serve_fn(fs, ss, arr, i0):
+                xs = (i0 + jnp.arange(n_ticks, dtype=jnp.int64), arr)
+                (fs, ss), _ = lax.scan(body, (fs, S.SS(*ss)), xs)
+                return fs, tuple(ss)
+        else:
+            def serve_fn(fs, ss, tele, ring, arr, i0):
+                idx = jnp.arange(n_ticks, dtype=jnp.int64)
+                xs = (i0 + idx, idx, arr)
+                ((fs, ss), (tele, ring)), _ = lax.scan(
+                    body, ((fs, S.SS(*ss)), (tele, ring)), xs)
+                return fs, tuple(ss), tele, ring
 
         return jax.jit(serve_fn)
 

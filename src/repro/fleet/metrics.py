@@ -83,8 +83,19 @@ def _hist_percentile(hist: np.ndarray, lat_max_s: float, q: float) -> float:
     if total == 0:
         return 0.0
     cum = np.cumsum(hist)
-    b = int(np.searchsorted(cum, q * total))
+    # searchsorted(cum, 0) would land on leading *empty* bins; clamp the
+    # rank strictly above zero so small q still finds occupied mass
+    rank = max(q * total, np.finfo(np.float64).tiny)
+    b = int(np.searchsorted(cum, rank))
     return (min(b, hist.shape[0] - 1) + 0.5) * lat_max_s / hist.shape[0]
+
+
+def latency_bin_edges_s(sp) -> list[float]:
+    """The ``lat_bins + 1`` edges of the fixed-bin latency histogram, in
+    seconds — exposed so summary consumers can reconstruct the bins the
+    percentiles were read from."""
+    return [float(x) for x in
+            np.linspace(0.0, sp.lat_max_s, sp.lat_bins + 1)]
 
 
 def sched_summary(sp, ss, duration_s: float, pool=None,
@@ -107,6 +118,9 @@ def sched_summary(sp, ss, duration_s: float, pool=None,
                                           sp.lat_max_s, 0.50),
         "latency_p95_s": _hist_percentile(np.asarray(ss.lat_hist),
                                           sp.lat_max_s, 0.95),
+        "latency_p99_s": _hist_percentile(np.asarray(ss.lat_hist),
+                                          sp.lat_max_s, 0.99),
+        "latency_bin_edges_s": latency_bin_edges_s(sp),
         "mean_units": float(ss.units_wl.sum()) / max(completed, 1),
         "mean_expected_accuracy": (float(ss.acc_wl.sum())
                                    / max(completed, 1)),
@@ -161,6 +175,7 @@ class FleetMetrics:
             "latency_mean_s": float(lat.mean()) if lat.size else 0.0,
             "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
             "latency_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if lat.size else 0.0,
             "mean_units": (float(np.mean([r.units for r in self.completed]))
                            if self.completed else 0.0),
             "mean_expected_accuracy": (

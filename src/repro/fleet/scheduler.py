@@ -188,7 +188,7 @@ class FleetScheduler:
 
 def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
               stream: RequestStream, n_steps: int, *,
-              dispatch_every: int = 10) -> dict:
+              dispatch_every: int = 10, obs=None) -> dict:
     """Drive arrivals -> control plane -> device physics -> collection.
 
     With a NumPy pool the loop advances tick-by-tick on the host (the
@@ -200,20 +200,34 @@ def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
     ``dispatch_every`` ticks, and only the final states return to the
     host. Both paths evaluate the same control-plane expressions and
     agree exactly on all discrete counts.
+
+    ``obs`` (a ``repro.obs.FleetObs``, or None) instruments the run:
+    the NumPy loop calls its snapshot hooks around each tick, the JAX
+    path threads its arrays through the scan carry — both fill the same
+    int64 channels bit-exactly, and neither perturbs the serve results.
     """
     dt = pool.dt
     if getattr(pool, "backend", "numpy") == "jax":
         arrivals = stream.counts_matrix(sched.params.W)[:n_steps]
-        pool.run_serve(sched, arrivals, dispatch_every=dispatch_every)
+        pool.run_serve(sched, arrivals, dispatch_every=dispatch_every,
+                       obs=obs)
         return sched.summary(n_steps * dt)
     for i in range(n_steps):
         t = i * dt
+        if obs is not None:
+            obs.host_begin(pool.state, sched.state)
         wls = stream.arrivals(i)
         if wls.size:
             sched.submit(t, wls)
         tick = i % dispatch_every == 0
         if tick:
             sched.dispatch(t, i)
+            if obs is not None:
+                obs.host_after_dispatch(pool.state)
         pool.step(i)
+        if obs is not None:
+            obs.host_before_evict(pool.state)
         sched.collect(t, evict=tick)
+        if obs is not None:
+            obs.host_end(i, tick, pool.state, sched.state)
     return sched.summary(n_steps * dt)

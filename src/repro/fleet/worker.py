@@ -278,12 +278,14 @@ class FleetWorkerPool:
                 self.step(i)
 
     def run_serve(self, sched, arrivals: np.ndarray, *,
-                  dispatch_every: int = 10) -> None:
+                  dispatch_every: int = 10, obs=None) -> None:
         """Fused serve: device physics AND the array-native scheduler as
         one ``lax.scan`` launch (JAX backend only; the NumPy reference
         drives the same control-plane expressions tick-by-tick through
         ``repro.fleet.scheduler.run_fleet``). ``sched`` is a
-        ``FleetScheduler``; its state is advanced in place."""
+        ``FleetScheduler``; its state is advanced in place. ``obs`` (a
+        ``repro.obs.FleetObs``) rides the scan carry and is updated in
+        place — the serve results are bit-identical with or without it."""
         if self.backend != "jax":
             raise ValueError("run_serve is the fused jax path; use "
                              "run_fleet's per-tick driver for numpy pools")
@@ -293,7 +295,7 @@ class FleetWorkerPool:
                                         use_pallas=self.use_pallas)
         self.state, sched.state = self._jax.run_serve(
             self.state, sched.params, sched.state, arrivals,
-            i0=self.steps_done, dispatch_every=dispatch_every)
+            i0=self.steps_done, dispatch_every=dispatch_every, obs=obs)
         self.steps_done += int(np.asarray(arrivals).shape[0])
 
     # -- driving + accounting ------------------------------------------------

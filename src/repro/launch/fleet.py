@@ -127,7 +127,10 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   trace_families: list[str] | None = None,
                   capacitance_f: np.ndarray | None = None,
                   v_max: np.ndarray | None = None,
-                  active_power_w: np.ndarray | None = None) -> dict:
+                  active_power_w: np.ndarray | None = None,
+                  obs_mode: str = "off", obs_window_s: float = 1.0,
+                  obs_ring: int = 256, trace_out: str = "",
+                  obs_print: bool = False) -> dict:
     pool = build_dispatch_pool(power, dt, n_workers, workloads, seed,
                                backend=backend, capacitance_f=capacitance_f,
                                v_max=v_max, active_power_w=active_power_w)
@@ -136,14 +139,35 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                                lookahead_s=lookahead_s,
                                forecaster=forecaster,
                                trace_families=trace_families)
+    obs = None
+    if obs_mode != "off":
+        from repro.obs import make_fleet_obs
+        obs = make_fleet_obs(obs_mode, pool.params, scheduler.params,
+                             n_steps,
+                             window=max(int(round(obs_window_s / dt)), 1),
+                             ring=obs_ring)
     stream = RequestStream(rate_rps, mix, n_steps, dt, seed=seed + 1)
     summary = run_fleet(pool, scheduler, stream, n_steps,
-                        dispatch_every=dispatch_every)
+                        dispatch_every=dispatch_every, obs=obs)
     summary["mode"] = "scheduled"
     summary["sched"] = sched
     summary["forecaster"] = forecaster
     summary["n_workers"] = n_workers
     summary["backend"] = backend
+    if obs is not None:
+        summary["obs"] = obs.summary()
+        if trace_out and obs.ring is not None:
+            from repro.obs import write_trace
+            write_trace(trace_out, obs.op, obs.ring, dt, tele=obs.tele)
+            summary["obs"]["trace_out"] = trace_out
+        if obs_print:  # terminal summaries on stderr (stdout is JSON)
+            import sys as _sys
+            from repro.obs import format_ring_summary, format_tele_summary
+            print(format_tele_summary(obs.op, obs.tele, dt),
+                  file=_sys.stderr)
+            if obs.ring is not None:
+                print(format_ring_summary(obs.op, obs.ring, dt),
+                      file=_sys.stderr)
     return summary
 
 
@@ -256,6 +280,17 @@ def main(argv: list[str] | None = None) -> dict:
                          "matched to each trace row's family")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--shed-after", type=float, default=30.0)
+    ap.add_argument("--obs", choices=("off", "tele", "trace"),
+                    default="off",
+                    help="observability plane (repro.obs): windowed "
+                         "telemetry channels (tele) plus per-worker "
+                         "event rings with Perfetto export (trace); "
+                         "serve results are bit-identical either way")
+    ap.add_argument("--obs-window", type=float, default=1.0,
+                    help="telemetry window length in seconds")
+    ap.add_argument("--trace-out", default="",
+                    help="write the Chrome trace-event / Perfetto JSON "
+                         "here (--obs trace; open in chrome://tracing)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="", help="write summary to this path")
     args = ap.parse_args(argv)
@@ -295,7 +330,9 @@ def main(argv: list[str] | None = None) -> dict:
             shed_after_s=args.shed_after, backend=args.backend,
             sched=args.sched, lookahead_s=args.lookahead,
             forecaster=args.forecaster, trace_families=families,
-            capacitance_f=cf, v_max=vm, active_power_w=ap_w)
+            capacitance_f=cf, v_max=vm, active_power_w=ap_w,
+            obs_mode=args.obs, obs_window_s=args.obs_window,
+            trace_out=args.trace_out, obs_print=True)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(
             power, args.dt, args.workers, workloads, mix=mix,

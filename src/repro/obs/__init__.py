@@ -1,0 +1,31 @@
+"""In-scan observability plane for the fused serve loop.
+
+Four pieces (see docs/observability.md):
+
+- ``repro.obs.state`` — the struct-of-arrays contract: windowed int64
+  telemetry channels (:class:`TeleState`), per-worker event rings
+  (:class:`RingState`), and the frozen :class:`ObsParams` config.
+- ``repro.obs.telemetry`` — the shared xp-generic tick update both
+  backends evaluate (NumPy host hooks / traced into the JAX scan) and
+  the :class:`FleetObs` host recorder.
+- ``repro.obs.export`` — Chrome trace-event / Perfetto JSON export and
+  terminal summaries of the drained rings.
+- ``repro.obs.profile`` — ``jax.profiler`` wrapping + the uniform
+  cold/warm timing split the benchmarks report.
+"""
+from repro.obs.export import (format_ring_summary, format_tele_summary,
+                              perfetto_trace, write_trace)
+from repro.obs.profile import profiled, time_compiled
+from repro.obs.state import (EVENT_NAMES, OBS_MODES, RING_FIELDS,
+                             TELE_FIELDS, ObsParams, RingState,
+                             TeleState, init_ring, init_tele,
+                             make_obs_params)
+from repro.obs.telemetry import FleetObs, make_fleet_obs, obs_tick
+
+__all__ = [
+    "EVENT_NAMES", "OBS_MODES", "RING_FIELDS", "TELE_FIELDS",
+    "ObsParams", "RingState", "TeleState", "FleetObs", "init_ring",
+    "init_tele", "make_fleet_obs", "make_obs_params", "obs_tick",
+    "perfetto_trace", "write_trace", "format_ring_summary",
+    "format_tele_summary", "profiled", "time_compiled",
+]

@@ -1,0 +1,169 @@
+"""Ring/telemetry exporters: Perfetto (Chrome trace-event) JSON + text.
+
+Post-scan, the event rings are plain int64 arrays on the host. This
+module decodes them (oldest -> newest per row, drop-aware) and renders:
+
+- :func:`perfetto_trace` — a Chrome trace-event JSON object (the legacy
+  format Perfetto and ``chrome://tracing`` both load): per-worker tracks
+  carry "X" complete slices for power cycles (wake -> brownout) and
+  request service (acquire -> emit/brownout/evict) plus "i" instants for
+  unpaired events; the scheduler track carries instants with counts; and
+  the telemetry channels (when given) become "C" counter tracks sampled
+  once per window. Timestamps are microseconds (``tick * dt * 1e6``).
+- :func:`format_ring_summary` — the terminal view: per-kind totals,
+  per-row fill/drop stats.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.obs.state import (EV_ACQUIRE, EV_BROWN, EV_EMIT, EV_EVICT,
+                             EV_WAKE, EVENT_NAMES, ObsParams, RingState)
+
+# telemetry channels rendered as Perfetto counter tracks
+COUNTER_CHANNELS = ("queue_depth", "inflight", "on_workers",
+                    "harvest_pj", "completed")
+
+_SLICE_STARTS = {EV_WAKE: "power-cycle", EV_ACQUIRE: "serve"}
+_SLICE_ENDS = {EV_WAKE: (EV_BROWN,),
+               EV_ACQUIRE: (EV_EMIT, EV_BROWN, EV_EVICT)}
+
+
+def decode_ring(op: ObsParams, rs: RingState
+                ) -> list[list[tuple[int, int, int]]]:
+    """Per-row live records, oldest -> newest: ``rows[r]`` is a list of
+    ``(tick, kind, arg)`` ints. Row ``op.n`` is the scheduler track.
+    Overflowed (oldest) records are already gone — ``n_ev`` tells how
+    many (see :class:`RingState`)."""
+    t = np.asarray(rs.t)
+    kind = np.asarray(rs.kind)
+    arg = np.asarray(rs.arg)
+    n_ev = np.asarray(rs.n_ev)
+    out: list[list[tuple[int, int, int]]] = []
+    for r in range(op.n + 1):
+        k = int(min(n_ev[r], op.ring))
+        idx = (int(n_ev[r]) - k + np.arange(k)) % op.ring
+        out.append([(int(t[r, p]), int(kind[r, p]), int(arg[r, p]))
+                    for p in idx])
+    return out
+
+
+def _row_events(records, row: int, dt: float, end_tick: int,
+                pid: int) -> list[dict]:
+    """One ring row -> trace events: greedy begin/end pairing into "X"
+    complete slices (unmatched begins clamp to the run end; everything
+    else becomes an "i" instant)."""
+    us = 1e6 * dt
+    evs: list[dict] = []
+    open_at: dict[int, tuple[int, int]] = {}  # start kind -> (tick, arg)
+    for tick, kind, arg in records:
+        matched = False
+        for start, ends in _SLICE_ENDS.items():
+            if kind in ends and start in open_at:
+                t0, a0 = open_at.pop(start)
+                evs.append({"ph": "X", "name": _SLICE_STARTS[start],
+                            "cat": EVENT_NAMES.get(kind, str(kind)),
+                            "ts": t0 * us,
+                            "dur": max((tick - t0) * us, 0.01),
+                            "pid": pid, "tid": row,
+                            "args": {"start_arg": a0, "end_arg": arg,
+                                     "end": EVENT_NAMES[kind]}})
+                matched = True
+        if kind in _SLICE_STARTS:
+            open_at[kind] = (tick, arg)
+        elif not matched:
+            evs.append({"ph": "i", "s": "t",
+                        "name": EVENT_NAMES.get(kind, str(kind)),
+                        "ts": tick * us, "pid": pid, "tid": row,
+                        "args": {"arg": arg}})
+    for start, (t0, a0) in open_at.items():  # still open at scan end
+        evs.append({"ph": "X", "name": _SLICE_STARTS[start],
+                    "cat": "open", "ts": t0 * us,
+                    "dur": max((end_tick - t0) * us, 0.01),
+                    "pid": pid, "tid": row, "args": {"start_arg": a0}})
+    return evs
+
+
+def perfetto_trace(op: ObsParams, rs: RingState, dt: float, *,
+                   tele=None, pid: int = 0) -> dict:
+    """The Chrome trace-event JSON object for one instrumented run.
+    ``json.dump`` the result and open it in ``chrome://tracing`` or
+    https://ui.perfetto.dev. ``tele`` (a :class:`TeleState`) adds the
+    :data:`COUNTER_CHANNELS` as counter tracks."""
+    events: list[dict] = [
+        {"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+         "args": {"name": f"fleet serve (N={op.n})"}},
+        {"ph": "M", "name": "thread_name", "pid": pid, "tid": op.n,
+         "args": {"name": "scheduler"}},
+    ]
+    rows = decode_ring(op, rs)
+    named = set()
+    for r, records in enumerate(rows[:op.n]):
+        if not records:
+            continue
+        if r not in named:
+            events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                           "tid": r, "args": {"name": f"worker {r}"}})
+            named.add(r)
+        events.extend(_row_events(records, r, dt, op.n_ticks, pid))
+    events.extend(_row_events(rows[op.n], op.n, dt, op.n_ticks, pid))
+    if tele is not None:
+        us = 1e6 * dt * op.window
+        for ch in COUNTER_CHANNELS:
+            series = np.asarray(getattr(tele, ch))
+            for w, v in enumerate(series):
+                events.append({"ph": "C", "name": ch, "ts": w * us,
+                               "pid": pid, "tid": 0,
+                               "args": {"value": int(v)}})
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"n_workers": op.n, "n_ticks": op.n_ticks,
+                          "dt_s": dt, "ring": op.ring}}
+
+
+def write_trace(path: str, op: ObsParams, rs: RingState, dt: float, *,
+                tele=None) -> dict:
+    """Render + write the Perfetto JSON; returns the trace object."""
+    trace = perfetto_trace(op, rs, dt, tele=tele)
+    with open(path, "w") as f:
+        json.dump(trace, f)
+    return trace
+
+
+def format_ring_summary(op: ObsParams, rs: RingState, dt: float) -> str:
+    """Terminal view of the rings: per-kind event totals plus fill/drop
+    accounting (drops are per-row ``max(0, n_ev - ring)``)."""
+    kind = np.asarray(rs.kind)
+    n_ev = np.asarray(rs.n_ev)
+    # live-slot mask per row (slot j live iff j < min(n_ev, ring))
+    live = np.arange(op.ring)[None, :] < np.minimum(n_ev, op.ring)[:, None]
+    lines = [f"event rings: {op.n} workers + scheduler, "
+             f"capacity {op.ring}/row, {dt:g}s ticks"]
+    for code, name in sorted(EVENT_NAMES.items()):
+        c = int(((kind == code) & live).sum())
+        if c:
+            lines.append(f"  {name:<9} {c:>10d}")
+    rec = int(np.minimum(n_ev, op.ring).sum())
+    dropped = int(np.maximum(n_ev - op.ring, 0).sum())
+    full = int((n_ev > op.ring).sum())
+    lines.append(f"  recorded {rec}, dropped {dropped} (oldest-first) "
+                 f"across {full} overflowed rows")
+    return "\n".join(lines)
+
+
+def format_tele_summary(op: ObsParams, tele, dt: float) -> str:
+    """Terminal view of the windowed channels: totals plus a min/max
+    across windows for the sampled series."""
+    lines = [f"telemetry: {op.n_windows} windows x {op.window} ticks "
+             f"({op.window * dt:g}s each)"]
+    for f in ("harvest_pj", "spent_pj", "wakes", "brownouts", "admitted",
+              "completed", "shed", "lost", "evicted", "forecast_err_nw"):
+        s = np.asarray(getattr(tele, f))
+        lines.append(f"  {f:<16} total {int(s.sum()):>14d}  "
+                     f"peak/window {int(s.max()):>12d}")
+    for f in ("queue_depth", "inflight", "on_workers"):
+        s = np.asarray(getattr(tele, f))
+        lines.append(f"  {f:<16} min {int(s.min()):>8d}  "
+                     f"max {int(s.max()):>8d} (window samples)")
+    return "\n".join(lines)

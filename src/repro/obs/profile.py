@@ -1,0 +1,66 @@
+"""Profiler wiring: jax.profiler traces + uniform cold/warm timing.
+
+Two small tools the benchmarks and CLIs share:
+
+- :func:`profiled` — context manager around a scan launch. Given a
+  directory it records a ``jax.profiler`` trace there (viewable in
+  Perfetto / TensorBoard); with no directory, or when jax is absent,
+  it is a no-op — callers wrap launches unconditionally.
+- :func:`time_compiled` — the cold/warm wall-clock split every
+  benchmark reports the same way: first call (compile + run) timed as
+  ``cold_s``, then ``iters`` warm calls timed individually for a median
+  and spread. Results are blocked on (``block_until_ready``) when they
+  are jax arrays, so device asynchrony cannot hide work.
+"""
+from __future__ import annotations
+
+import contextlib
+import statistics
+import time
+
+
+@contextlib.contextmanager
+def profiled(trace_dir: str | None = None):
+    """Record a ``jax.profiler`` trace of the enclosed block into
+    ``trace_dir`` (no-op when ``trace_dir`` is falsy or jax is
+    unavailable)."""
+    if not trace_dir:
+        yield
+        return
+    try:
+        import jax
+    except ImportError:  # profiler requested but no jax: still run
+        yield
+        return
+    with jax.profiler.trace(trace_dir):
+        yield
+
+
+def _block(x):
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except (ImportError, TypeError):
+        pass
+    return x
+
+
+def time_compiled(fn, *args, iters: int = 5) -> dict:
+    """Cold/warm wall-clock split of ``fn(*args)``.
+
+    Returns ``{"cold_s", "warm_s", "warm_s_std", "iters"}`` — cold is
+    the first call (compile included), warm is the median of ``iters``
+    subsequent calls, std-dev over those same calls (0.0 when
+    ``iters < 2``)."""
+    t0 = time.perf_counter()
+    _block(fn(*args))
+    cold = time.perf_counter() - t0
+    warm: list[float] = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        warm.append(time.perf_counter() - t0)
+    return {"cold_s": cold, "warm_s": statistics.median(warm),
+            "warm_s_std": (statistics.pstdev(warm)
+                           if len(warm) > 1 else 0.0),
+            "iters": len(warm)}

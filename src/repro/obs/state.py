@@ -1,0 +1,185 @@
+"""Struct-of-arrays observability state: the contract both backends fill.
+
+Mirrors ``repro.fleet.state``: a frozen :class:`ObsParams` (everything
+static about one instrumented run), a :class:`TeleState` of windowed
+telemetry channels, and a :class:`RingState` of per-worker event rings —
+all plain arrays with field-ordered tuple conversions so the fused JAX
+serve scan can thread them through its carry exactly like the fleet and
+scheduler states.
+
+Design constraints (the bit-exactness + zero-perturbation contract):
+
+- **Every telemetry channel is int64.** Float quantities (energies,
+  forecast error) are quantized *per worker per tick* — ``round(x *
+  1e12)`` picojoules, ``round(x * 1e9)`` nanowatts — and then summed as
+  integers. The per-worker floats are bit-equal across backends (they
+  are the same elementwise IEEE expressions the agreement contract
+  already pins), and integer sums are reduction-order independent, so
+  every channel agrees bit-exactly between the NumPy host driver and
+  the fused JAX scan.
+- **Telemetry reads state, never writes it.** All increments are
+  computed from before/after snapshots of the unmodified fleet and
+  scheduler transitions (``repro.obs.telemetry``), so instrumented and
+  uninstrumented runs produce bit-identical serve/quality counters (the
+  zero-perturbation gate in tests/test_obs.py).
+- **Fixed shapes.** Channels are ``(n_windows,)`` (``v_hist``:
+  ``(n_windows, v_bins)``); rings are ``(n + 1, ring)`` packed
+  ``(t, kind, arg)`` int64 records — row ``n`` is the scheduler track.
+  Overflowing a ring drops the *oldest* records (write position is
+  ``n_ev % ring`` with ``n_ev`` the total-ever counter, so the drop
+  count ``max(0, n_ev - ring)`` is ledgered, never silent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+OBS_MODES = ("off", "tele", "trace")
+
+# packed event kinds: per-worker rows 0..n-1, scheduler track at row n
+EV_WAKE = 1      # power-cycle begin (v crossed v_on); arg = cycle count
+EV_BROWN = 2     # power-cycle end (brown-out below v_off); arg = 0
+EV_ASSIGN = 3    # request batch routed to this worker; arg = workload
+EV_ACQUIRE = 4   # assignment acquired (fixed cost paid); arg = workload
+EV_EMIT = 5      # result emitted; arg = units done
+EV_EVICT = 6     # straggler deadline revoked the assignment; arg = 0
+EV_ADMIT = 7     # scheduler track; arg = requests admitted this tick
+EV_REJECT = 8    # scheduler track; arg = requests rejected this tick
+EV_SHED = 9      # scheduler track; arg = requests shed this tick
+EV_COMPLETE = 10  # scheduler track; arg = requests completed this tick
+EV_LOST = 11     # scheduler track; arg = requests lost this tick
+EV_REQUEUE = 12  # scheduler track; arg = retries granted this tick
+
+EVENT_NAMES = {
+    EV_WAKE: "wake", EV_BROWN: "brownout", EV_ASSIGN: "assign",
+    EV_ACQUIRE: "acquire", EV_EMIT: "emit", EV_EVICT: "evict",
+    EV_ADMIT: "admit", EV_REJECT: "reject", EV_SHED: "shed",
+    EV_COMPLETE: "complete", EV_LOST: "lost", EV_REQUEUE: "requeue",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsParams:
+    """Static configuration of one instrumented run. All fields are
+    scalars, so the params double as the compile-cache key for the
+    instrumented serve scan (a new window size or mode re-traces)."""
+
+    mode: str  # "off" | "tele" | "trace" (trace implies tele)
+    n: int  # workers
+    n_ticks: int  # run length (ticks of dt seconds)
+    window: int  # telemetry window length, ticks
+    n_windows: int  # ceil(n_ticks / window)
+    v_bins: int  # capacitor-voltage histogram bins per window
+    v_hi: float  # histogram upper edge, volts (lower edge is 0)
+    ring: int  # event-ring capacity per worker (trace mode)
+
+
+def make_obs_params(mode: str, n: int, n_ticks: int, *,
+                    window: int = 100, v_bins: int = 32,
+                    v_hi: float = 6.0, ring: int = 256) -> ObsParams:
+    """Validated :class:`ObsParams` (``n_windows`` derived)."""
+    if mode not in OBS_MODES:
+        raise ValueError(f"unknown obs mode {mode!r}; "
+                         f"choose from {OBS_MODES}")
+    window = max(int(window), 1)
+    return ObsParams(mode=mode, n=int(n), n_ticks=int(n_ticks),
+                     window=window,
+                     n_windows=max(-(-int(n_ticks) // window), 1),
+                     v_bins=int(v_bins), v_hi=float(v_hi),
+                     ring=max(int(ring), 1))
+
+
+@dataclasses.dataclass
+class TeleState:
+    """Windowed time-series telemetry: one int64 array per channel,
+    shape ``(n_windows,)`` unless noted. Accumulated channels sum the
+    tick increments of every tick in the window; sampled channels
+    (``queue_depth``, ``inflight``, ``on_workers``, ``v_hist``) are
+    snapshots taken at the window's closing tick."""
+
+    harvest_pj: np.ndarray  # harvested energy, picojoules
+    spent_pj: np.ndarray  # energy drawn for work, picojoules
+    wakes: np.ndarray  # power-cycle begins (v crossed v_on)
+    brownouts: np.ndarray  # power-cycle ends (browned out below v_off)
+    acquired: np.ndarray  # acquisitions (fixed cost paid)
+    emitted: np.ndarray  # emissions (BLE packet / host transfer)
+    skipped: np.ndarray  # SMART skip decisions (local mode)
+    admitted: np.ndarray  # requests admitted
+    rejected: np.ndarray  # requests rejected at admission
+    shed: np.ndarray  # requests shed while queued
+    completed: np.ndarray  # requests completed
+    lost: np.ndarray  # requests lost past the retry budget
+    evicted: np.ndarray  # straggler evictions
+    requeued: np.ndarray  # retries granted
+    meas_correct: np.ndarray  # quality ledger: oracle-correct completions
+    ledger_nj: np.ndarray  # quality ledger: table-priced spend, nanojoules
+    forecast_err_nw: np.ndarray  # sum |forecast - realized| power, nanowatts
+    queue_depth: np.ndarray  # sampled: total queued requests
+    inflight: np.ndarray  # sampled: total in-flight requests
+    on_workers: np.ndarray  # sampled: workers currently on
+    v_hist: np.ndarray  # sampled: (n_windows, v_bins) voltage histogram
+
+
+TELE_FIELDS: tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(TeleState))
+
+# channels accumulated every tick (everything except the sampled four)
+TELE_ACCUM_FIELDS: tuple[str, ...] = tuple(
+    f for f in TELE_FIELDS
+    if f not in ("queue_depth", "inflight", "on_workers", "v_hist"))
+
+
+def init_tele(op: ObsParams) -> TeleState:
+    """All-zero telemetry sized for ``op``."""
+    z = lambda *s: np.zeros(s, dtype=np.int64)  # noqa: E731
+    kw = {f: z(op.n_windows) for f in TELE_FIELDS if f != "v_hist"}
+    return TeleState(v_hist=z(op.n_windows, op.v_bins), **kw)
+
+
+def tele_as_tuple(ts: TeleState) -> tuple:
+    """Field-ordered flat tuple (``TELE_FIELDS`` order) — the pytree
+    form the instrumented serve scan carries."""
+    return tuple(getattr(ts, f) for f in TELE_FIELDS)
+
+
+def tele_from_tuple(t: Sequence) -> TeleState:
+    """Inverse of :func:`tele_as_tuple`."""
+    return TeleState(**dict(zip(TELE_FIELDS, t)))
+
+
+@dataclasses.dataclass
+class RingState:
+    """Fixed-capacity per-worker event rings of packed ``(t, kind, arg)``
+    int64 records. ``n + 1`` rows: one per worker plus the scheduler
+    track at row ``n``. ``n_ev`` counts total events ever pushed per
+    row; the live record at logical age ``a`` sits at physical slot
+    ``(n_ev - 1 - a) % ring``, so overflow drops oldest-first and
+    ``max(0, n_ev - ring)`` is the per-row drop count."""
+
+    t: np.ndarray  # (n + 1, ring) tick index of each record
+    kind: np.ndarray  # (n + 1, ring) event kind (EV_*)
+    arg: np.ndarray  # (n + 1, ring) kind-specific payload
+    n_ev: np.ndarray  # (n + 1,) total events ever pushed per row
+
+
+RING_FIELDS: tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(RingState))
+
+
+def init_ring(op: ObsParams) -> RingState:
+    """Empty rings sized for ``op`` (``n + 1`` rows of ``op.ring``)."""
+    z = lambda *s: np.zeros(s, dtype=np.int64)  # noqa: E731
+    return RingState(t=z(op.n + 1, op.ring), kind=z(op.n + 1, op.ring),
+                     arg=z(op.n + 1, op.ring), n_ev=z(op.n + 1))
+
+
+def ring_as_tuple(rs: RingState) -> tuple:
+    """Field-ordered flat tuple (``RING_FIELDS`` order)."""
+    return tuple(getattr(rs, f) for f in RING_FIELDS)
+
+
+def ring_from_tuple(t: Sequence) -> RingState:
+    """Inverse of :func:`ring_as_tuple`."""
+    return RingState(**dict(zip(RING_FIELDS, t)))

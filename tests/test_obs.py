@@ -1,0 +1,170 @@
+"""Observability-plane contract (repro.obs): the telemetry channels and
+event rings must be *free* — bit-identical serve results with obs on or
+off, on both backends — and *exact* — every int64 channel agrees between
+the NumPy per-tick reference and the fused JAX scan. Plus the event-ring
+overflow semantics, the Perfetto export schema, and the latency-summary
+satellites (p99 + histogram-percentile edge cases).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.fleet.scheduler import FleetScheduler, RequestStream, run_fleet
+from repro.fleet.workloads import har_workload, lm_workload
+from repro.launch.fleet import build_dispatch_pool, make_power_matrix
+from repro.obs import (EVENT_NAMES, TELE_FIELDS, make_fleet_obs,
+                       make_obs_params, perfetto_trace)
+from repro.obs.state import init_ring, ring_as_tuple, ring_from_tuple
+from repro.obs.telemetry import _ring_push
+
+DT = 0.01
+
+COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
+              "evicted", "requeued")
+
+
+def _serve(backend, n_workers, *, obs_mode="off", sched="forecast",
+           duration_s=20.0, seed=4, ring=64):
+    wls = [har_workload(), lm_workload()]
+    rows = min(4, n_workers)
+    power = make_power_matrix(["SOM", "RF"], rows, duration_s, DT,
+                              seed=seed)
+    n_steps = int(duration_s / DT)
+    pool = build_dispatch_pool(power, DT, n_workers, wls, seed,
+                               backend=backend)
+    s = FleetScheduler(pool, wls, sched=sched, shed_after_s=8.0)
+    obs = None
+    if obs_mode != "off":
+        obs = make_fleet_obs(obs_mode, pool.params, s.params, n_steps,
+                             window=100, ring=ring)
+    stream = RequestStream(max(n_workers / 10.0, 0.5),
+                           np.array([0.6, 0.4]), n_steps, DT,
+                           seed=seed + 1)
+    summary = run_fleet(pool, s, stream, n_steps, obs=obs)
+    return summary, obs
+
+
+# ---------------------------------------------------------------------------
+# zero perturbation + cross-backend channel bit-equality (the two gates)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_workers", [1, 256])
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_obs_zero_perturbation(backend, n_workers):
+    """Instrumenting the serve must not change a single counter: obs_tick
+    is a pure function of transition snapshots."""
+    base, _ = _serve(backend, n_workers, obs_mode="off")
+    for mode in ("tele", "trace"):
+        inst, _ = _serve(backend, n_workers, obs_mode=mode)
+        for k in COUNT_KEYS:
+            assert inst[k] == base[k], (mode, k)
+
+
+@pytest.mark.parametrize("n_workers", [1, 256])
+@pytest.mark.parametrize("sched", ["reactive", "forecast"])
+def test_obs_channels_bit_equal_numpy_vs_jax(sched, n_workers):
+    """Every telemetry channel — energy picojoules, lifecycle counts,
+    forecast error, the voltage histogram — is an int64 sum of
+    elementwise-quantized quantities, so the host driver and the fused
+    scan must agree exactly, not approximately."""
+    _, a = _serve("numpy", n_workers, obs_mode="trace", sched=sched)
+    _, b = _serve("jax", n_workers, obs_mode="trace", sched=sched)
+    for f in TELE_FIELDS:
+        av = np.asarray(getattr(a.tele, f))
+        bv = np.asarray(getattr(b.tele, f))
+        assert np.array_equal(av, bv), f
+    assert a.events_recorded() == b.events_recorded()
+    # not vacuous: the run harvested energy and served requests
+    assert int(np.asarray(a.tele.harvest_pj).sum()) > 0
+    assert int(np.asarray(a.tele.completed).sum()) > 0
+
+
+def test_obs_forecast_error_channel_fires_only_under_forecast():
+    _, rea = _serve("numpy", 16, obs_mode="tele", sched="reactive")
+    _, fc = _serve("numpy", 16, obs_mode="tele", sched="forecast")
+    assert int(np.asarray(rea.tele.forecast_err_nw).sum()) == 0
+    assert int(np.asarray(fc.tele.forecast_err_nw).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# event-ring overflow: oldest dropped, drop count ledgered
+# ---------------------------------------------------------------------------
+
+
+def test_ring_overflow_drops_oldest():
+    op = make_obs_params("trace", 2, 1000, ring=4)
+    rs = init_ring(op)
+    for i in range(6):  # six pushes into a 4-slot ring, worker row 0
+        mask = np.array([True, False, False])  # rows: 2 workers + sched
+        rs = ring_from_tuple(_ring_push(op, ring_as_tuple(rs), mask, 1,
+                                        np.int64(i),
+                                        np.full(3, i, dtype=np.int64),
+                                        np))
+    assert int(rs.n_ev[0]) == 6
+    # the 4 retained records are the newest, oldest two dropped
+    from repro.obs.export import decode_ring
+    recs = decode_ring(op, rs)[0]
+    assert [int(t) for t, _, _ in recs] == [2, 3, 4, 5]
+    dropped = max(0, int(rs.n_ev[0]) - op.ring)
+    assert dropped == 2
+
+
+def test_ring_drop_counter_in_summary():
+    _, o = _serve("numpy", 64, obs_mode="trace", ring=8)
+    rec, dropped = o.events_recorded()
+    n_ev = np.asarray(o.ring.n_ev)
+    assert rec == int(np.minimum(n_ev, 8).sum())
+    assert dropped == int(sum(max(0, int(n) - 8) for n in n_ev))
+    assert dropped > 0  # a 64-worker serve overflows an 8-slot ring
+    assert o.summary()["events"] == {"recorded": rec, "dropped": dropped}
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export: schema round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_perfetto_export_round_trip(tmp_path):
+    _, o = _serve("numpy", 16, obs_mode="trace")
+    doc = perfetto_trace(o.op, o.ring, DT, tele=o.tele)
+    # chrome://tracing contract: JSON object with a traceEvents list
+    blob = json.dumps(doc)
+    back = json.loads(blob)
+    assert isinstance(back["traceEvents"], list) and back["traceEvents"]
+    assert back["displayTimeUnit"] == "ms"
+    phases = {e["ph"] for e in back["traceEvents"]}
+    assert phases <= {"X", "i", "C", "M"}
+    for e in back["traceEvents"]:
+        assert {"name", "ph", "pid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] > 0 and e["ts"] >= 0
+            assert e["name"] in ("power-cycle", "serve")
+        if e["ph"] == "i":
+            assert e["name"] in EVENT_NAMES.values()
+    # counter tracks come from the telemetry windows
+    assert any(e["ph"] == "C" for e in back["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# metrics satellites: p99 + histogram percentile edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_sched_summary_has_p99_and_bin_edges():
+    summary, _ = _serve("numpy", 64, obs_mode="off")
+    assert summary["latency_p99_s"] >= summary["latency_p95_s"] \
+        >= summary["latency_p50_s"]
+    edges = summary["latency_bin_edges_s"]
+    assert edges[0] == 0.0 and len(edges) >= 2
+    assert all(b > a for a, b in zip(edges, edges[1:]))
+
+
+def test_hist_percentile_skips_leading_empty_bins():
+    from repro.fleet.metrics import _hist_percentile
+    hist = np.zeros(10, dtype=np.int64)
+    hist[7] = 5  # all mass in bin 7
+    for q in (0.01, 0.5, 0.99):
+        assert _hist_percentile(hist, 10.0, q) == pytest.approx(7.5)
+    assert _hist_percentile(np.zeros(10, dtype=np.int64), 10.0, 0.5) == 0.0

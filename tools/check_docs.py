@@ -1,16 +1,19 @@
 #!/usr/bin/env python
 """Docs-consistency gate: CLI flags and artifacts mentioned must exist.
 
-Two checks:
+Three checks:
 
 - every ``--flag`` token in README.md and docs/*.md appears in the
   ``--help`` output of the CLIs the docs describe (``repro.launch.fleet``,
-  ``benchmarks.fleet_throughput``, ``benchmarks.fleet_quality``) —
-  catches the classic drift where a flag is renamed or removed but the
-  prose keeps recommending it;
+  ``benchmarks.fleet_throughput``, ``benchmarks.fleet_quality``,
+  ``benchmarks.fleet_observability``) — catches the classic drift where
+  a flag is renamed or removed but the prose keeps recommending it;
 - every committed ``experiments/*.json`` artifact has a schema entry in
   ``docs/experiments.md`` (its filename is mentioned there) — catches
-  benchmarks that grow a new artifact without documenting its fields.
+  benchmarks that grow a new artifact without documenting its fields;
+- every telemetry channel named in docs/observability.md's catalog
+  exists in ``repro.obs.state.TELE_FIELDS``, and every field is
+  cataloged — the channel table and the code cannot drift apart.
 
 Run from the repo root:
 
@@ -29,7 +32,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 CLIS = ("repro.launch.fleet", "benchmarks.fleet_throughput",
-        "benchmarks.fleet_quality")
+        "benchmarks.fleet_quality", "benchmarks.fleet_observability")
 DOCS = ("README.md", "docs")
 
 # `--flag` with a word boundary before it (skips ---- rules and
@@ -72,6 +75,22 @@ def undocumented_artifacts() -> list[str]:
                   if p.name not in text)
 
 
+def channel_catalog_drift() -> tuple[list[str], list[str]]:
+    """(unknown, uncataloged): channel names docs/observability.md's
+    catalog table lists that TeleState lacks, and TeleState fields the
+    catalog never mentions. repro.obs.state imports nothing beyond
+    numpy, so this stays cheap."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.obs.state import TELE_FIELDS
+    doc = (ROOT / "docs" / "observability.md").read_text()
+    # catalog rows: "| `name` | accumulated/sampled | ..."
+    cataloged = set(re.findall(
+        r"^\|\s*`(\w+)`\s*\|\s*(?:accumulated|sampled)\s*\|", doc,
+        re.MULTILINE))
+    fields = set(TELE_FIELDS)
+    return sorted(cataloged - fields), sorted(fields - cataloged)
+
+
 def main() -> int:
     known = set()
     for module in CLIS:
@@ -93,9 +112,20 @@ def main() -> int:
         for name in undoc:
             print(f"  {name}", file=sys.stderr)
         return 1
+    unknown, uncataloged = channel_catalog_drift()
+    if unknown or uncataloged:
+        if unknown:
+            print("docs/observability.md catalogs channels TeleState "
+                  f"does not have: {', '.join(unknown)}", file=sys.stderr)
+        if uncataloged:
+            print("TeleState channels missing from the "
+                  "docs/observability.md catalog: "
+                  f"{', '.join(uncataloged)}", file=sys.stderr)
+        return 1
     print(f"docs-consistency OK: {len(found)} doc flags all exist "
           f"in {' + '.join(CLIS)} --help; all experiments/*.json "
-          "artifacts documented")
+          "artifacts documented; telemetry channel catalog matches "
+          "TeleState")
     return 0
 
 
