@@ -64,15 +64,19 @@ def timeit_split(fn, *args, iters: int = 5) -> dict:
     """Cold/warm wall-clock split for a compiled callable.
 
     The first call (compile + run) is reported as ``cold_s``; the
-    subsequent ``iters`` calls give ``warm_s`` (median) and
-    ``warm_s_std`` (population std-dev) — the uniform shape every fleet
-    benchmark reports (see docs/benchmarks.md).
+    subsequent ``iters`` calls give ``warm_s`` (median) plus the
+    per-repeat spread — ``warm_s_min``/``warm_s_mean``/``warm_s_std``
+    (population std-dev) — the uniform shape every fleet benchmark
+    reports (see docs/benchmarks.md). The min is the least-noise
+    estimate on a shared machine; median vs mean exposes stragglers.
     """
     _, cold = timed(fn, *args)
     ws = [timed(fn, *args)[1] for _ in range(iters)]
     import statistics
 
     return {"cold_s": cold, "warm_s": float(np.median(ws)),
+            "warm_s_min": float(np.min(ws)),
+            "warm_s_mean": float(np.mean(ws)),
             "warm_s_std": (statistics.pstdev(ws) if len(ws) > 1 else 0.0),
             "iters": iters}
 

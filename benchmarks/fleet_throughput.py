@@ -542,13 +542,63 @@ def run_control_plane_suite(n_workers: int = 1024,
     return res
 
 
-def run_smoke(n_workers: int = 256, duration_s: float = 30.0) -> dict:
+def _quant_agreement(n_workers: int, duration_s: float, n_rows: int,
+                     seed: int = 0, kernel: str = "pallas") -> dict:
+    """One definition of *kernel* agreement: the float64 XLA serve scan,
+    the int32-quantized pure-XLA twin (``q32``), the NumPy quantized
+    reference driver, and the fused Pallas megakernel (interpret mode on
+    CPU) all serve the same stream over one trace bank. The three
+    quantized paths trace the same integer tick (``repro.fleet.qtick``)
+    and must agree EXACTLY on every request-lifecycle counter; the
+    float64 reference must agree within the pinned quantization
+    tolerance (<=1% or 2 requests on each counter — in practice the
+    1 nJ quantum keeps the counts identical; see docs/kernels.md)."""
+    power = make_power_matrix(TRACES, min(n_rows, n_workers), duration_s,
+                              DT, seed)
+    n_steps = int(duration_s / DT)
+    rate = n_workers / PERIOD_S
+    res = {}
+    for name, backend, k in (("f64", "numpy", "xla"),
+                             ("numpy_q32", "numpy", "q32"),
+                             ("jax_q32", "jax", "q32"),
+                             ("jax_kernel", "jax", kernel)):
+        res[name] = run_scheduled(power, DT, n_workers, _workloads(),
+                                  rate_rps=rate, mix=MIX, n_steps=n_steps,
+                                  seed=seed, backend=backend, kernel=k)
+    qpaths = ("numpy_q32", "jax_q32", "jax_kernel")
+    exact = all(res[a][k] == res[qpaths[0]][k]
+                for a in qpaths[1:] for k in _COUNT_KEYS)
+    tol = all(abs(res["f64"][k] - res[qpaths[0]][k])
+              <= max(2, 0.01 * res["f64"][k]) for k in _COUNT_KEYS)
+    return {
+        "n_workers": n_workers,
+        "duration_s": duration_s,
+        "kernel": kernel,
+        "quantized_counts_exact": bool(exact),
+        "f64_within_tolerance": bool(tol),
+        "counts": {b: {k: res[b][k] for k in _COUNT_KEYS} for b in res},
+    }
+
+
+def run_smoke(n_workers: int = 256, duration_s: float = 30.0,
+              kernel: str = "xla") -> dict:
     """CI gate: short shared trace, both backends, counts must match
     exactly (exercises the scan path on interpret-mode-only hosts) —
     for the local-mode pools, the fused forecast control plane, the
     per-row automatic forecaster selection (regime + OU rows mixed),
     AND the quality scheduler over a real trained-and-measured HAR
-    workload (the measured-oracle path)."""
+    workload (the measured-oracle path). With ``--kernel q32|pallas``
+    the gate instead pins the quantized serve-tick paths against each
+    other (exact) and against the float64 reference (pinned
+    tolerance)."""
+    if kernel != "xla":
+        kres = _quant_agreement(n_workers, duration_s, 16, kernel=kernel)
+        if not (kres["quantized_counts_exact"]
+                and kres["f64_within_tolerance"]):
+            print(json.dumps(kres, indent=1), file=sys.stderr)
+            raise SystemExit(f"fleet kernel={kernel} smoke FAILED: "
+                             "serve counters disagree")
+        return {"kernel_agreement": kres}
     res = _backend_agreement(n_workers, duration_s, 16)
     if not res["counts_agree"]:
         print(json.dumps(res, indent=1), file=sys.stderr)
@@ -637,9 +687,15 @@ def main(argv: list[str] | None = None) -> dict:
                          "(--obs trace)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI agreement gate (256 workers, 30 s)")
+    ap.add_argument("--kernel", choices=("xla", "q32", "pallas"),
+                    default="xla",
+                    help="serve-tick kernel the --smoke gate exercises: "
+                         "the float64 XLA chain (xla), the quantized "
+                         "int32 XLA twin (q32), or the fused Pallas "
+                         "megakernel (pallas; interpret mode on CPU)")
     args = ap.parse_args(argv)
     if args.smoke:
-        return run_smoke()
+        return run_smoke(kernel=args.kernel)
     if args.forecasters:
         return run_forecaster_suite(backend=args.backend)
     if args.control_plane:

@@ -308,6 +308,61 @@ def capacitor_draw(v, energy_j, *, capacitance_f, v_off, xp=np):
     return xp.where(ok, xp.sqrt(2.0 * e_safe / capacitance_f), v_off), ok
 
 
+# ---------------------------------------------------------------------------
+# Quantized integer-energy twins (the Pallas serve-tick numerics contract)
+# ---------------------------------------------------------------------------
+
+# The serve-tick megakernel (repro.kernels.serve_tick) runs int32, which
+# Pallas TPU can compile; the float64 capacitor above cannot. Instead of
+# quantizing *voltage* (whose update needs a sqrt), the quantized path
+# stores the capacitor's energy E = 0.5 C v^2 as an integer number of
+# quanta, which turns the whole tick — harvest, wake, draw, brown-out —
+# into linear integer arithmetic with exact threshold comparisons.
+#
+# Quantum choice: 1 nJ, not the issue-sketch picojoule. A heterogeneous
+# 2940 uF capacitor at v_max 3.8 V stores ~2.1e-2 J = 2.1e10 pJ, past
+# int32's 2.147e9 ceiling, while 2.1e7 nJ leaves two decades of headroom;
+# 1 nJ also matches the integer-nanojoule precedent of the quality
+# ledger's ``SchedParams.QJ_NJ``. Per-worker e_work/e_harvest int32
+# accumulators overflow at 2.147 J — a ~35 min horizon at the ~1 mW
+# scales here; the repo's traces spend well under 1 J per worker.
+DEFAULT_QUANTUM_J = 1e-9
+
+
+def quantize_energy(energy_j, quantum_j: float = DEFAULT_QUANTUM_J, xp=np):
+    """Round joules to int32 energy quanta (``rint``, ties-to-even).
+
+    This is *the* joules->quanta conversion — thresholds, harvest
+    increments, and cost tables must all pass through it so the host
+    scheduler and both quantized backends derive bit-identical integer
+    constants from the same float64 inputs."""
+    return xp.rint(xp.asarray(energy_j) / quantum_j).astype(xp.int32)
+
+
+def capacitor_harvest_q(eq, harvest_q, e_max_q, xp=np):
+    """Integer twin of :func:`capacitor_harvest`: bank ``harvest_q``
+    quanta, saturating at the capacitor ceiling. All args int32 quanta
+    (scalars or (N,) arrays), numpy or jnp."""
+    return xp.minimum(eq + harvest_q, e_max_q)
+
+
+def capacitor_usable_q(eq, e_off_q, xp=np):
+    """Integer twin of :func:`capacitor_usable_energy`: quanta above the
+    brown-out floor."""
+    return xp.maximum(eq - e_off_q, 0)
+
+
+def capacitor_draw_q(eq, amount_q, e_off_q, xp=np):
+    """Integer twin of :func:`capacitor_draw`: ``(new_eq, ok)``. A draw
+    that would cross the brown-out floor fails and lands exactly at
+    ``e_off_q`` (residual charge retained), mirroring the float64
+    semantics — but the knife-edge is now an exact integer compare, so
+    numpy, XLA, and the Pallas kernel agree bit-for-bit."""
+    left = eq - amount_q
+    ok = ~xp.less(left, e_off_q)
+    return xp.where(ok, left, e_off_q), ok
+
+
 @dataclasses.dataclass
 class Capacitor:
     """Energy buffer with turn-on / brown-out thresholds.

@@ -36,6 +36,19 @@ same tick they occur and never reach the host at all.
 Optionally the harvest stage runs through the Pallas capacitor-bank
 kernel (``repro.kernels.fleet_step``) — the TPU fast path; interpret mode
 keeps it testable on CPU-only environments.
+
+``kernel`` selects the device-tick numerics/implementation:
+
+- ``"xla"`` (default) — the float64 jnp expression chain above;
+- ``"q32"`` — the int32 quantized tick (``repro.fleet.qtick``) traced
+  as pure XLA: same scan, integer energy quanta, no sqrt;
+- ``"pallas"`` — the same quantized tick fused into one VMEM-resident
+  Pallas pass per tick (``repro.kernels.serve_tick``), compiled on TPU
+  and interpret-mode (still pure XLA, still bit-exact vs ``q32``) on
+  CPU. Quantized kernels are dispatch-mode only and need a quantized
+  ``FleetState`` (``init_state(n, quantized=True)``) plus
+  ``FleetParams.quantum_j`` — ``FleetWorkerPool(kernel=...)`` wires all
+  three.
 """
 from __future__ import annotations
 
@@ -49,7 +62,8 @@ from jax import lax
 from jax.experimental import enable_x64
 
 from repro.core.energy import (capacitor_draw, capacitor_harvest,
-                               capacitor_usable_energy)
+                               capacitor_usable_energy,
+                               capacitor_usable_q)
 from repro.fleet.state import (STATE_FIELDS, FleetParams, FleetState,
                                SchedParams, SchedState,
                                sched_state_as_tuple,
@@ -65,10 +79,23 @@ EV_NONE, EV_EMIT, EV_LOST = 0, 1, 2
 class JaxFleetBackend:
     """Compiled scan runner for one ``FleetParams`` configuration."""
 
-    def __init__(self, params: FleetParams, *, use_pallas: bool = False):
+    def __init__(self, params: FleetParams, *, use_pallas: bool = False,
+                 kernel: str = "xla"):
         self.p = params
         self.use_pallas = use_pallas
+        self.kernel = kernel
         self.interpret = jax.default_backend() != "tpu"
+        if kernel not in ("xla", "q32", "pallas"):
+            raise ValueError(f"unknown kernel {kernel!r}")
+        if kernel != "xla":
+            if params.mode != "dispatch":
+                raise ValueError(
+                    "quantized kernels (q32/pallas) implement the serve "
+                    "tick only; local mode stays float64")
+            if params.quantum_j is None:
+                raise ValueError(
+                    "quantized kernels need FleetParams.quantum_j (use "
+                    "FleetWorkerPool(kernel=...) to wire params + state)")
         if params.mode == "local":
             # surface non-traceable policies at build time, not mid-scan:
             # the base-class decide_batch is the NumPy-only loop fallback,
@@ -99,6 +126,19 @@ class JaxFleetBackend:
             self.ACC = (None if params.acc is None
                         else jnp.asarray(np.asarray(params.acc,
                                                     dtype=np.float64)))
+            if kernel != "xla":
+                from repro.fleet import qtick as Q
+                qp_np = Q.quantize_fleet_cached(params)
+                self._qp = Q.convert_arrays(qp_np, jnp.asarray)
+                if kernel == "pallas":
+                    from repro.kernels.serve_tick import replicate_table
+                    pad8 = lambda k: -(-k // 8) * 8  # noqa: E731
+                    w, u = qp_np.UCQ.shape
+                    self._k_tables = dict(
+                        uc=replicate_table(qp_np.UCQ.reshape(-1),
+                                           pad8(w * u)),
+                        fix=replicate_table(qp_np.FIXQ, pad8(w)),
+                        emitc=replicate_table(qp_np.EMITCQ, pad8(w)))
         self._compiled: dict[int, callable] = {}
         self._serve_compiled: dict[tuple, callable] = {}
         self._serve_sp: SchedParams | None = None
@@ -115,8 +155,11 @@ class JaxFleetBackend:
         with enable_x64():
             st = tuple(jnp.asarray(x) for x in state_as_tuple(state))
             n = p.n
-            ev0 = (jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.float64),
-                   jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.int64))
+            if self.kernel == "xla":
+                ev0 = (jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.float64),
+                       jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.int64))
+            else:  # quantized log: int32 codes, integer tick times
+                ev0 = tuple(jnp.zeros(n, jnp.int32) for _ in range(4))
             fn = self._compiled.get(n_ticks)
             if fn is None:
                 fn = self._build(n_ticks)
@@ -136,22 +179,34 @@ class JaxFleetBackend:
     def _decode_events(self, s: FleetState, ev: tuple) -> list[tuple]:
         from repro.fleet.backend_numpy import EMIT, LOST
         code, ev_t, ev_ticket, ev_units = ev
+        # quantized logs stamp integer tick indices, not seconds
+        scale = 1.0 if self.kernel == "xla" else self.p.dt
         hit = np.nonzero(code != EV_NONE)[0]
         out: list[tuple] = []
         for w in hit[np.lexsort((hit, ev_t[hit]))]:  # temporal order
             w = int(w)
             if code[w] == EV_EMIT:
-                out.append((EMIT, float(ev_t[w]), w, int(ev_ticket[w]),
+                out.append((EMIT, float(ev_t[w]) * scale, w,
+                            int(ev_ticket[w]),
                             int(ev_units[w]), int(s.w_tile[w]),
                             int(s.w_batch[w])))
             else:
-                out.append((LOST, float(ev_t[w]), w, int(ev_ticket[w])))
+                out.append((LOST, float(ev_t[w]) * scale, w,
+                            int(ev_ticket[w])))
         return out
 
     # -- compiled scan -------------------------------------------------------
 
+    def _pick_tick(self):
+        """The per-tick transition for this backend's kernel mode."""
+        if self.kernel == "q32":
+            return self._tick_q
+        if self.kernel == "pallas":
+            return self._tick_pallas
+        return self._tick
+
     def _build(self, n_ticks: int):
-        tick = self._tick
+        tick = self._pick_tick()
 
         def scan_fn(st, ev, i0):
             def body(carry, j):
@@ -183,6 +238,10 @@ class JaxFleetBackend:
         program is byte-identical to the uninstrumented build."""
         if self.p.mode != "dispatch":
             raise ValueError("run_serve needs a dispatch-mode fleet")
+        if obs is not None and self.kernel != "xla":
+            raise ValueError(
+                "the observability plane reads float64 device state; "
+                "quantized kernels (q32/pallas) run uninstrumented")
         arrivals = np.asarray(arrivals, dtype=np.int64)
         n_ticks = arrivals.shape[0]
         op = None if obs is None else obs.op
@@ -243,7 +302,8 @@ class JaxFleetBackend:
             obs_cs = self._power_cumsum() if sp.forecast else None
         p = self.p
         n = p.n
-        tick = self._tick
+        tick = self._pick_tick()
+        quant = self.kernel != "xla"
 
         def body(carry, xs):
             if op is None:
@@ -261,7 +321,14 @@ class JaxFleetBackend:
             def do_dispatch(args):
                 fsn, ss = args
                 ss = S.shed(sp, ss, t, jnp)
-                budget_now = self._usable(fsn.v)
+                if quant:
+                    # quanta -> joules: the exact float64 expression the
+                    # NumPy host driver evaluates (backend agreement)
+                    budget_now = (capacitor_usable_q(
+                        fsn.v, self._qp.E_OFF, jnp)
+                        .astype(jnp.float64) * p.quantum_j)
+                else:
+                    budget_now = self._usable(fsn.v)
                 pw_lags = S.power_lags(self.power, self.trace_index, i,
                                        p.T, sp.fc_order, phase=self.phase,
                                        xp=jnp)
@@ -270,22 +337,32 @@ class JaxFleetBackend:
                 dispatchable = fsn.on & ~fsn.has_work & ~fsn.p_pending
                 ss, a = S.dispatch(sp, ss, dispatchable, budget_now,
                                    budget_plan, t, jnp)
+                cast = ((lambda x: x.astype(jnp.int32)) if quant
+                        else (lambda x: x))
                 fsn = fsn._replace(
                     p_pending=fsn.p_pending | a.mask,
-                    p_wl=jnp.where(a.mask, a.wl, fsn.p_wl),
-                    p_units=jnp.where(a.mask, a.units, fsn.p_units),
-                    p_batch=jnp.where(a.mask, jnp.maximum(a.batch, 1),
+                    p_wl=jnp.where(a.mask, cast(a.wl), fsn.p_wl),
+                    p_units=jnp.where(a.mask, cast(a.units),
+                                      fsn.p_units),
+                    p_batch=jnp.where(a.mask,
+                                      cast(jnp.maximum(a.batch, 1)),
                                       fsn.p_batch),
-                    p_t_assigned=jnp.where(a.mask, t, fsn.p_t_assigned))
+                    p_t_assigned=jnp.where(
+                        a.mask, cast(i) if quant else t,
+                        fsn.p_t_assigned))
                 return fsn, ss
 
             fsn, ss = lax.cond(is_tick, do_dispatch, lambda x: x,
                                (fs0, ss))
-            ev0 = (jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.float64),
-                   jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.int64))
+            if quant:
+                ev0 = tuple(jnp.zeros(n, jnp.int32) for _ in range(4))
+            else:
+                ev0 = (jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.float64),
+                       jnp.zeros(n, jnp.int64), jnp.zeros(n, jnp.int64))
             fs2, ev = tick(tuple(fsn), ev0, i)
             evc, _, _, evu = ev
-            ss = S.collect(sp, ss, evc == EV_EMIT, evc == EV_LOST, evu,
+            ss = S.collect(sp, ss, evc == EV_EMIT, evc == EV_LOST,
+                           evu.astype(jnp.int64) if quant else evu,
                            t, jnp)
 
             def do_evict(args):
@@ -358,6 +435,43 @@ class JaxFleetBackend:
         new = mask & (evc == EV_NONE)
         return (jnp.where(new, code, evc), jnp.where(new, t, evt),
                 jnp.where(new, ticket, evtk), jnp.where(new, units, evu))
+
+    def _tick_q(self, st, ev, i):
+        """Quantized tick as pure XLA: the ``kernel="q32"`` path — the
+        exact xp-generic integer expressions of ``repro.fleet.qtick``
+        traced with ``xp=jnp`` (the reference the Pallas megakernel is
+        pinned against, and the measured CPU speedup over float64)."""
+        from repro.fleet import qtick as Q
+        qh = Q.harvest_row(self.p, self._qp, self.trace_index,
+                           self.phase, i, jnp)
+        return Q.tick_q(self.p, self._qp, st, ev, qh, i, jnp,
+                        lax.while_loop)
+
+    def _tick_pallas(self, st, ev, i):
+        """Quantized tick as one fused Pallas pass per tick
+        (``repro.kernels.serve_tick``): compiled on TPU, interpret-mode
+        on CPU. The kernel emits a fresh event log; it is merged into
+        the carried log first-event-wins so macro-step runs keep the
+        one-event-per-worker invariant."""
+        from repro.fleet import qtick as Q
+        from repro.kernels import serve_tick as K
+        p = self.p
+        s = _S(*st)
+        qh = Q.harvest_row(p, self._qp, self.trace_index, self.phase, i,
+                           jnp)
+        rw = {f: getattr(s, f) for f in K.RW_FIELDS}
+        ro = {f: getattr(s, f) for f in K.RO_FIELDS}
+        consts = dict(e_on=self._qp.E_ON, e_off=self._qp.E_OFF,
+                      e_max=self._qp.E_MAX, estep=self._qp.ESTEP)
+        rw_out, evk, _led = K.serve_tick(
+            rw, ro, consts, self._k_tables, qh.astype(jnp.int32),
+            i.astype(jnp.int32) if hasattr(i, "astype")
+            else jnp.int32(i),
+            u_max=int(p.UC.shape[1]), interpret=self.interpret)
+        evc0 = ev[0]
+        new = (evk[0] != EV_NONE) & (evc0 == EV_NONE)
+        ev = tuple(jnp.where(new, a, b) for a, b in zip(evk, ev))
+        return tuple(s._replace(**rw_out)), ev
 
     def _tick(self, st, ev, i):
         p = self.p

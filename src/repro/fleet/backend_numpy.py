@@ -21,13 +21,25 @@ from repro.core.energy import (capacitor_draw, capacitor_harvest,
                                capacitor_usable_energy)
 from repro.core.intermittent import EmittedResult
 from repro.core.policies import SKIP
-from repro.fleet.state import FleetParams, FleetState
+from repro.fleet.state import STATE_FIELDS, FleetParams, FleetState
 
 EMIT = "emit"
 LOST = "lost"
 
 
 def usable_energy(p: FleetParams, s: FleetState) -> np.ndarray:
+    """Per-worker usable joules — the budget the host scheduler reads.
+
+    Quantized states (``p.quantum_j`` set) hold energy quanta in ``v``;
+    the quanta -> joules conversion here is the exact float64 expression
+    the fused jax serve build uses, so dispatch decisions agree
+    bit-for-bit across backends in both precisions."""
+    if p.quantum_j is not None:
+        from repro.fleet.qtick import quantize_fleet_cached
+        qp = quantize_fleet_cached(p)
+        from repro.core.energy import capacitor_usable_q
+        return (capacitor_usable_q(s.v, qp.E_OFF, np)
+                .astype(np.float64) * p.quantum_j)
     return capacitor_usable_energy(s.v, capacitance_f=p.C, v_off=p.v_off)
 
 
@@ -45,6 +57,8 @@ def tick(p: FleetParams, s: FleetState, i: int,
          results: list[list[EmittedResult]] | None,
          events: list[tuple] | None) -> None:
     """Advance all N workers by one dt (trace index ``i``)."""
+    if p.quantum_j is not None:
+        return _tick_quantized(p, s, i, events)
     t = i * p.dt
     dt = p.dt
 
@@ -85,6 +99,35 @@ def tick(p: FleetParams, s: FleetState, i: int,
               & ((s.w_units_done >= s.w_target) | emit_now))
     if finish.any():
         _emit(p, s, np.nonzero(finish)[0], t, results, events)
+
+
+def _tick_quantized(p: FleetParams, s: FleetState, i: int,
+                    events: list[tuple] | None) -> None:
+    """Quantized (int32 quanta) dispatch tick: the NumPy reference
+    driver for the serve-tick megakernel path. Runs the exact
+    xp-generic integer expressions of ``repro.fleet.qtick`` (the same
+    function body the ``kernel="q32"`` scan traces) and decodes the
+    fixed-capacity event log back into the host tuple protocol."""
+    from repro.fleet import qtick as Q
+    qp = Q.quantize_fleet_cached(p)
+    qh = Q.harvest_row(p, qp, p.trace_index, p.phase, i, np)
+    st = tuple(getattr(s, f) for f in STATE_FIELDS)
+    z = lambda: np.zeros(p.n, dtype=np.int32)  # noqa: E731
+    ev = (z(), z(), z(), z())
+    st, ev = Q.tick_q(p, qp, st, ev, qh, i, np, Q.np_while)
+    for f, x in zip(STATE_FIELDS, st):
+        setattr(s, f, x)
+    if events is None:
+        return
+    t = i * p.dt
+    evc, _, evtk, evu = ev
+    for w in np.nonzero(evc != Q.EV_NONE)[0]:
+        w = int(w)
+        if evc[w] == Q.EV_EMIT:
+            events.append((EMIT, t, w, int(evtk[w]), int(evu[w]),
+                           int(s.w_tile[w]), int(s.w_batch[w])))
+        else:
+            events.append((LOST, t, w, int(evtk[w])))
 
 
 def _acquire_local(p: FleetParams, s: FleetState, idle: np.ndarray,

@@ -39,8 +39,12 @@ class RequestRecord:
 
 
 def _energy_block(pool, completed: int) -> dict:
-    harvested = float(pool.e_harvest.sum())
-    work = float(pool.e_work.sum())
+    # quantized pools (kernel="q32"/"pallas") accumulate integer energy
+    # quanta; convert back to joules at this reporting boundary
+    q = getattr(pool.params, "quantum_j", None)
+    e_scale = 1.0 if q is None else q
+    harvested = float(pool.e_harvest.sum()) * e_scale
+    work = float(pool.e_work.sum()) * e_scale
     return {
         "harvested_j": harvested,
         "work_j": work,

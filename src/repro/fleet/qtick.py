@@ -1,0 +1,258 @@
+"""Quantized (int32) serve tick: the numerics the Pallas megakernel runs.
+
+The float64 dispatch tick (`backend_numpy.tick` / `backend_jax._tick`)
+cannot compile on Pallas TPU — Mosaic has no float64, and float32 moves
+the brown-out knife edges by more than a ulp. The audit here replaces
+the voltage state with *stored energy in integer quanta* (see
+``core.energy.quantize_energy``): E = 0.5 C v^2 / quantum, so harvest,
+wake, draw, and brown-out all become linear int32 arithmetic with exact
+threshold comparisons and zero accumulated rounding drift inside a tick.
+
+:func:`tick_q` is the xp-generic reference expression of that integer
+tick — the same function body runs
+
+- as the in-place NumPy quantized reference (``xp=numpy`` + a Python
+  while driver) from ``backend_numpy``,
+- as the pure-XLA quantized scan body (``xp=jax.numpy`` +
+  ``lax.while_loop``) — the ``kernel="q32"`` path, and
+- re-expressed tile-by-tile by ``repro.kernels.serve_tick`` — the
+  ``kernel="pallas"`` path, pinned bit-exact against this function.
+
+Only dispatch mode quantizes: the serve tick is the hot path the
+megakernel targets; local-mode sampling (arbitrary host policies) stays
+float64. Time-stamp fields (``w_t_acq``/event times) hold integer tick
+indices in this contract; the control plane keeps float64 seconds.
+
+Agreement contract vs float64: the three quantized paths above are
+bit-exact against *each other*. Against the float64 reference, per-tick
+harvest rounding (<= 0.5 quantum = 0.5 nJ, resetting at every v_max /
+brown-out clamp) can shift a threshold crossing by one tick when the
+float trajectory sits within the accumulated rounding of a threshold,
+so crossing ticks agree within +-1 and serve counters within the pinned
+tolerances of ``tests/test_quant_kernel.py`` (see docs/kernels.md).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core.energy import (DEFAULT_QUANTUM_J, capacitor_draw_q,
+                               capacitor_harvest_q, capacitor_usable_q,
+                               quantize_energy)
+from repro.fleet.state import STATE_FIELDS, FleetParams
+
+_S = collections.namedtuple("_S", STATE_FIELDS)
+
+# event codes (shared with backend_jax's float64 event log)
+EV_NONE, EV_EMIT, EV_LOST = 0, 1, 2
+
+# +inf unit-cost padding maps to this sentinel: never affordable (the
+# cant-start check adds EMITCQ, so it must stay clear of int32 overflow)
+BIG_Q = 2 ** 30
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Integer-quanta constants derived from a :class:`FleetParams` by
+    :func:`quantize_fleet`. All energies are int32 multiples of
+    ``quantum_j``; per-worker arrays keep heterogeneous fleets exact."""
+
+    quantum_j: float
+    QH: np.ndarray  # (R, T) per-tick banked harvest, quanta
+    E_ON: np.ndarray  # (N,) turn-on threshold 0.5 C v_on^2
+    E_OFF: np.ndarray  # (N,) brown-out floor 0.5 C v_off^2
+    E_MAX: np.ndarray  # (N,) capacitor ceiling 0.5 C v_max^2
+    ESTEP: np.ndarray  # (N,) active draw per tick
+    UCQ: np.ndarray  # (W, U_max) unit costs, BIG_Q beyond each table
+    FIXQ: np.ndarray  # (W,) fixed acquisition cost
+    EMITCQ: np.ndarray  # (W,) emission cost
+
+
+def quantize_fleet(p: FleetParams) -> QuantParams:
+    """Quantize every energy constant a dispatch tick reads. One
+    ``rint`` rule (:func:`core.energy.quantize_energy`) everywhere, so
+    the host scheduler and both backends derive identical integers."""
+    q = p.quantum_j if p.quantum_j is not None else DEFAULT_QUANTUM_J
+    C = np.asarray(p.C)
+    UC = np.asarray(p.UC)
+    ucq = np.where(np.isfinite(UC), np.rint(UC / q), float(BIG_Q))
+    return QuantParams(
+        quantum_j=q,
+        QH=quantize_energy(p.eff * np.asarray(p.power) * p.dt, q),
+        E_ON=quantize_energy(0.5 * C * p.v_on ** 2, q),
+        E_OFF=quantize_energy(0.5 * C * p.v_off ** 2, q),
+        E_MAX=quantize_energy(0.5 * C * np.asarray(p.v_max) ** 2, q),
+        ESTEP=quantize_energy(np.asarray(p.active_power_w) * p.dt, q),
+        UCQ=ucq.astype(np.int32),
+        FIXQ=quantize_energy(p.FIX, q),
+        EMITCQ=quantize_energy(p.EMITC, q))
+
+
+def quantize_fleet_cached(p: FleetParams) -> QuantParams:
+    """Per-``FleetParams`` memo of :func:`quantize_fleet` (the pack is
+    pure-derived, so caching it on the frozen params object is safe and
+    keeps the host scheduler's every-dispatch budget reads cheap)."""
+    qp = getattr(p, "_quant_cache", None)
+    if qp is None:
+        qp = quantize_fleet(p)
+        object.__setattr__(p, "_quant_cache", qp)
+    return qp
+
+
+def convert_arrays(qp: QuantParams, convert) -> QuantParams:
+    """Map ``convert`` over every array field (e.g. ``jnp.asarray`` to
+    move the pack on-device once per backend build)."""
+    return dataclasses.replace(qp, **{
+        f.name: convert(getattr(qp, f.name))
+        for f in dataclasses.fields(qp) if f.name != "quantum_j"})
+
+
+def np_while(cond, body, carry):
+    """Python driver with ``lax.while_loop`` semantics for ``xp=numpy``:
+    same global-convergence loop, same masked whole-array body, so the
+    NumPy reference iterates bit-identically to the compiled scan."""
+    while bool(cond(carry)):
+        carry = body(carry)
+    return carry
+
+
+def _rec(ev, mask, code, ti, ticket, units, xp):
+    """First event per worker per tick wins (a worker's assignment can
+    terminate at most once per tick — same invariant as the float log)."""
+    evc, evt, evtk, evu = ev
+    new = mask & (evc == EV_NONE)
+    return (xp.where(new, code, evc), xp.where(new, ti, evt),
+            xp.where(new, ticket, evtk), xp.where(new, units, evu))
+
+
+def tick_q(p: FleetParams, qp: QuantParams, st, ev, qh, i, xp, while_loop):
+    """One quantized dispatch-mode tick over the (N,) state tuple.
+
+    ``st`` is a ``STATE_FIELDS``-ordered tuple of quantized arrays
+    (``init_state(n, quantized=True)`` dtypes), ``ev`` the 4-tuple int32
+    event log (code/tick/ticket/units), ``qh`` this tick's (N,) banked
+    harvest quanta (the ``QH`` row gather happens in the caller, exactly
+    like the Pallas wrapper), ``i`` the tick index. Returns
+    ``(state_tuple, ev)``. Stage order and masking mirror the float64
+    tick line for line; only the arithmetic domain differs.
+    """
+    s = _S(*st)
+    u_max = qp.UCQ.shape[1]
+    ti = xp.asarray(i).astype(xp.int32)
+
+    # 1. harvest: bank quanta, saturate at the capacitor ceiling
+    e_harvest = s.e_harvest + qh
+    E = capacitor_harvest_q(s.v, qh, qp.E_MAX, xp)
+
+    # 2. turn on at E_ON
+    waking = ~s.on & (E >= qp.E_ON)
+    on = s.on | waking
+    cycles = s.cycles + waking
+    working = on & s.has_work
+    idle = on & ~s.has_work
+    s = s._replace(v=E, on=on, cycles=cycles, e_harvest=e_harvest)
+
+    # 3. acquisition (dispatch): claim the pending assignment
+    due = idle & s.p_pending
+    us = capacitor_usable_q(s.v, qp.E_OFF, xp)
+    fixed = qp.FIXQ[s.p_wl]
+    E2, ok = capacitor_draw_q(s.v, xp.minimum(fixed, us), qp.E_OFF, xp)
+    E = xp.where(due, E2, s.v)
+    p_pending = s.p_pending & ~due
+    fail = due & ~ok
+    on = s.on & ~fail
+    ev = _rec(ev, fail, EV_LOST, ti, s.p_ticket, 0, xp)
+    succ = due & ok
+    s = s._replace(
+        v=E, on=on, p_pending=p_pending,
+        e_work=s.e_work + xp.where(succ, fixed, 0),
+        acquired=s.acquired + succ,
+        has_work=s.has_work | succ,
+        w_ticket=xp.where(succ, s.p_ticket, s.w_ticket),
+        w_t_acq=xp.where(succ, ti, s.w_t_acq),
+        w_cycle_acq=xp.where(succ, s.cycles, s.w_cycle_acq),
+        w_units_done=xp.where(succ, 0, s.w_units_done),
+        w_left=xp.where(succ, 0, s.w_left),
+        w_tile=xp.where(succ, s.p_units, s.w_tile),
+        w_batch=xp.where(succ, s.p_batch, s.w_batch),
+        w_target=xp.where(succ, s.p_units * s.p_batch, s.w_target),
+        w_wl=xp.where(succ, s.p_wl, s.w_wl))
+
+    # 4. progress in-flight work by one tick of active draw
+    emitc_w = qp.EMITCQ[s.w_wl]
+    e_step = xp.where(working, qp.ESTEP, 0)
+    run = working & (s.w_units_done < s.w_target)
+    emit_now = xp.zeros(p.n, dtype=bool)
+    carry = (s.v, s.on, s.has_work, s.e_work, s.w_left, s.w_units_done,
+             e_step, run, emit_now, ev)
+
+    def cond(c):
+        return xp.any(c[7])
+
+    def body(c):
+        (E, on, has_work, e_work, w_left, w_units_done, e_step, run,
+         emit_now, ev) = c
+        # unit boundary: start the next unit only if unit + emit-reserve
+        # are affordable now (the paper's BLE-packet reserve)
+        starting = run & (w_left <= 0)
+        gidx = xp.where(s.w_tile > 0,
+                        w_units_done % xp.maximum(s.w_tile, 1),
+                        w_units_done)
+        nc = qp.UCQ[s.w_wl, xp.clip(gidx, 0, u_max - 1)]
+        us = capacitor_usable_q(E, qp.E_OFF, xp)
+        cant = starting & (us < nc + emitc_w)
+        emit_now = emit_now | cant
+        run = run & ~cant
+        w_left = xp.where(starting & ~cant, nc, w_left)
+        take = xp.minimum(e_step, w_left)
+        E2, ok = capacitor_draw_q(E, take, qp.E_OFF, xp)
+        E = xp.where(run, E2, E)
+        fail = run & ~ok
+        # power failure mid-work: volatile by design; work lost
+        on = on & ~fail
+        has_work = has_work & ~fail
+        ev = _rec(ev, fail, EV_LOST, ti, s.w_ticket, 0, xp)
+        run = run & ok
+        e_work = e_work + xp.where(run, take, 0)
+        w_left = xp.where(run, w_left - take, w_left)
+        e_step = xp.where(run, e_step - take, e_step)
+        fin = run & (w_left <= 0)  # exact: the 1e-18 float slack is gone
+        w_units_done = w_units_done + fin
+        run = run & (e_step > 0) & (w_units_done < s.w_target)
+        return (E, on, has_work, e_work, w_left, w_units_done, e_step,
+                run, emit_now, ev)
+
+    (E, on, has_work, e_work, w_left, w_units_done, _, _, emit_now,
+     ev) = while_loop(cond, body, carry)
+    s = s._replace(v=E, on=on, has_work=has_work, e_work=e_work,
+                   w_left=w_left, w_units_done=w_units_done)
+
+    # 5. emission (BLE packet / host transfer)
+    finish = (working & s.has_work & s.on
+              & ((s.w_units_done >= s.w_target) | emit_now))
+    ec = qp.EMITCQ[s.w_wl]
+    E2, ok = capacitor_draw_q(s.v, ec, qp.E_OFF, xp)
+    E = xp.where(finish, E2, s.v)
+    efail = finish & ~ok
+    esucc = finish & ok
+    on = s.on & ~efail
+    has_work = s.has_work & ~finish  # volatile: failed emission loses it
+    ev = _rec(ev, efail, EV_LOST, ti, s.w_ticket, 0, xp)
+    ev = _rec(ev, esucc, EV_EMIT, ti, s.w_ticket, s.w_units_done, xp)
+    s = s._replace(
+        v=E, on=on, has_work=has_work,
+        e_work=s.e_work + xp.where(esucc, ec, 0),
+        emit_count=s.emit_count + esucc,
+        emit_units_sum=s.emit_units_sum + xp.where(
+            esucc, s.w_units_done, 0))
+    return tuple(s), ev
+
+
+def harvest_row(p: FleetParams, qp: QuantParams, trace_index, phase, i,
+                xp) -> "np.ndarray":
+    """This tick's per-worker banked quanta: the ``QH`` trace-bank gather
+    both backends (and the Pallas wrapper) feed into :func:`tick_q`."""
+    col = (i % p.T) if phase is None else (i + phase) % p.T
+    return qp.QH[trace_index, col]

@@ -56,6 +56,10 @@ class FleetParams:
     P: float  # sampling period, s
     policy: Policy | None
     acc: np.ndarray | None  # (n_units + 1,) accuracy table
+    # quantized serve-tick contract (kernel="q32"/"pallas"): energies are
+    # int32 quanta of this many joules and FleetState.v holds stored
+    # energy E = 0.5 C v^2 in quanta instead of volts. None = float64.
+    quantum_j: float | None = None
 
 
 @dataclasses.dataclass
@@ -102,23 +106,36 @@ STATE_FIELDS: tuple[str, ...] = tuple(
     f.name for f in dataclasses.fields(FleetState))
 
 
-def init_state(n: int) -> FleetState:
+def init_state(n: int, *, quantized: bool = False) -> FleetState:
     """Fresh device state for ``n`` workers: discharged capacitors (0 V),
     everything off/idle, all counters zero. Returns a :class:`FleetState`
-    of (N,) arrays (voltages in volts, energies in joules)."""
+    of (N,) arrays.
+
+    The state is dtype-parametric. ``quantized=False`` (the default) is
+    the float64 contract: ``v`` in volts, energies in joules, times in
+    seconds. ``quantized=True`` is the int32 contract the serve-tick
+    megakernel runs (``repro.fleet.qtick``): ``v`` holds stored energy
+    ``E = 0.5 C v^2`` in integer quanta of ``FleetParams.quantum_j``,
+    ``e_work``/``e_harvest``/``w_left`` are quanta, and the acquisition
+    timestamps ``w_t_acq``/``p_t_assigned`` are integer tick indices.
+    Both precisions flow through ``backend_numpy``/``backend_jax``
+    unchanged — same fields, same transition, different dtypes."""
+    e_dt = np.int32 if quantized else np.float64  # energies
+    c_dt = np.int32 if quantized else np.int64  # counters / ids
+    t_dt = np.int32 if quantized else np.float64  # acquisition times
     z = lambda dt=np.float64: np.zeros(n, dtype=dt)  # noqa: E731
     return FleetState(
-        v=z(), on=z(bool), cycles=z(np.int64), acquired=z(np.int64),
-        skipped=z(np.int64), e_work=z(), e_harvest=z(),
+        v=z(e_dt), on=z(bool), cycles=z(c_dt), acquired=z(c_dt),
+        skipped=z(c_dt), e_work=z(e_dt), e_harvest=z(e_dt),
         next_sample_t=z(), sample_counter=z(np.int64),
-        has_work=z(bool), w_ticket=z(np.int64), w_t_acq=z(),
-        w_cycle_acq=z(np.int64), w_units_done=z(np.int64), w_left=z(),
-        w_target=z(np.int64), w_tile=z(np.int64), w_wl=z(np.int64),
-        w_batch=np.ones(n, dtype=np.int64),
-        p_pending=z(bool), p_ticket=z(np.int64), p_wl=z(np.int64),
-        p_units=z(np.int64), p_batch=np.ones(n, dtype=np.int64),
-        p_t_assigned=z(),
-        emit_count=z(np.int64), emit_units_sum=z(np.int64),
+        has_work=z(bool), w_ticket=z(c_dt), w_t_acq=z(t_dt),
+        w_cycle_acq=z(c_dt), w_units_done=z(c_dt), w_left=z(e_dt),
+        w_target=z(c_dt), w_tile=z(c_dt), w_wl=z(c_dt),
+        w_batch=np.ones(n, dtype=c_dt),
+        p_pending=z(bool), p_ticket=z(c_dt), p_wl=z(c_dt),
+        p_units=z(c_dt), p_batch=np.ones(n, dtype=c_dt),
+        p_t_assigned=z(t_dt),
+        emit_count=z(c_dt), emit_units_sum=z(c_dt),
         emit_acc_sum=z())
 
 

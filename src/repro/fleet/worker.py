@@ -46,6 +46,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.budget import CostTable
+from repro.core import energy
 from repro.core.energy import Capacitor, EnergyTrace, McuEnergyModel
 from repro.core.intermittent import EmittedResult
 from repro.core.policies import Policy
@@ -57,6 +58,10 @@ from repro.fleet.state import (STATE_FIELDS, FleetParams, FleetState,
 __all__ = ["EMIT", "LOST", "FleetWorkerPool", "PoolStats", "stack_traces"]
 
 BACKENDS = ("numpy", "jax")
+# device-tick numerics/implementation (see repro.fleet.backend_jax):
+# float64 XLA scan, quantized int32 XLA scan, or the fused Pallas
+# serve-tick megakernel (repro.kernels.serve_tick)
+KERNEL_MODES = ("xla", "q32", "pallas")
 
 
 def stack_traces(traces: Sequence[EnergyTrace]) -> np.ndarray:
@@ -116,12 +121,20 @@ class FleetWorkerPool:
                  v_max: np.ndarray | float | None = None,
                  active_power_w: np.ndarray | float | None = None,
                  backend: str = "numpy",
-                 use_pallas: bool = False):
+                 use_pallas: bool = False,
+                 kernel: str = "xla"):
         if mode not in ("local", "dispatch"):
             raise ValueError(f"unknown pool mode {mode!r}")
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose from {BACKENDS}")
+        if kernel not in KERNEL_MODES:
+            raise ValueError(f"unknown kernel {kernel!r}; "
+                             f"choose from {KERNEL_MODES}")
+        if kernel != "xla" and mode != "dispatch":
+            raise ValueError(
+                "quantized kernels (q32/pallas) implement the dispatch "
+                "serve tick only; local mode stays float64")
         power = np.asarray(power_w, dtype=np.float64)
         if power.ndim != 2:
             raise ValueError("power_w must be (n_traces, T)")
@@ -157,10 +170,13 @@ class FleetWorkerPool:
             active_power_w=AP,
             UC=UC, FIX=FIX, EMITC=EMITC, NU=NU, tables=tuple(workloads),
             P=float(sampling_period_s), policy=policy,
-            acc=accuracy_table)
-        self.state = init_state(n)
+            acc=accuracy_table,
+            quantum_j=(None if kernel == "xla"
+                       else energy.DEFAULT_QUANTUM_J))
+        self.state = init_state(n, quantized=kernel != "xla")
         self.backend = backend
         self.use_pallas = use_pallas
+        self.kernel = kernel
         self._jax = None  # lazily-built JaxFleetBackend
         self.results: list[list[EmittedResult]] = [[] for _ in range(n)]
         self.events: list[tuple] = []
@@ -195,7 +211,8 @@ class FleetWorkerPool:
         """Fresh per-worker state (discharged capacitors, zero counters);
         params, backend, and any compiled scan functions are kept — a
         reset + run re-executes the trace without re-tracing."""
-        self.state = init_state(self.params.n)
+        self.state = init_state(self.params.n,
+                                quantized=self.kernel != "xla")
         self.results = [[] for _ in range(self.params.n)]
         self.events = []
         self.steps_done = 0
@@ -269,7 +286,8 @@ class FleetWorkerPool:
             if self._jax is None:
                 from repro.fleet.backend_jax import JaxFleetBackend
                 self._jax = JaxFleetBackend(self.params,
-                                            use_pallas=self.use_pallas)
+                                            use_pallas=self.use_pallas,
+                                            kernel=self.kernel)
             self.state, events = self._jax.run(self.state, i0, n_ticks)
             self.events.extend(events)
             self.steps_done = i0 + n_ticks
@@ -292,7 +310,8 @@ class FleetWorkerPool:
         if self._jax is None:
             from repro.fleet.backend_jax import JaxFleetBackend
             self._jax = JaxFleetBackend(self.params,
-                                        use_pallas=self.use_pallas)
+                                        use_pallas=self.use_pallas,
+                                        kernel=self.kernel)
         self.state, sched.state = self._jax.run_serve(
             self.state, sched.params, sched.state, arrivals,
             i0=self.steps_done, dispatch_every=dispatch_every, obs=obs)
@@ -307,14 +326,18 @@ class FleetWorkerPool:
 
     def stats(self) -> PoolStats:
         s = self.state
+        # quantized pools account energy in integer quanta; convert the
+        # accumulators back to joules at the reporting boundary
+        q = self.params.quantum_j
+        e_scale = 1.0 if q is None else q
         return PoolStats(
             n_workers=self.params.n,
             emitted=self.emitted_count,
             acquired=int(s.acquired.sum()),
             skipped=int(s.skipped.sum()),
             power_cycles=int(s.cycles.sum()),
-            energy_harvested_j=float(s.e_harvest.sum()),
-            energy_on_work_j=float(s.e_work.sum()),
+            energy_harvested_j=float(s.e_harvest.sum()) * e_scale,
+            energy_on_work_j=float(s.e_work.sum()) * e_scale,
             energy_on_nvm_j=0.0,
             energy_on_sleep_j=0.0,
             duration_s=self.steps_done * self.params.dt)

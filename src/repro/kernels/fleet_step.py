@@ -4,10 +4,10 @@ The hot inner stage of the fleet scan (`repro.fleet.backend_jax`): charge
 N capacitors by one trace tick, ``v' = min(sqrt(2 e / C), v_max)`` with
 ``e = 0.5 C v^2 + eff p dt``. Pure VPU work: the (N,) worker axis is
 reshaped into (rows, 128) lanes and tiled (block_rows, 128) per grid step
-following the grid/BlockSpec conventions of the other kernels here; C and
-v_max ride along as per-worker arrays so heterogeneous fleets pay nothing
-extra. ``interpret=True`` runs the same kernel through the Pallas
-interpreter for CPU-only CI environments.
+via the shared ``repro.kernels.tiling`` helpers; C and v_max ride along
+as per-worker arrays so heterogeneous fleets pay nothing extra.
+``interpret=True`` runs the same kernel through the Pallas interpreter
+for CPU-only CI environments.
 
 This is the TPU fast path; the jnp expression in ``core.energy`` is the
 float64 reference the tests compare against.
@@ -21,8 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.compat import CompilerParams
-
-LANES = 128
+from repro.kernels.tiling import LANES, pad_to_tiles, tile_rows, untile
 
 
 def _harvest_kernel(v_ref, p_ref, c_ref, vmax_ref, o_ref, *,
@@ -45,14 +44,10 @@ def harvest_step(v, power_w, capacitance_f, v_max, *, eff: float, dt: float,
     """
     n = v.shape[0]
     dtype = v.dtype
-    tile = block_rows * LANES
-    rows = -(-n // tile) * block_rows
-    total = rows * LANES
+    rows, _ = tile_rows(n, block_rows)
 
     def prep(x, fill):
-        x = jnp.asarray(x, dtype)
-        return jnp.pad(x, (0, total - n),
-                       constant_values=fill).reshape(rows, LANES)
+        return pad_to_tiles(x, n, rows, fill, dtype)
 
     spec = pl.BlockSpec((block_rows, LANES), lambda g: (g, 0))
     out = pl.pallas_call(
@@ -66,4 +61,4 @@ def harvest_step(v, power_w, capacitance_f, v_max, *, eff: float, dt: float,
         interpret=interpret,
     )(prep(v, 0.0), prep(power_w, 0.0), prep(capacitance_f, 1.0),
       prep(v_max, 0.0))
-    return out.reshape(-1)[:n]
+    return untile(out, n)

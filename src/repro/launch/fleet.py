@@ -105,8 +105,8 @@ def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
                         seed: int = 0, *, backend: str = "numpy",
                         capacitance_f: np.ndarray | None = None,
                         v_max: np.ndarray | None = None,
-                        active_power_w: np.ndarray | None = None
-                        ) -> FleetWorkerPool:
+                        active_power_w: np.ndarray | None = None,
+                        kernel: str = "xla") -> FleetWorkerPool:
     rng = np.random.default_rng(seed)
     return FleetWorkerPool(
         power, dt, workloads=[w.costs for w in workloads], mode="dispatch",
@@ -114,7 +114,7 @@ def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
         trace_index=np.arange(n_workers) % power.shape[0],
         phase=rng.integers(0, power.shape[1], n_workers),
         backend=backend, capacitance_f=capacitance_f, v_max=v_max,
-        active_power_w=active_power_w)
+        active_power_w=active_power_w, kernel=kernel)
 
 
 def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
@@ -130,10 +130,11 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   active_power_w: np.ndarray | None = None,
                   obs_mode: str = "off", obs_window_s: float = 1.0,
                   obs_ring: int = 256, trace_out: str = "",
-                  obs_print: bool = False) -> dict:
+                  obs_print: bool = False, kernel: str = "xla") -> dict:
     pool = build_dispatch_pool(power, dt, n_workers, workloads, seed,
                                backend=backend, capacitance_f=capacitance_f,
-                               v_max=v_max, active_power_w=active_power_w)
+                               v_max=v_max, active_power_w=active_power_w,
+                               kernel=kernel)
     scheduler = FleetScheduler(pool, workloads, max_batch=max_batch,
                                shed_after_s=shed_after_s, sched=sched,
                                lookahead_s=lookahead_s,
@@ -154,6 +155,7 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
     summary["forecaster"] = forecaster
     summary["n_workers"] = n_workers
     summary["backend"] = backend
+    summary["kernel"] = kernel
     if obs is not None:
         summary["obs"] = obs.summary()
         if trace_out and obs.ring is not None:
@@ -254,6 +256,12 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                     help="worker-pool backend: numpy reference lockstep or "
                          "jax lax.scan macro-steps")
+    ap.add_argument("--kernel", choices=("xla", "q32", "pallas"),
+                    default="xla",
+                    help="serve-tick kernel: float64 XLA expression chain "
+                         "(xla), the int32-quantized pure-XLA twin (q32), "
+                         "or the fused Pallas megakernel over quantized "
+                         "state (pallas; interprets on CPU)")
     ap.add_argument("--hetero", action="store_true",
                     help="heterogeneous fleet: per-worker capacitance/v_max")
     ap.add_argument("--hetero-mcu", action="store_true",
@@ -332,7 +340,7 @@ def main(argv: list[str] | None = None) -> dict:
             forecaster=args.forecaster, trace_families=families,
             capacitance_f=cf, v_max=vm, active_power_w=ap_w,
             obs_mode=args.obs, obs_window_s=args.obs_window,
-            trace_out=args.trace_out, obs_print=True)
+            trace_out=args.trace_out, obs_print=True, kernel=args.kernel)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(
             power, args.dt, args.workers, workloads, mix=mix,

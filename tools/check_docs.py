@@ -13,7 +13,11 @@ Three checks:
   benchmarks that grow a new artifact without documenting its fields;
 - every telemetry channel named in docs/observability.md's catalog
   exists in ``repro.obs.state.TELE_FIELDS``, and every field is
-  cataloged — the channel table and the code cannot drift apart.
+  cataloged — the channel table and the code cannot drift apart;
+- every kernel in the ``repro.kernels.KERNELS`` registry has a row in
+  docs/kernels.md's kernel table, and every row names a registered
+  kernel — adding a kernel module without documenting it (or
+  documenting a removed one) fails here.
 
 Run from the repo root:
 
@@ -91,6 +95,19 @@ def channel_catalog_drift() -> tuple[list[str], list[str]]:
     return sorted(cataloged - fields), sorted(fields - cataloged)
 
 
+def kernel_registry_drift() -> tuple[list[str], list[str]]:
+    """(unknown, undocumented): kernels docs/kernels.md's table lists
+    that the registry lacks, and registered kernels the table never
+    mentions. repro.kernels imports nothing heavy at module level."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.kernels import KERNELS
+    doc = (ROOT / "docs" / "kernels.md").read_text()
+    # table rows: "| `name` | purpose | ..."
+    documented = set(re.findall(r"^\|\s*`(\w+)`\s*\|", doc, re.MULTILINE))
+    registry = set(KERNELS)
+    return sorted(documented - registry), sorted(registry - documented)
+
+
 def main() -> int:
     known = set()
     for module in CLIS:
@@ -122,10 +139,20 @@ def main() -> int:
                   "docs/observability.md catalog: "
                   f"{', '.join(uncataloged)}", file=sys.stderr)
         return 1
+    k_unknown, k_undoc = kernel_registry_drift()
+    if k_unknown or k_undoc:
+        if k_unknown:
+            print("docs/kernels.md documents kernels the "
+                  "repro.kernels.KERNELS registry does not have: "
+                  f"{', '.join(k_unknown)}", file=sys.stderr)
+        if k_undoc:
+            print("registered kernels missing from the docs/kernels.md "
+                  f"table: {', '.join(k_undoc)}", file=sys.stderr)
+        return 1
     print(f"docs-consistency OK: {len(found)} doc flags all exist "
           f"in {' + '.join(CLIS)} --help; all experiments/*.json "
           "artifacts documented; telemetry channel catalog matches "
-          "TeleState")
+          "TeleState; kernel registry matches docs/kernels.md")
     return 0
 
 
