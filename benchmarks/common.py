@@ -81,5 +81,35 @@ def timeit_split(fn, *args, iters: int = 5) -> dict:
             "iters": iters}
 
 
+def host_metadata() -> dict:
+    """Host/device provenance block stamped into every committed
+    ``experiments/*.json`` artifact (see docs/experiments.md): numbers
+    from two machines are only comparable when this block matches."""
+    import os
+    import platform
+
+    import jax
+
+    cpu_model = ""
+    try:
+        with open("/proc/cpuinfo") as fh:
+            for line in fh:
+                if line.lower().startswith("model name"):
+                    cpu_model = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_model": cpu_model,
+        "cpu_count": os.cpu_count(),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "jax_device_count": jax.device_count(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+    }
+
+
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")

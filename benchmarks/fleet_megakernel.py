@@ -33,7 +33,7 @@ import json
 import time
 from pathlib import Path
 
-from benchmarks.common import emit, timeit_split
+from benchmarks.common import emit, host_metadata, timeit_split
 from benchmarks.fleet_throughput import (DT, MIX, PERIOD_S, TRACES,
                                          _quant_agreement, _workloads)
 from benchmarks.roofline import serve_tick_roofline
@@ -44,7 +44,7 @@ KERNELS = ("xla", "q32", "pallas")
 
 
 def _serve_runner(n: int, duration_s: float, kernel: str, seed: int = 0,
-                  charge_frac: float = 0.9):
+                  charge_frac: float = 0.9, mesh_fleet: int = 1):
     """A zero-arg callable running the full fused serve launch; reset
     between calls so every invocation after the first is the warm
     compiled scan over fresh state.
@@ -66,7 +66,8 @@ def _serve_runner(n: int, duration_s: float, kernel: str, seed: int = 0,
     wls = _workloads()
     pool = build_dispatch_pool(power, DT, n, wls, seed, backend="jax",
                                kernel=kernel)
-    sched = FleetScheduler(pool, wls, sched="reactive")
+    sched = FleetScheduler(pool, wls, sched="reactive",
+                           shards=mesh_fleet)
     stream = RequestStream(n / PERIOD_S, MIX, n_steps, DT, seed=seed + 1)
     if kernel == "xla":
         # float64 state holds volts; sqrt so the stored ENERGY fraction
@@ -142,22 +143,29 @@ def _serve_tick_fixture(n: int, seed: int = 0):
 
 
 def kernel_scaling(sizes=SIZES, duration_s: float = 10.0,
-                   iters: int = 2, seed: int = 0) -> dict:
+                   iters: int = 2, seed: int = 0,
+                   mesh_fleet: int = 1) -> dict:
     """Warm wall-clock per kernel per fleet size (cold includes the
-    one-off serve-scan trace+compile)."""
+    one-off serve-scan trace+compile). ``mesh_fleet > 1`` shards the
+    serve scan K ways (docs/sharded_fleet.md) — the Pallas megakernel
+    column drops out there, since it tiles a single-device worker
+    axis."""
+    kernels = KERNELS if mesh_fleet == 1 else ("xla", "q32")
     res: dict = {}
     for n in sizes:
         per: dict = {}
-        for kernel in KERNELS:
-            run, out = _serve_runner(n, duration_s, kernel, seed)
+        for kernel in kernels:
+            run, out = _serve_runner(n, duration_s, kernel, seed,
+                                     mesh_fleet=mesh_fleet)
             split = timeit_split(run, iters=iters)
             split["completed"] = out["summary"]["completed"]
             per[kernel] = split
         per["q32_over_xla_warm"] = (per["xla"]["warm_s"]
                                     / max(per["q32"]["warm_s"], 1e-9))
-        per["pallas_over_xla_warm"] = (per["xla"]["warm_s"]
-                                       / max(per["pallas"]["warm_s"],
-                                             1e-9))
+        if "pallas" in per:
+            per["pallas_over_xla_warm"] = (per["xla"]["warm_s"]
+                                           / max(per["pallas"]["warm_s"],
+                                                 1e-9))
         res[str(n)] = per
     return res
 
@@ -170,12 +178,17 @@ def main(argv: list[str] | None = None) -> dict:
                     help="simulated seconds per run (ticks = duration/dt)")
     ap.add_argument("--iters", type=int, default=2,
                     help="warm repeats per cell")
+    ap.add_argument("--mesh-fleet", type=int, default=1,
+                    help="shard the timed serve scans K ways over the "
+                         "fleet mesh (drops the single-device Pallas "
+                         "column; K must divide every --sizes entry)")
     args = ap.parse_args(argv)
     sizes = tuple(int(s) for s in args.sizes.split(","))
 
     t0 = time.perf_counter()
     agree = _quant_agreement(256, 30.0, 16, kernel="pallas")
-    scaling = kernel_scaling(sizes, args.duration, args.iters)
+    scaling = kernel_scaling(sizes, args.duration, args.iters,
+                             mesh_fleet=args.mesh_fleet)
     total = time.perf_counter() - t0
 
     res = {
@@ -195,6 +208,8 @@ def main(argv: list[str] | None = None) -> dict:
                        "the fast path. q32-over-xla is the honest "
                        "measured CPU speedup of the quantized tick.",
         "duration_s": args.duration,
+        "mesh_fleet": args.mesh_fleet,
+        "host": host_metadata(),
     }
     us = total * 1e6 / max(len(sizes) * len(KERNELS), 1)
     emit("fleet.megakernel_counts_exact", us,

@@ -31,7 +31,7 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import emit, timeit_split
+from benchmarks.common import emit, host_metadata, timeit_split
 from benchmarks.fleet_throughput import (DT, MIX, PERIOD_S, TRACES,
                                          _COUNT_KEYS, _sched_agreement,
                                          _workloads)
@@ -142,7 +142,8 @@ def run_suite(n_workers: int = 1024, duration_s: float = 600.0) -> dict:
     ovh = overhead(n_workers, duration_s)
     ex = example_trace()
     res = {"channel_agreement": agree, "zero_perturbation": zp,
-           "overhead": ovh, "example_trace": ex}
+           "overhead": ovh, "example_trace": ex,
+           "host": host_metadata()}
     us = ovh["off"]["warm_s"] * 1e6
     emit("obs.channels_agree", us, str(agree["obs_channels_agree"]))
     emit("obs.zero_perturbation", us, str(zp["zero_perturbation"]))

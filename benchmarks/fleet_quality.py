@@ -42,7 +42,7 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, host_metadata
 from repro.launch.fleet import make_power_matrix, run_scheduled
 from repro.quality.ledger import pareto_point
 from repro.quality.oracles import PAPER_QOR_RATIO
@@ -59,10 +59,10 @@ _COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
 _LEDGER_KEYS = ("meas_wl", "joules_nj_wl", "completed_wl", "units_wl")
 
 
-def _measured_workloads(with_lm: bool = True):
+def _measured_workloads(with_lm: bool = True, bank: float = 1.0):
     from repro.quality.calibrate import measured_workloads
     names = ("har", "harris", "lm") if with_lm else ("har", "harris")
-    wls = list(measured_workloads(names))
+    wls = list(measured_workloads(names, bank=bank))
     if not with_lm:
         from repro.fleet.workloads import lm_workload
         wls.append(lm_workload())
@@ -133,18 +133,23 @@ def ledger_agreement(n_workers: int = 64, duration_s: float = 30.0,
 
 def pareto_suite(n_workers: int = 256, duration_s: float = 240.0,
                  seed: int = 0, families=FAMILIES, loads=LOADS,
-                 scheds=SCHEDS, backend: str = "jax") -> dict:
+                 scheds=SCHEDS, backend: str = "jax",
+                 bank: float = 1.0) -> dict:
     """Per harvest family x scheduler x offered load: one fused serve
     trace over the measured workloads, reduced to a Pareto point
     (completed requests vs mean measured accuracy, with the proxy
-    accuracy and ledgered J/request alongside)."""
-    wls = _measured_workloads()
+    accuracy and ledgered J/request alongside). ``bank`` scales the
+    oracle calibration sample banks (``--oracle-bank``): the measured
+    tables' sampling variance shrinks roughly as 1/sqrt(bank) at
+    proportional calibration cost (docs/quality_plane.md)."""
+    wls = _measured_workloads(bank=bank)
     # "best" = the measured table's maximum (the knob where accuracy
     # peaks), matching ratio_floor's denominator: CI-sized measured
     # curves are non-monotonic, so the all-units endpoint understates
     # the attainable ceiling
     har_best = float(np.max(wls[0].accuracy))
     out: dict = {"n_workers": n_workers, "duration_s": duration_s,
+                 "oracle_bank": bank,
                  "har_measured_best": har_best,
                  "paper_qor_ratio": PAPER_QOR_RATIO,
                  "ratio_tol": RATIO_TOL,
@@ -200,12 +205,14 @@ def pareto_suite(n_workers: int = 256, duration_s: float = 240.0,
     return out
 
 
-def run_suite(n_workers: int = 256, duration_s: float = 240.0) -> dict:
+def run_suite(n_workers: int = 256, duration_s: float = 240.0,
+              bank: float = 1.0) -> dict:
     t0 = time.perf_counter()
-    agree = ledger_agreement(wls=_measured_workloads())
-    pareto = pareto_suite(n_workers, duration_s)
+    agree = ledger_agreement(wls=_measured_workloads(bank=bank))
+    pareto = pareto_suite(n_workers, duration_s, bank=bank)
     total = time.perf_counter() - t0
-    res = {"agreement": agree, "pareto": pareto}
+    res = {"agreement": agree, "pareto": pareto,
+           "host": host_metadata()}
     us = total * 1e6 / max(len(pareto["families"]) * len(LOADS), 1)
     emit("quality.ledger_bitexact", us,
          str(agree["counts_agree"] and agree["ledger_agree"]))
@@ -251,10 +258,16 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI gate: numpy-vs-jax bit-exact ledger "
                          "agreement over measured HAR+Harris oracles")
+    ap.add_argument("--oracle-bank", type=float, default=1.0,
+                    help="oracle sample-bank scale: multiplies the "
+                         "calibration sample counts (1.0 keeps the "
+                         "seconds-scale CI default; larger banks cut "
+                         "measured-table variance ~1/sqrt(bank) at "
+                         "proportional calibration cost)")
     args = ap.parse_args(argv)
     if args.smoke:
         return run_smoke()
-    return run_suite(args.workers, args.duration)
+    return run_suite(args.workers, args.duration, bank=args.oracle_bank)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,13 @@ Claims checked:
   many requests as the OU mean reversion on their matched families
   (SIM, RF) while ``auto`` per-row selection matches the best
   single-family model everywhere;
+- the sharded serve scan (``--mesh-fleet K``): the same K-shard program
+  — per-shard control planes, deterministic arrival split, optional
+  cross-shard work stealing — evaluated by the NumPy host twin, as a
+  single-device ``vmap`` over the shard axis, and as a ``shard_map``
+  over a real K-device mesh produces bit-identical summaries (every
+  request/quality/latency counter), rebalance off or on — placement
+  never changes bits (docs/sharded_fleet.md);
 - energy conservation holds fleet-wide (harvested >= work; NVM == 0 by
   construction for the approximate runtime).
 
@@ -35,6 +42,7 @@ Claims checked:
     python -m benchmarks.fleet_throughput --control-plane --forecaster auto
     python -m benchmarks.fleet_throughput --forecasters   # model matrix
     python -m benchmarks.fleet_throughput --smoke         # CI agreement gate
+    python -m benchmarks.fleet_throughput --smoke --mesh-fleet 8  # sharded gate
 
 JSON lands in experiments/fleet_throughput.json (scheduler claims),
 experiments/fleet_backend_scaling.json (backend scaling),
@@ -52,7 +60,7 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, host_metadata
 from repro.core.energy import power_matrix
 from repro.core.forecast import FAMILY_FORECASTER, FORECASTER_MODES
 from repro.launch.fleet import (hetero_capacitors, make_power_matrix,
@@ -243,7 +251,8 @@ def run_backend_suite(max_workers: int = 131072) -> dict:
     comp = backend_comparison()
     curve = jax_scaling_curve(sizes=sizes)
     total = time.perf_counter() - t0
-    res = {"comparison": comp, "jax_scaling": curve}
+    res = {"comparison": comp, "jax_scaling": curve,
+           "host": host_metadata()}
     us = total * 1e6 / (1 + len(curve))
     emit("fleet.backend_counts_agree", us, str(comp["counts_agree"]))
     emit("fleet.backend_jax_speedup_1024", us,
@@ -494,6 +503,7 @@ def run_forecaster_suite(n_workers: int = 1024,
                          backend: str = "jax") -> dict:
     t0 = time.perf_counter()
     res = forecaster_matrix(n_workers, duration_s, backend=backend)
+    res["host"] = host_metadata()
     total = time.perf_counter() - t0
     us = total * 1e6 / max(len(res["families"]), 1)
     for fam, per in res["families"].items():
@@ -523,7 +533,7 @@ def run_control_plane_suite(n_workers: int = 1024,
     scaling = control_plane_scaling()
     total = time.perf_counter() - t0
     res = {"agreement": agree, "forecast_vs_reactive": comp,
-           "host_vs_fused_scaling": scaling}
+           "host_vs_fused_scaling": scaling, "host": host_metadata()}
     us = total * 1e6 / 3
     emit("fleet.sched_counts_agree", us, str(agree["counts_agree"]))
     if obs_mode != "off":
@@ -578,6 +588,102 @@ def _quant_agreement(n_workers: int, duration_s: float, n_rows: int,
         "f64_within_tolerance": bool(tol),
         "counts": {b: {k: res[b][k] for k in _COUNT_KEYS} for b in res},
     }
+
+
+def _strip_run_meta(summary: dict) -> dict:
+    """Drop the launcher-provenance keys (which legitimately differ
+    between the twin evaluations) so everything else — every counter,
+    histogram, quality and energy figure — can be compared verbatim."""
+    return {k: v for k, v in summary.items()
+            if k not in ("mode", "backend", "mesh_fleet", "obs")}
+
+
+def _sharded_agreement(n_workers: int, duration_s: float, n_rows: int,
+                       mesh_fleet: int, rebalance_every_s: float = 0.0,
+                       seed: int = 0, kernel: str = "xla") -> dict:
+    """One definition of *sharded* agreement — the three-evaluation
+    exactness contract (docs/sharded_fleet.md): the same K-shard serve
+    program (K per-shard control planes over contiguous worker blocks,
+    deterministic arrival split, optional work-stealing ring) evaluated
+    (a) by the NumPy host twin, (b) as a single-device ``vmap`` over
+    the shard axis, and (c) as a ``shard_map`` over a real K-device
+    mesh (when K devices exist) must produce bit-identical summaries —
+    every request/device/quality/latency counter, rebalance off or on.
+    Placement never changes bits. Used by the recorded benchmark and
+    the CI smoke gate alike so the two cannot drift."""
+    import jax
+
+    rows = min(n_rows, n_workers)
+    power = make_power_matrix(TRACES, rows, duration_s, DT, seed)
+    families = trace_family_labels(TRACES, rows)
+    n_steps = int(duration_s / DT)
+    rate = n_workers / PERIOD_S
+    has_mesh = jax.device_count() >= mesh_fleet
+    runs = [("numpy_twin", "numpy", "auto"),
+            ("jax_single", "jax", "single")]
+    if has_mesh:
+        runs.append(("jax_mesh", "jax", "mesh"))
+    res: dict = {}
+    wall: dict = {}
+    for name, backend, placement in runs:
+        t0 = time.perf_counter()
+        res[name] = run_scheduled(
+            power, DT, n_workers, _workloads(), rate_rps=rate, mix=MIX,
+            n_steps=n_steps, seed=seed, backend=backend, sched="forecast",
+            trace_families=families, kernel=kernel,
+            mesh_fleet=mesh_fleet, rebalance_every_s=rebalance_every_s,
+            fleet_placement=placement)
+        wall[name] = time.perf_counter() - t0
+    blobs = {n: json.dumps(_strip_run_meta(r), sort_keys=True,
+                           default=str) for n, r in res.items()}
+    agree = all(b == blobs["numpy_twin"] for b in blobs.values())
+    return {
+        "n_workers": n_workers,
+        "duration_s": duration_s,
+        "mesh_fleet": mesh_fleet,
+        "kernel": kernel,
+        "rebalance_every_s": rebalance_every_s,
+        "mesh_evaluated": has_mesh,
+        "summaries_agree": bool(agree),
+        "rebalanced": int(res["numpy_twin"]["rebalanced"]),
+        "counts": {n: {k: r[k] for k in _COUNT_KEYS + ("rebalanced",)}
+                   for n, r in res.items()},
+        "wall_s": wall,
+    }
+
+
+def run_sharded_smoke(n_workers: int = 256, duration_s: float = 30.0,
+                      mesh_fleet: int = 8,
+                      rebalance_every_s: float = 1.0) -> dict:
+    """CI gate for ``--mesh-fleet``: sharded-vs-single-device(-vs-host)
+    bit-equality for the xla chain with rebalance off AND on at N=256,
+    the quantized q32 kernel with rebalance on at N=256, and a shorter
+    xla rebalance-on run at N=1024. The rebalance-on run must actually
+    move requests, or the gate would be vacuous.
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    to exercise the real shard_map mesh on a CPU-only host."""
+    out = {}
+    for tag, kernel, reb, n, dur in (
+            ("xla_reb_off", "xla", 0.0, n_workers, duration_s),
+            ("xla_reb_on", "xla", rebalance_every_s, n_workers,
+             duration_s),
+            ("q32_reb_on", "q32", rebalance_every_s, n_workers,
+             duration_s),
+            ("xla_reb_on_1024", "xla", rebalance_every_s, 1024,
+             duration_s / 3)):
+        r = _sharded_agreement(n, dur, 16, mesh_fleet,
+                               rebalance_every_s=reb, kernel=kernel)
+        if not r["summaries_agree"]:
+            print(json.dumps(r, indent=1), file=sys.stderr)
+            raise SystemExit(f"fleet sharded smoke ({tag}) FAILED: "
+                             "summaries disagree across evaluations")
+        out[tag] = r
+        emit(f"fleet.sharded_{tag}_agree", r["wall_s"]["jax_single"] * 1e6,
+             str(r["summaries_agree"]))
+    if out["xla_reb_on"]["rebalanced"] == 0:
+        raise SystemExit("fleet sharded smoke FAILED: the rebalance-on "
+                         "run moved no requests (gate is vacuous)")
+    return out
 
 
 def run_smoke(n_workers: int = 256, duration_s: float = 30.0,
@@ -636,7 +742,8 @@ def run_scheduler_suite() -> dict:
     curve = scaling_curve()
     t_curve = time.perf_counter() - t0
 
-    res = {"comparison": comp, "scaling": curve}
+    res = {"comparison": comp, "scaling": curve,
+           "host": host_metadata()}
     us = t_comp * 1e6 / 2
     emit("fleet.scheduler_vs_independent_speedup", us,
          f"{comp['speedup_completed']:.2f}x")
@@ -687,6 +794,15 @@ def main(argv: list[str] | None = None) -> dict:
                          "(--obs trace)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI agreement gate (256 workers, 30 s)")
+    ap.add_argument("--mesh-fleet", type=int, default=1,
+                    help="with --smoke: run the sharded agreement gate "
+                         "instead — host-twin / single-device vmap / "
+                         "K-device shard_map bit-equality, rebalance "
+                         "off and on (needs K forced host devices for "
+                         "the mesh evaluation; K must divide workers)")
+    ap.add_argument("--rebalance-every", type=float, default=1.0,
+                    help="work-stealing cadence in seconds for the "
+                         "sharded gate's rebalance-on runs")
     ap.add_argument("--kernel", choices=("xla", "q32", "pallas"),
                     default="xla",
                     help="serve-tick kernel the --smoke gate exercises: "
@@ -695,6 +811,10 @@ def main(argv: list[str] | None = None) -> dict:
                          "megakernel (pallas; interpret mode on CPU)")
     args = ap.parse_args(argv)
     if args.smoke:
+        if args.mesh_fleet > 1:
+            return run_sharded_smoke(
+                mesh_fleet=args.mesh_fleet,
+                rebalance_every_s=args.rebalance_every)
         return run_smoke(kernel=args.kernel)
     if args.forecasters:
         return run_forecaster_suite(backend=args.backend)

@@ -53,6 +53,8 @@ keeps it testable on CPU-only environments.
 from __future__ import annotations
 
 import collections
+import copy
+import dataclasses
 
 import numpy as np
 
@@ -80,13 +82,18 @@ class JaxFleetBackend:
     """Compiled scan runner for one ``FleetParams`` configuration."""
 
     def __init__(self, params: FleetParams, *, use_pallas: bool = False,
-                 kernel: str = "xla"):
+                 kernel: str = "xla", fleet_placement: str = "auto"):
         self.p = params
         self.use_pallas = use_pallas
         self.kernel = kernel
+        self.fleet_placement = fleet_placement
         self.interpret = jax.default_backend() != "tpu"
         if kernel not in ("xla", "q32", "pallas"):
             raise ValueError(f"unknown kernel {kernel!r}")
+        if fleet_placement not in ("auto", "mesh", "single"):
+            raise ValueError(
+                f"unknown fleet_placement {fleet_placement!r} "
+                "(auto | mesh | single)")
         if kernel != "xla":
             if params.mode != "dispatch":
                 raise ValueError(
@@ -242,6 +249,10 @@ class JaxFleetBackend:
             raise ValueError(
                 "the observability plane reads float64 device state; "
                 "quantized kernels (q32/pallas) run uninstrumented")
+        if sp.shards > 1:
+            return self._run_serve_sharded(
+                state, sp, sched_state, arrivals, i0=i0,
+                dispatch_every=int(dispatch_every), obs=obs)
         arrivals = np.asarray(arrivals, dtype=np.int64)
         n_ticks = arrivals.shape[0]
         op = None if obs is None else obs.op
@@ -294,15 +305,26 @@ class JaxFleetBackend:
                     power_cumsum(np.asarray(self.p.power)))
         return self._pow_cs
 
-    def _build_serve(self, sp: SchedParams, n_ticks: int,
-                     dispatch_every: int, op=None):
+    def _serve_body(self, view, sp: SchedParams, dispatch_every: int,
+                    op=None, obs_cs=None, rebalance=None):
+        """The per-tick serve transition as a ``lax.scan`` body closure.
+
+        ``view`` carries the device-resident per-worker constants:
+        ``self`` for the single-shard build, or a shard-sliced shallow
+        copy under the sharded build — ``_tick``/``_tick_q`` and the
+        scheduler passes then read shard-local rows with no code
+        changes (replicated tables like the power matrix and cost
+        tables stay closure-captured, which ``shard_map`` handles
+        bit-identically to ``vmap``). ``rebalance`` (sharded builds
+        only) splices the cross-shard work-stealing exchange between
+        budget planning and dispatch at the ``sp.rebalance_every``
+        cadence."""
         from repro.fleet import sched as S
         if op is not None:
             from repro.obs import telemetry as O
-            obs_cs = self._power_cumsum() if sp.forecast else None
-        p = self.p
+        p = view.p
         n = p.n
-        tick = self._pick_tick()
+        tick = view._pick_tick()
         quant = self.kernel != "xla"
 
         def body(carry, xs):
@@ -325,15 +347,19 @@ class JaxFleetBackend:
                     # quanta -> joules: the exact float64 expression the
                     # NumPy host driver evaluates (backend agreement)
                     budget_now = (capacitor_usable_q(
-                        fsn.v, self._qp.E_OFF, jnp)
+                        fsn.v, view._qp.E_OFF, jnp)
                         .astype(jnp.float64) * p.quantum_j)
                 else:
-                    budget_now = self._usable(fsn.v)
-                pw_lags = S.power_lags(self.power, self.trace_index, i,
-                                       p.T, sp.fc_order, phase=self.phase,
+                    budget_now = view._usable(fsn.v)
+                pw_lags = S.power_lags(view.power, view.trace_index, i,
+                                       p.T, sp.fc_order, phase=view.phase,
                                        xp=jnp)
                 budget_plan = S.plan_budget(sp, budget_now, pw_lags,
                                             p.eff, jnp)
+                if rebalance is not None:
+                    ss = lax.cond((i % sp.rebalance_every) == 0,
+                                  lambda s: rebalance(s, budget_plan),
+                                  lambda s: s, ss)
                 dispatchable = fsn.on & ~fsn.has_work & ~fsn.p_pending
                 ss, a = S.dispatch(sp, ss, dispatchable, budget_now,
                                    budget_plan, t, jnp)
@@ -378,9 +404,9 @@ class JaxFleetBackend:
                 return (tuple(fsn2), ss), None
             # observability: pure reads of the before/after snapshots
             # above — never feeds back into fs/ss (zero perturbation)
-            col = ((i % p.T) if self.phase is None
-                   else (i + self.phase) % p.T)
-            pw = self.power[self.trace_index, col]
+            col = ((i % p.T) if view.phase is None
+                   else (i + view.phase) % p.T)
+            pw = view.power[view.trace_index, col]
             tele, ring = O.obs_tick(
                 op, sp, tele, ring, i=i, j=j, is_tick=is_tick, pw=pw,
                 eff=p.eff, dt=p.dt, b=O.dev_snap(fs0),
@@ -389,10 +415,20 @@ class JaxFleetBackend:
                 assign_wl=fsn.p_wl,
                 evict_mask=((fs2s.p_pending | fs2s.has_work)
                             & ~(fsn2.p_pending | fsn2.has_work)),
-                fs=fsn2, ss=ss, power=self.power, cs=obs_cs,
-                trace_index=self.trace_index, phase=self.phase, T=p.T,
+                fs=fsn2, ss=ss, power=view.power, cs=obs_cs,
+                trace_index=view.trace_index, phase=view.phase, T=p.T,
                 xp=jnp)
             return ((tuple(fsn2), ss), (tele, ring)), None
+
+        return body
+
+    def _build_serve(self, sp: SchedParams, n_ticks: int,
+                     dispatch_every: int, op=None):
+        from repro.fleet import sched as S
+        obs_cs = (self._power_cumsum()
+                  if op is not None and sp.forecast else None)
+        body = self._serve_body(self, sp, dispatch_every, op=op,
+                                obs_cs=obs_cs)
 
         if op is None:
             def serve_fn(fs, ss, arr, i0):
@@ -408,6 +444,189 @@ class JaxFleetBackend:
                 return fs, tuple(ss), tele, ring
 
         return jax.jit(serve_fn)
+
+    # -- sharded serve scan (--mesh-fleet K: shard_map over the fleet axis) --
+
+    def _resolve_placement(self, k: int) -> bool:
+        """True -> real K-device mesh (``shard_map``), False -> the
+        single-device ``vmap`` evaluation of the same K-shard program
+        (bit-identical by construction; see docs/sharded_fleet.md)."""
+        if self.fleet_placement == "mesh":
+            return True
+        if self.fleet_placement == "single":
+            return False
+        return jax.device_count() >= k
+
+    def _run_serve_sharded(self, state: FleetState, sp: SchedParams,
+                           sched_state: SchedState, arrivals, *, i0,
+                           dispatch_every, obs):
+        """``run_serve`` for ``sp.shards == K > 1``: the worker axis is
+        split into K contiguous row-shards, each with its own control
+        plane (per-shard ring queues, ``max_queue // K`` admission),
+        and the whole K-shard program runs as ONE logical launch —
+        ``shard_map`` over a ``(fleet,)`` mesh when K devices exist,
+        otherwise a ``vmap`` with the same named axis. The two
+        placements (and the NumPy host twin) are bit-identical: the
+        shard split is semantic, the placement is not."""
+        from repro.fleet import sched as S
+        p = self.p
+        K = sp.shards
+        ns = p.n // K
+        if self.kernel == "pallas":
+            raise ValueError(
+                "--mesh-fleet > 1 supports the xla and q32 kernels; the "
+                "Pallas serve megakernel tiles a single-device worker "
+                "axis (use --kernel q32 for sharded quantized runs)")
+        if obs is not None and obs.op.mode != "tele":
+            raise ValueError(
+                "--obs trace keeps a global per-worker event ring and "
+                "is not supported under --mesh-fleet > 1; use --obs "
+                "tele (windowed counters reduce exactly across shards)")
+        if sp.rebalance_every and (sp.rebalance_every % dispatch_every):
+            raise ValueError(
+                f"rebalance_every={sp.rebalance_every} ticks must be a "
+                f"positive multiple of dispatch_every={dispatch_every}: "
+                "the work-stealing exchange runs inside the dispatch "
+                "pass")
+        use_mesh = self._resolve_placement(K)
+        arrivals = np.asarray(arrivals, dtype=np.int64)
+        n_ticks = arrivals.shape[0]
+        arr = S.split_counts(arrivals, K)  # (K, n_ticks, W)
+        op = None if obs is None else obs.op
+        key = (n_ticks, int(dispatch_every), op, "sharded", use_mesh)
+        if self._serve_sp is not sp:  # new control-plane config: re-trace
+            self._serve_compiled = {}
+            self._serve_sp = sp
+
+        def resh(x):
+            a = np.asarray(x)
+            return np.ascontiguousarray(a.reshape((K, ns) + a.shape[1:]))
+
+        with enable_x64():
+            fs = tuple(jnp.asarray(resh(x))
+                       for x in state_as_tuple(state))
+            ss = tuple(jnp.asarray(x)  # already stacked (K, ...)
+                       for x in sched_state_as_tuple(sched_state))
+            sh = {"fs": fs, "ss": ss, "arr": jnp.asarray(arr),
+                  "ti": jnp.asarray(resh(p.trace_index)),
+                  "ph": jnp.asarray(resh(p.phase)
+                                    if p.phase is not None
+                                    else np.zeros((K, ns), np.int64)),
+                  "C": jnp.asarray(resh(p.C)),
+                  "v_max": jnp.asarray(resh(p.v_max)),
+                  "AP": jnp.asarray(resh(p.active_power_w)),
+                  "sp": {f: jnp.asarray(resh(getattr(sp, f)))
+                         for f in S.PER_WORKER_FIELDS}}
+            if self.kernel != "xla":
+                sh["qp"] = {f: jnp.asarray(resh(getattr(self._qp, f)))
+                            for f in ("E_ON", "E_OFF", "E_MAX", "ESTEP")}
+            fn = self._serve_compiled.get(key)
+            if fn is None:
+                fn = self._build_serve_sharded(sp, n_ticks,
+                                               int(dispatch_every), op,
+                                               use_mesh)
+                self._serve_compiled[key] = fn
+            out = fn(sh, jnp.asarray(i0, jnp.int64))
+            if op is None:
+                fs, ss = out
+            else:
+                fs, ss, tele = out
+                from repro.obs.state import tele_as_tuple, tele_from_tuple
+                # per-shard windows summed over K: every channel is a
+                # scatter-add, so the shard sum IS the global counter
+                obs.tele = tele_from_tuple(tuple(
+                    np.asarray(o) + np.asarray(t).sum(axis=0)
+                    for o, t in zip(tele_as_tuple(obs.tele), tele)))
+            fs = tuple(np.array(x).reshape((K * ns,)
+                                           + np.asarray(x).shape[2:])
+                       for x in fs)
+            ss = tuple(np.asarray(x) for x in ss)
+        return state_from_tuple(fs), sched_state_from_tuple(ss)
+
+    def _build_serve_sharded(self, sp: SchedParams, n_ticks: int,
+                             dispatch_every: int, op, use_mesh: bool):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.fleet import sched as S
+        from repro.sharding.context import (FLEET_AXIS, make_fleet_mesh,
+                                            shard_map_compat)
+        p = self.p
+        K = sp.shards
+        ns = p.n // K
+        quant = self.kernel != "xla"
+        obs_cs = (self._power_cumsum()
+                  if op is not None and sp.forecast else None)
+        if op is not None:
+            from repro.obs.state import init_tele, tele_as_tuple
+            tele_tmpl = [(x.shape, x.dtype)
+                         for x in tele_as_tuple(init_tele(op))]
+
+        def per_shard(sh, i0):
+            # the shard view: same backend methods, per-worker constants
+            # swapped for this shard's contiguous rows (phase=0 rows are
+            # synthesized when global phase is None: (i+0)%T == i%T)
+            view = copy.copy(self)
+            view.p = dataclasses.replace(p, n=ns)
+            view.trace_index = sh["ti"]
+            view.phase = sh["ph"]
+            view.C = sh["C"]
+            view.v_max = sh["v_max"]
+            view.AP = sh["AP"]
+            if quant:
+                view._qp = dataclasses.replace(self._qp, **sh["qp"])
+            sps = S.shard_sched_params(sp, per_worker=sh["sp"])
+
+            rebalance = None
+            if sp.rebalance_every:
+                fwd = [(s, (s + 1) % K) for s in range(K)]
+                bwd = [((s + 1) % K, s) for s in range(K)]
+
+                def rebalance(ss, budget_plan):
+                    # forecast-weighted surplus exchange around the
+                    # shard ring (docs/sharded_fleet.md): all-integer,
+                    # so the NumPy twin (rebalance_host) is bit-equal
+                    cap = S.rebalance_capacity(budget_plan, jnp)
+                    backlog = jnp.sum(ss.q_len)
+                    b_tot = lax.psum(backlog, FLEET_AXIS)
+                    c_tot = lax.psum(cap, FLEET_AXIS)
+                    surplus, deficit = S.rebalance_targets(
+                        backlog, cap, b_tot, c_tot, jnp)
+                    give = jnp.minimum(
+                        surplus, lax.ppermute(deficit, FLEET_AXIS, bwd))
+                    move = S.rebalance_moves(sps, ss.q_len, give, jnp)
+                    ss, bt, br = S.queue_pop_tail(sps, ss, move, jnp)
+                    got = [lax.ppermute(x, FLEET_AXIS, fwd)
+                           for x in (move, bt, br)]
+                    return S.queue_push_tail(sps, ss, *got, xp=jnp)
+
+            body = self._serve_body(view, sps, dispatch_every, op=op,
+                                    obs_cs=obs_cs, rebalance=rebalance)
+            fs, ss, arr = sh["fs"], sh["ss"], sh["arr"]
+            idx = jnp.arange(n_ticks, dtype=jnp.int64)
+            if op is None:
+                (fs, ss), _ = lax.scan(body, (fs, S.SS(*ss)),
+                                       (i0 + idx, arr))
+                return fs, tuple(ss)
+            tele = tuple(jnp.zeros(s, d) for s, d in tele_tmpl)
+            ((fs, ss), (tele, _)), _ = lax.scan(
+                body, ((fs, S.SS(*ss)), (tele, None)),
+                (i0 + idx, idx, arr))
+            return fs, tuple(ss), tele
+
+        if use_mesh:
+            mesh = make_fleet_mesh(K)
+
+            def shard_fn(sh, i0):
+                out = per_shard(jax.tree.map(lambda x: x[0], sh), i0)
+                return jax.tree.map(lambda x: x[None], out)
+
+            mapped = shard_map_compat(shard_fn, mesh=mesh,
+                                      in_specs=(P(FLEET_AXIS), P()),
+                                      out_specs=P(FLEET_AXIS))
+        else:
+            mapped = jax.vmap(per_shard, in_axes=(0, None),
+                              axis_name=FLEET_AXIS)
+        return jax.jit(mapped)
 
     def _usable(self, v):
         return capacitor_usable_energy(v, capacitance_f=self.C,

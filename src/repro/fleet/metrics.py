@@ -116,6 +116,9 @@ def sched_summary(sp, ss, duration_s: float, pool=None,
         "lost": int(ss.lost),
         "evicted": int(ss.evicted),
         "requeued": int(ss.requeued),
+        # requests moved between shards by the work-stealing exchange
+        # (0 on unsharded runs; see docs/sharded_fleet.md)
+        "rebalanced": int(np.asarray(ss.rebalanced).sum()),
         "throughput_rps": completed / max(duration_s, 1e-9),
         "latency_mean_s": float(ss.lat_sum) / max(completed, 1),
         "latency_p50_s": _hist_percentile(np.asarray(ss.lat_hist),

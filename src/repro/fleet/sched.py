@@ -76,6 +76,7 @@ ulps and are compared with tolerances.
 from __future__ import annotations
 
 import collections
+import dataclasses
 from typing import Sequence
 
 import numpy as np
@@ -113,7 +114,9 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
                       forecaster: str = "ou",
                       trace_families: Sequence[str] | None = None,
                       arp_order: int = 3,
-                      lat_bins: int = 64) -> SchedParams:
+                      lat_bins: int = 64, shards: int = 1,
+                      rebalance_every: int = 0,
+                      rebalance_max: int = 8) -> SchedParams:
     """Compile the control-plane constants for one fleet.
 
     Stacks the workload cost/accuracy tables (joules / dimensionless),
@@ -138,6 +141,15 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
             labels when given, else label-free classification).
         trace_families: optional per-power-row family names ("SOM", ...).
         arp_order: lag order p of the "arp" model (ticks).
+        shards: hierarchical control planes (``--mesh-fleet K``): the
+            worker axis splits into K contiguous blocks, each running an
+            independent plane over ``n/K`` workers and a ``max_queue/K``
+            admission slice. Must divide ``n`` evenly.
+        rebalance_every: cross-shard work-stealing cadence in ticks
+            (0 = off; when on, must be a positive multiple of the run's
+            ``dispatch_every`` — checked at serve time).
+        rebalance_max: per-workload cap on requests moved to the ring
+            successor per rebalance event (the ppermute buffer width).
     Returns:
         a frozen :class:`SchedParams`. Its ``quality`` provenance label
         is inferred: "measured" when any workload carries a per-sample
@@ -149,6 +161,18 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
     if forecaster not in FORECASTER_MODES:
         raise ValueError(f"unknown forecaster {forecaster!r}; "
                          f"choose from {FORECASTER_MODES}")
+    shards = int(shards)
+    if shards < 1 or p.n % shards:
+        raise ValueError(
+            f"--mesh-fleet {shards} does not divide the fleet: n={p.n} "
+            f"workers must split into equal contiguous shards "
+            f"(n % shards == {p.n % max(shards, 1)})")
+    if rebalance_every < 0:
+        raise ValueError(f"rebalance_every must be >= 0 ticks, got "
+                         f"{rebalance_every}")
+    if rebalance_max < 1:
+        raise ValueError(f"rebalance_max must be >= 1, got "
+                         f"{rebalance_max}")
     W = len(workloads)
     u_max = max(w.costs.n_units for w in workloads)
     CU = np.full((W, u_max + 2), np.inf)
@@ -229,12 +253,23 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
         value_order=(sched == "quality"),
         S_Q=S_Q, QTAB=QTAB, QJ_NJ=QJ_NJ, QVALUE=QVALUE,
         WL_RANK=np.argsort(-QVALUE, kind="stable").astype(np.int64),
-        QTARGET=QTARGET)
+        QTARGET=QTARGET, shards=shards,
+        rebalance_every=int(rebalance_every),
+        rebalance_max=int(rebalance_max))
 
 
 def make_sched_state(sp: SchedParams) -> SchedState:
     """Empty :class:`SchedState` sized for ``sp`` (see
-    ``state.init_sched_state``)."""
+    ``state.init_sched_state``). Sharded params (``sp.shards > 1``) get
+    the stacked per-shard form: every field carries a leading shard axis
+    over per-shard shapes (``shard_sched_params``)."""
+    if sp.shards > 1:
+        base = init_sched_state(shard_sched_params(sp, 0))
+        return SchedState(**{
+            f: np.broadcast_to(
+                getattr(base, f),
+                (sp.shards,) + getattr(base, f).shape).copy()
+            for f in SCHED_FIELDS})
     return init_sched_state(sp)
 
 
@@ -694,3 +729,187 @@ def evict(sp: SchedParams, ss, t, xp=np):
     ss = ss._replace(evicted=ss.evicted + xp.sum(xp.where(ev, ss.f_n, 0)))
     ss = _requeue(sp, ss, slots, xp)
     return ss._replace(f_n=xp.where(ev, 0, ss.f_n)), ev
+
+
+# ---------------------------------------------------------------------------
+# sharded control plane (--mesh-fleet K): per-shard params/state + the
+# cross-shard work-stealing rebalance, xp-generic so the fused JAX path
+# (psum/ppermute collectives) and the NumPy host twin (axis-0 sums +
+# np.roll) evaluate the same queue moves bit-exactly
+# ---------------------------------------------------------------------------
+
+# SchedParams fields indexed by worker (N,...) — the ones a per-shard
+# view must slice to its contiguous worker block
+PER_WORKER_FIELDS = ("FC_MU", "FC_W", "FC_THRESH", "FC_HI", "FC_LO",
+                     "FC_MODEL", "ECAP", "ACTIVE_P")
+
+
+def shard_sched_params(sp: SchedParams, shard: int | None = None,
+                       per_worker: dict | None = None) -> SchedParams:
+    """The single-shard view of a sharded :class:`SchedParams`.
+
+    Shard ``s`` owns workers ``[s*n/K, (s+1)*n/K)``, an admission slice
+    of ``max_queue // K`` requests, and a private ring sized
+    ``max_queue//K + n_shard*B + rebalance_max`` — the last term is
+    headroom so a rebalance push landing on a full queue (admission
+    slice + every in-flight retry requeued at once) cannot overflow the
+    ring. Pass ``shard`` on the host (NumPy slices of the per-worker
+    fields) or ``per_worker`` inside a trace (the shard's tracer slices,
+    e.g. under ``shard_map``/``vmap``)."""
+    K = sp.shards
+    ns = sp.n // K
+    if per_worker is None:
+        sl = slice(shard * ns, (shard + 1) * ns)
+        per_worker = {f: getattr(sp, f)[sl] for f in PER_WORKER_FIELDS}
+    return dataclasses.replace(
+        sp, n=ns, shards=1,
+        max_queue=sp.max_queue // K,
+        Q=int(sp.max_queue // K + ns * sp.B + sp.rebalance_max),
+        **per_worker)
+
+
+def split_counts(counts, shards: int) -> np.ndarray:
+    """Deterministic arrival split: shard ``s`` of ``K`` receives
+    ``counts // K + (s < counts % K)`` requests — elementwise over any
+    counts shape ((W,) per tick or (T, W) whole-run), so the shards'
+    admissions sum exactly to the global stream. Host-side NumPy; both
+    serve paths consume the same precomputed split."""
+    counts = np.asarray(counts).astype(np.int64)
+    s = np.arange(int(shards), dtype=np.int64).reshape(
+        (int(shards),) + (1,) * counts.ndim)
+    return counts // shards + (s < counts % shards)
+
+
+# accounting fields summed over the shard axis by merged_sched_view
+# (all order-free sums), split by their per-shard rank; the remaining
+# fields (rings, in-flight slots) keep their stacked form
+MERGED_SCALAR_FIELDS = ("submitted", "rejected", "shed", "lost",
+                        "evicted", "requeued", "completed", "lat_sum",
+                        "rebalanced")  # 0-d per shard
+MERGED_ARRAY_FIELDS = ("completed_wl", "units_wl", "acc_wl", "lat_hist",
+                       "batch_hist", "meas_wl", "joules_nj_wl")  # 1-d
+
+
+def merged_sched_view(st) -> SS:
+    """Aggregate a stacked (K, ...) sharded :class:`SchedState` into the
+    global counter view ``metrics.sched_summary`` reads: every
+    accounting field summed over the shard axis (all are order-free
+    sums), structural fields (queues, in-flight slots) passed through
+    stacked. Works on the unsharded state too (identity)."""
+    vals = {}
+    for f in SCHED_FIELDS:
+        a = np.asarray(getattr(st, f))
+        if f in MERGED_SCALAR_FIELDS and a.ndim > 0:
+            vals[f] = a.sum()
+        elif f in MERGED_ARRAY_FIELDS and a.ndim > 1:
+            vals[f] = a.sum(axis=0)
+        else:
+            vals[f] = getattr(st, f)
+    return SS(**vals)
+
+
+def rebalance_capacity(budget_plan, xp=np):
+    """One shard's energy capacity for the rebalance targets: the
+    order-free int64 sum of its workers' planning budgets quantized
+    elementwise to microjoules. µJ (not nJ) keeps the ``b_tot * cap``
+    product well inside int64 at million-worker fleets."""
+    return xp.sum(xp.round(budget_plan * 1e6).astype(xp.int64))
+
+
+def rebalance_targets(backlog, cap, b_tot, c_tot, xp=np):
+    """Forecast-weighted backlog targets: shard ``s`` should hold
+    ``b_tot * cap_s // c_tot`` queued requests (energy-proportional
+    share of the global backlog, integer floor). Returns
+    ``(surplus, deficit)`` — requests above / below target. Scalars per
+    shard under the collectives; (K,) arrays on the host twin."""
+    target = (b_tot * cap) // xp.maximum(c_tot, 1)
+    surplus = xp.maximum(backlog - target, 0)
+    deficit = xp.maximum(target - backlog, 0)
+    return surplus, deficit
+
+
+def rebalance_moves(sp: SchedParams, q_len, give, xp=np):
+    """Split one shard's total give-count into per-workload tail-pops:
+    fixed workload order 0..W-1, each queue contributing at most
+    ``min(q_len[w], rebalance_max)`` (vectorized greedy fill via the
+    availability cumsum). ``give`` is an int64 scalar."""
+    capw = xp.minimum(q_len, sp.rebalance_max)
+    c = xp.cumsum(capw)
+    return xp.clip(give - (c - capw), 0, capw).astype(xp.int64)
+
+
+def queue_pop_tail(sp: SchedParams, ss, move, xp=np):
+    """Pop ``move[w]`` requests from the TAIL of each workload ring
+    (the youngest entries — stealing ships fresh work and leaves the
+    oldest requests where shedding can still see their age) into fixed
+    (W, rebalance_max) buffers, oldest-of-the-moved first. Pure value
+    transfer: the (arrival time, retry count) payloads are copied
+    bit-for-bit, no float arithmetic. Returns ``(ss, buf_t, buf_r)``."""
+    R = sp.rebalance_max
+    jR = xp.arange(R)[None, :]
+    take = jR < move[:, None]
+    pos = ss.q_len[:, None] - move[:, None] + jR  # logical, >= 0
+    phys = (ss.q_head[:, None] + pos) % sp.Q
+    buf_t = xp.where(take, xp.take_along_axis(ss.q_t, phys, axis=1), 0.0)
+    buf_r = xp.where(take, xp.take_along_axis(ss.q_r, phys, axis=1), 0)
+    return ss._replace(q_len=ss.q_len - move), buf_t, buf_r
+
+
+def queue_push_tail(sp: SchedParams, ss, move, buf_t, buf_r, xp=np):
+    """Push received rebalance buffers at each workload ring's tail,
+    preserving buffer order (slot j of ``buf_*`` lands j-th). Unused
+    buffer lanes scatter into a dump slot that is sliced off, mirroring
+    ``_requeue_impl``'s ring-write idiom. Also counts the arrivals into
+    ``ss.rebalanced``."""
+    R = sp.rebalance_max
+    jR = xp.arange(R)[None, :]
+    put = jR < move[:, None]
+    phys = xp.where(put, (ss.q_head[:, None] + ss.q_len[:, None] + jR)
+                    % sp.Q, sp.Q)  # Q: per-row dump slot
+    flat = (xp.arange(sp.W)[:, None] * (sp.Q + 1) + phys).reshape(-1)
+    ext_t = xp.concatenate(
+        [ss.q_t, xp.zeros((sp.W, 1))], axis=1).reshape(-1)
+    ext_r = xp.concatenate(
+        [ss.q_r, xp.zeros((sp.W, 1), dtype=xp.int64)], axis=1).reshape(-1)
+    ext_t = _scatter_set(ext_t, flat,
+                         xp.where(put, buf_t, 0.0).reshape(-1), xp)
+    ext_r = _scatter_set(ext_r, flat,
+                         xp.where(put, buf_r, 0).reshape(-1), xp)
+    return ss._replace(
+        q_t=ext_t.reshape(sp.W, sp.Q + 1)[:, :sp.Q],
+        q_r=ext_r.reshape(sp.W, sp.Q + 1)[:, :sp.Q],
+        q_len=ss.q_len + move,
+        rebalanced=ss.rebalanced + xp.sum(move))
+
+
+def rebalance_host(sps_list: Sequence[SchedParams], sss: list,
+                   plans: Sequence) -> list:
+    """The NumPy host twin of one cross-shard rebalance event.
+
+    Mirrors the collective protocol exactly: ``psum`` totals become
+    axis-0 sums, the ``ppermute`` ring shifts become ``np.roll`` —
+    shard ``s`` learns its successor's deficit (roll -1), gives
+    ``min(surplus_s, deficit_{s+1})`` requests popped from its queue
+    tails, and receives its predecessor's send buffers (roll +1). Same
+    helper functions as the traced path, so the queue contents agree
+    bit-for-bit. Args are per-shard lists: params views, ``SS`` states,
+    (n_shard,) planning budgets. Returns the updated states."""
+    K = len(sss)
+    backlog = np.array([int(np.sum(s.q_len)) for s in sss],
+                       dtype=np.int64)
+    cap = np.array([int(rebalance_capacity(pl, np)) for pl in plans],
+                   dtype=np.int64)
+    surplus, deficit = rebalance_targets(
+        backlog, cap, backlog.sum(), cap.sum(), np)
+    give = np.minimum(surplus, np.roll(deficit, -1))
+    sent = []
+    out = []
+    for s in range(K):
+        move = rebalance_moves(sps_list[s], sss[s].q_len, give[s], np)
+        ss2, bt, br = queue_pop_tail(sps_list[s], sss[s], move, np)
+        out.append(ss2)
+        sent.append((move, bt, br))
+    for s in range(K):
+        move, bt, br = sent[(s - 1) % K]  # ppermute s -> s+1
+        out[s] = queue_push_tail(sps_list[s], out[s], move, bt, br, np)
+    return out

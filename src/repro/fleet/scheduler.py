@@ -26,11 +26,14 @@ each row's trace family). ``sched="reactive"`` is the PR-1 behavior.
 """
 from __future__ import annotations
 
+import collections
+
 import numpy as np
 
 from repro.fleet import backend_numpy, sched as _sched
 from repro.fleet.metrics import sched_summary
-from repro.fleet.state import (sched_state_as_tuple, sched_state_from_tuple)
+from repro.fleet.state import (STATE_FIELDS, sched_state_as_tuple,
+                               sched_state_from_tuple)
 from repro.fleet.worker import EMIT, FleetWorkerPool
 from repro.fleet.workloads import FleetWorkload
 from repro.runtime.straggler import StragglerPolicy
@@ -86,7 +89,10 @@ class FleetScheduler:
                  forecaster: str = "ou",
                  trace_families: list[str] | None = None,
                  arp_order: int = 3,
-                 lat_bins: int = 64):
+                 lat_bins: int = 64,
+                 shards: int = 1,
+                 rebalance_every: int = 0,
+                 rebalance_max: int = 8):
         if pool.mode != "dispatch":
             raise ValueError("scheduler needs a dispatch-mode pool")
         self.pool = pool
@@ -99,7 +105,9 @@ class FleetScheduler:
             deadline_factor=straggler.deadline_factor, sched=sched,
             lookahead_s=lookahead_s, forecaster=forecaster,
             trace_families=trace_families, arp_order=arp_order,
-            lat_bins=lat_bins)
+            lat_bins=lat_bins, shards=shards,
+            rebalance_every=rebalance_every,
+            rebalance_max=rebalance_max)
         self.state = _sched.make_sched_state(self.params)
 
     # -- state plumbing ------------------------------------------------------
@@ -121,8 +129,12 @@ class FleetScheduler:
         return int(self.state.f_n.sum())
 
     def summary(self, duration_s: float) -> dict:
-        return sched_summary(self.params, self.state, duration_s,
-                             self.pool, [w.name for w in self.workloads])
+        # merged_sched_view sums sharded (K, ...) accounting fields over
+        # the shard axis (identity for the unsharded state)
+        return sched_summary(self.params,
+                             _sched.merged_sched_view(self.state),
+                             duration_s, self.pool,
+                             [w.name for w in self.workloads])
 
     # -- intake --------------------------------------------------------------
 
@@ -212,6 +224,9 @@ def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
         pool.run_serve(sched, arrivals, dispatch_every=dispatch_every,
                        obs=obs)
         return sched.summary(n_steps * dt)
+    if sched.params.shards > 1:
+        return _run_fleet_numpy_sharded(pool, sched, stream, n_steps,
+                                        dispatch_every, obs)
     for i in range(n_steps):
         t = i * dt
         if obs is not None:
@@ -230,4 +245,165 @@ def run_fleet(pool: FleetWorkerPool, sched: FleetScheduler,
         sched.collect(t, evict=tick)
         if obs is not None:
             obs.host_end(i, tick, pool.state, sched.state)
+    return sched.summary(n_steps * dt)
+
+
+_FS = collections.namedtuple("_FS", STATE_FIELDS)
+
+
+def _slice_state(s, sl: slice) -> _FS:
+    """One shard's view of the (N,) struct-of-arrays device state."""
+    return _FS(*(getattr(s, f)[sl] for f in STATE_FIELDS))
+
+
+def _run_fleet_numpy_sharded(pool: FleetWorkerPool,
+                             sched: FleetScheduler,
+                             stream: RequestStream, n_steps: int,
+                             dispatch_every: int, obs) -> dict:
+    """NumPy host twin of the sharded serve scan (``--mesh-fleet K``).
+
+    The device physics stays full-fleet — the tick is embarrassingly
+    parallel over workers, so one ``pool.step`` per tick is already
+    bit-identical to K shard-local ticks. Only the control plane loops
+    the K contiguous shard slices: per-shard admission (deterministic
+    ``split_counts`` arrival split), shed/plan/dispatch/collect/evict
+    against each shard's params view, the all-integer work-stealing
+    exchange via :func:`repro.fleet.sched.rebalance_host`, and (in tele
+    mode) K per-shard telemetry states summed at the end — every
+    channel is a scatter-add, so the shard sum equals the global
+    counters. This is the reference the traced ``shard_map``/``vmap``
+    path is gated against bit-for-bit.
+    """
+    sp = sched.params
+    p = pool.params
+    K = sp.shards
+    ns = p.n // K
+    dt = pool.dt
+    if sp.rebalance_every and (sp.rebalance_every % dispatch_every):
+        raise ValueError(
+            f"rebalance_every={sp.rebalance_every} ticks must be a "
+            f"positive multiple of dispatch_every={dispatch_every}: "
+            "the work-stealing exchange runs inside the dispatch pass")
+    if obs is not None and obs.op.mode != "tele":
+        raise ValueError(
+            "--obs trace keeps a global per-worker event ring and is "
+            "not supported under --mesh-fleet > 1; use --obs tele "
+            "(windowed counters reduce exactly across shards)")
+    sps = [_sched.shard_sched_params(sp, s) for s in range(K)]
+    sls = [slice(s * ns, (s + 1) * ns) for s in range(K)]
+    split = _sched.split_counts(stream.counts_matrix(sp.W)[:n_steps], K)
+    st = sched.state
+    sss = [_sched.SS(*(np.asarray(getattr(st, f))[s]
+                       for f in _sched.SCHED_FIELDS))
+           for s in range(K)]
+    dev = pool.state
+    if obs is not None:
+        from repro.obs import telemetry as O
+        from repro.obs.state import (init_tele, tele_as_tuple,
+                                     tele_from_tuple)
+        base = tele_as_tuple(init_tele(obs.op))
+        teles = [tuple(np.zeros_like(np.asarray(x)) for x in base)
+                 for _ in range(K)]
+    for i in range(n_steps):
+        t = i * dt
+        is_tick = i % dispatch_every == 0
+        if obs is not None:
+            begins = [(O.dev_snap(_slice_state(dev, sl), copy=True),
+                       O.sched_snap(sss[s], np))
+                      for s, sl in enumerate(sls)]
+            assigns = [np.zeros(ns, dtype=bool) for _ in range(K)]
+            assign_wls = [np.zeros(ns, dtype=np.int64)
+                          for _ in range(K)]
+        for s in range(K):
+            sss[s] = _sched.admit(sps[s], sss[s], split[s, i], t, np)
+        if is_tick:
+            budget_now = backend_numpy.usable_energy(p, dev)
+            plans = []
+            for s, sl in enumerate(sls):
+                sss[s] = _sched.shed(sps[s], sss[s], t, np)
+                pw_lags = _sched.power_lags(
+                    p.power, p.trace_index[sl], i, p.T, sp.fc_order,
+                    phase=None if p.phase is None else p.phase[sl],
+                    xp=np)
+                plans.append(_sched.plan_budget(
+                    sps[s], budget_now[sl], pw_lags, p.eff, np))
+            if sp.rebalance_every and i % sp.rebalance_every == 0:
+                sss = _sched.rebalance_host(sps, sss, plans)
+            mask_f = np.zeros(p.n, dtype=bool)
+            wl_f = np.zeros(p.n, dtype=np.int64)
+            units_f = np.zeros(p.n, dtype=np.int64)
+            batch_f = np.zeros(p.n, dtype=np.int64)
+            for s, sl in enumerate(sls):
+                dispatchable = (dev.on & ~dev.has_work
+                                & ~dev.p_pending)[sl]
+                sss[s], a = _sched.dispatch(
+                    sps[s], sss[s], dispatchable, budget_now[sl],
+                    plans[s], t, np)
+                mask_f[sl] = a.mask
+                wl_f[sl] = a.wl
+                units_f[sl] = a.units
+                batch_f[sl] = a.batch
+            # one full-width write round, the exact expressions (and
+            # dtype promotions) of FleetScheduler.dispatch
+            dev.p_pending = dev.p_pending | mask_f
+            dev.p_wl = np.where(mask_f, wl_f, dev.p_wl)
+            dev.p_units = np.where(mask_f, units_f, dev.p_units)
+            dev.p_batch = np.where(mask_f, np.maximum(batch_f, 1),
+                                   dev.p_batch)
+            dev.p_t_assigned = np.where(mask_f, float(t),
+                                        dev.p_t_assigned)
+            if obs is not None:
+                for s, sl in enumerate(sls):
+                    assigns[s] = (dev.p_pending[sl]
+                                  & ~begins[s][0].p_pending)
+                    assign_wls[s] = dev.p_wl[sl].copy()
+        pool.step(i)
+        if obs is not None:
+            pre_evict = dev.p_pending | dev.has_work
+        emit = np.zeros(p.n, dtype=bool)
+        lost = np.zeros(p.n, dtype=bool)
+        units = np.zeros(p.n, dtype=np.int64)
+        for ev in pool.pop_events():
+            w = int(ev[2])
+            if ev[0] == EMIT:
+                emit[w] = True
+                units[w] = int(ev[4])
+            else:
+                lost[w] = True
+        for s, sl in enumerate(sls):
+            sss[s] = _sched.collect(sps[s], sss[s], emit[sl], lost[sl],
+                                    units[sl], t, np)
+        if is_tick:
+            evm_f = np.zeros(p.n, dtype=bool)
+            for s, sl in enumerate(sls):
+                sss[s], evm = _sched.evict(sps[s], sss[s], t, np)
+                evm_f[sl] = evm
+            dev.p_pending = dev.p_pending & ~evm_f
+            dev.has_work = dev.has_work & ~evm_f
+        if obs is not None:
+            for s, sl in enumerate(sls):
+                col = ((i % p.T) if p.phase is None
+                       else (i + p.phase[sl]) % p.T)
+                pw = p.power[p.trace_index[sl], col]
+                evict_mask = (pre_evict[sl]
+                              & ~(dev.p_pending[sl]
+                                  | dev.has_work[sl]))
+                teles[s], _ = O.obs_tick(
+                    obs.op, sps[s], teles[s], None, i=i, j=i,
+                    is_tick=is_tick, pw=pw, eff=p.eff, dt=p.dt,
+                    b=begins[s][0], sb=begins[s][1],
+                    assign_mask=assigns[s], assign_wl=assign_wls[s],
+                    evict_mask=evict_mask,
+                    fs=_slice_state(dev, sl), ss=sss[s],
+                    power=p.power, cs=obs.cs,
+                    trace_index=p.trace_index[sl],
+                    phase=None if p.phase is None else p.phase[sl],
+                    T=p.T, xp=np)
+    sched.state = sched_state_from_tuple(tuple(
+        np.stack([np.asarray(getattr(ss_, f)) for ss_ in sss])
+        for f in _sched.SCHED_FIELDS))
+    if obs is not None:
+        obs.tele = tele_from_tuple(tuple(
+            np.asarray(o) + sum(np.asarray(tl[k]) for tl in teles)
+            for k, o in enumerate(tele_as_tuple(obs.tele))))
     return sched.summary(n_steps * dt)

@@ -217,6 +217,15 @@ class SchedParams:
     WL_RANK: np.ndarray  # (W,) int64 queue service order by QVALUE desc
     QTARGET: np.ndarray  # (W,) int64 smallest knob reaching max measured
     # accuracy (sched="quality" sizes batches so each request affords it)
+    # hierarchical sharded control plane (--mesh-fleet K): the worker axis
+    # splits into `shards` contiguous blocks of n/shards workers, each
+    # running an independent control plane over a max_queue/shards
+    # admission slice. The defaults keep the single-plane behavior; the
+    # per-shard view of these params is sched.shard_sched_params.
+    shards: int = 1
+    rebalance_every: int = 0  # cross-shard work-stealing cadence, ticks
+    # (0 = off; must be a positive multiple of dispatch_every when on)
+    rebalance_max: int = 8  # max requests moved per workload per event
 
 
 @dataclasses.dataclass
@@ -258,6 +267,10 @@ class SchedState:
     # and table-priced spend, both integer so backends agree bit-exactly
     meas_wl: np.ndarray  # (W,) int64 oracle-correct completed requests
     joules_nj_wl: np.ndarray  # (W,) int64 nanojoules spent on completions
+    # sharded control plane: queued requests received from the ring
+    # predecessor by the cross-shard rebalance step (0 when shards == 1
+    # or rebalance is off)
+    rebalanced: np.ndarray
 
 
 SCHED_FIELDS: tuple[str, ...] = tuple(
@@ -279,7 +292,7 @@ def init_sched_state(sp: SchedParams) -> SchedState:
         requeued=i(), completed=i(),
         completed_wl=i(sp.W), units_wl=i(sp.W), acc_wl=f(sp.W),
         lat_sum=f(), lat_hist=i(sp.lat_bins), batch_hist=i(sp.B + 1),
-        meas_wl=i(sp.W), joules_nj_wl=i(sp.W))
+        meas_wl=i(sp.W), joules_nj_wl=i(sp.W), rebalanced=i())
 
 
 def sched_state_as_tuple(s: SchedState) -> tuple:

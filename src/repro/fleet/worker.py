@@ -122,7 +122,8 @@ class FleetWorkerPool:
                  active_power_w: np.ndarray | float | None = None,
                  backend: str = "numpy",
                  use_pallas: bool = False,
-                 kernel: str = "xla"):
+                 kernel: str = "xla",
+                 fleet_placement: str = "auto"):
         if mode not in ("local", "dispatch"):
             raise ValueError(f"unknown pool mode {mode!r}")
         if backend not in BACKENDS:
@@ -177,6 +178,10 @@ class FleetWorkerPool:
         self.backend = backend
         self.use_pallas = use_pallas
         self.kernel = kernel
+        # sharded-serve evaluation: "mesh" (shard_map over a real fleet
+        # mesh), "single" (one-device vmap), "auto" (mesh iff enough
+        # devices) — placements are bit-identical, see backend_jax
+        self.fleet_placement = fleet_placement
         self._jax = None  # lazily-built JaxFleetBackend
         self.results: list[list[EmittedResult]] = [[] for _ in range(n)]
         self.events: list[tuple] = []
@@ -285,9 +290,10 @@ class FleetWorkerPool:
         if self.backend == "jax":
             if self._jax is None:
                 from repro.fleet.backend_jax import JaxFleetBackend
-                self._jax = JaxFleetBackend(self.params,
-                                            use_pallas=self.use_pallas,
-                                            kernel=self.kernel)
+                self._jax = JaxFleetBackend(
+                    self.params, use_pallas=self.use_pallas,
+                    kernel=self.kernel,
+                    fleet_placement=self.fleet_placement)
             self.state, events = self._jax.run(self.state, i0, n_ticks)
             self.events.extend(events)
             self.steps_done = i0 + n_ticks
@@ -309,9 +315,10 @@ class FleetWorkerPool:
                              "run_fleet's per-tick driver for numpy pools")
         if self._jax is None:
             from repro.fleet.backend_jax import JaxFleetBackend
-            self._jax = JaxFleetBackend(self.params,
-                                        use_pallas=self.use_pallas,
-                                        kernel=self.kernel)
+            self._jax = JaxFleetBackend(
+                self.params, use_pallas=self.use_pallas,
+                kernel=self.kernel,
+                fleet_placement=self.fleet_placement)
         self.state, sched.state = self._jax.run_serve(
             self.state, sched.params, sched.state, arrivals,
             i0=self.steps_done, dispatch_every=dispatch_every, obs=obs)

@@ -11,6 +11,8 @@
         --backend jax --scheduler off --hetero --hetero-mcu
     PYTHONPATH=src python -m repro.launch.fleet --workers 256 \
         --quality measured --sched quality --traces SIM,RF
+    PYTHONPATH=src python -m repro.launch.fleet --workers 4096 \
+        --backend jax --scheduler on --mesh-fleet 8 --rebalance-every 1
 
 Builds a harvest-powered worker fleet over a mix of energy-trace families,
 then serves one global HAR + Harris + LM request stream either through the
@@ -106,7 +108,8 @@ def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
                         capacitance_f: np.ndarray | None = None,
                         v_max: np.ndarray | None = None,
                         active_power_w: np.ndarray | None = None,
-                        kernel: str = "xla") -> FleetWorkerPool:
+                        kernel: str = "xla",
+                        fleet_placement: str = "auto") -> FleetWorkerPool:
     rng = np.random.default_rng(seed)
     return FleetWorkerPool(
         power, dt, workloads=[w.costs for w in workloads], mode="dispatch",
@@ -114,7 +117,8 @@ def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
         trace_index=np.arange(n_workers) % power.shape[0],
         phase=rng.integers(0, power.shape[1], n_workers),
         backend=backend, capacitance_f=capacitance_f, v_max=v_max,
-        active_power_w=active_power_w, kernel=kernel)
+        active_power_w=active_power_w, kernel=kernel,
+        fleet_placement=fleet_placement)
 
 
 def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
@@ -130,16 +134,26 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   active_power_w: np.ndarray | None = None,
                   obs_mode: str = "off", obs_window_s: float = 1.0,
                   obs_ring: int = 256, trace_out: str = "",
-                  obs_print: bool = False, kernel: str = "xla") -> dict:
+                  obs_print: bool = False, kernel: str = "xla",
+                  mesh_fleet: int = 1, rebalance_every_s: float = 0.0,
+                  rebalance_max: int = 8,
+                  fleet_placement: str = "auto") -> dict:
     pool = build_dispatch_pool(power, dt, n_workers, workloads, seed,
                                backend=backend, capacitance_f=capacitance_f,
                                v_max=v_max, active_power_w=active_power_w,
-                               kernel=kernel)
+                               kernel=kernel,
+                               fleet_placement=fleet_placement)
+    # the rebalance cadence rounds to ticks; run_serve validates it is a
+    # multiple of the dispatch cadence
     scheduler = FleetScheduler(pool, workloads, max_batch=max_batch,
                                shed_after_s=shed_after_s, sched=sched,
                                lookahead_s=lookahead_s,
                                forecaster=forecaster,
-                               trace_families=trace_families)
+                               trace_families=trace_families,
+                               shards=mesh_fleet,
+                               rebalance_every=int(round(
+                                   rebalance_every_s / dt)),
+                               rebalance_max=rebalance_max)
     obs = None
     if obs_mode != "off":
         from repro.obs import make_fleet_obs
@@ -156,6 +170,7 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
     summary["n_workers"] = n_workers
     summary["backend"] = backend
     summary["kernel"] = kernel
+    summary["mesh_fleet"] = mesh_fleet
     if obs is not None:
         summary["obs"] = obs.summary()
         if trace_out and obs.ring is not None:
@@ -262,6 +277,23 @@ def main(argv: list[str] | None = None) -> dict:
                          "(xla), the int32-quantized pure-XLA twin (q32), "
                          "or the fused Pallas megakernel over quantized "
                          "state (pallas; interprets on CPU)")
+    ap.add_argument("--mesh-fleet", type=int, default=1,
+                    help="shard the serve scan K ways over a (fleet,) "
+                         "device mesh: per-shard control planes, one "
+                         "logical launch (jax backend; numpy runs the "
+                         "bit-equal host twin). K must divide --workers")
+    ap.add_argument("--rebalance-every", type=float, default=0.0,
+                    help="cross-shard work-stealing cadence in seconds "
+                         "(0: off). Queued requests flow around the "
+                         "shard ring from backlogged to energy-rich "
+                         "shards; must be a multiple of the dispatch "
+                         "cadence and needs --mesh-fleet > 1")
+    ap.add_argument("--fleet-placement",
+                    choices=("auto", "mesh", "single"), default="auto",
+                    help="where the sharded scan runs: a real K-device "
+                         "mesh (mesh), a single-device vmap of the same "
+                         "K-shard program (single), or mesh iff K "
+                         "devices exist (auto) — bit-identical results")
     ap.add_argument("--hetero", action="store_true",
                     help="heterogeneous fleet: per-worker capacitance/v_max")
     ap.add_argument("--hetero-mcu", action="store_true",
@@ -279,6 +311,12 @@ def main(argv: list[str] | None = None) -> dict:
                          "oracles — real SVM inference, Harris corner "
                          "equivalence, real anytime-LM decodes "
                          "(measured; calibrates once per process)")
+    ap.add_argument("--oracle-bank", type=float, default=1.0,
+                    help="oracle sample-bank scale for --quality "
+                         "measured: multiplies the calibration sample "
+                         "counts (1.0 keeps the seconds-scale CI "
+                         "default; larger banks cut table variance at "
+                         "proportional calibration cost)")
     ap.add_argument("--lookahead", type=float, default=5.0,
                     help="forecast horizon in seconds (sched=forecast)")
     ap.add_argument("--forecaster", choices=FORECASTER_MODES, default="ou",
@@ -311,7 +349,8 @@ def main(argv: list[str] | None = None) -> dict:
                  f"choose from {sorted(WORKLOAD_FACTORIES)}")
     if args.quality == "measured":
         from repro.quality.calibrate import measured_workloads
-        workloads = measured_workloads(wl_names, seed=args.seed)
+        workloads = measured_workloads(wl_names, seed=args.seed,
+                                       bank=args.oracle_bank)
     else:
         workloads = [WORKLOAD_FACTORIES[n]() for n in wl_names]
     mix = np.array([float(x) for x in args.mix.split(",")])
@@ -340,7 +379,10 @@ def main(argv: list[str] | None = None) -> dict:
             forecaster=args.forecaster, trace_families=families,
             capacitance_f=cf, v_max=vm, active_power_w=ap_w,
             obs_mode=args.obs, obs_window_s=args.obs_window,
-            trace_out=args.trace_out, obs_print=True, kernel=args.kernel)
+            trace_out=args.trace_out, obs_print=True, kernel=args.kernel,
+            mesh_fleet=args.mesh_fleet,
+            rebalance_every_s=args.rebalance_every,
+            fleet_placement=args.fleet_placement)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(
             power, args.dt, args.workers, workloads, mix=mix,

@@ -66,13 +66,34 @@ _MEASURED = {
 }
 
 
+def bank_kwargs(name: str, bank: float) -> dict:
+    """Constructor overrides scaling one oracle's sample bank by
+    ``bank`` (the ``--oracle-bank`` knob). ``bank=1.0`` is the
+    seconds-scale CI default; larger banks shrink the measured tables'
+    sampling variance roughly as ``1/sqrt(bank)`` at proportional
+    calibration cost (see docs/quality_plane.md). Counts floor at the
+    defaults so fractional banks cannot starve an oracle."""
+    if bank == 1.0:
+        return {}
+    def k(v):
+        return max(int(round(v * bank)), v if bank >= 1.0 else 1)
+    return {
+        "har": {"n_train": k(40), "n_test": k(24)},
+        "harris": {"n_per_kind": k(3)},
+        "lm": {"n_probe": k(32)},
+    }[name]
+
+
 def measured_workloads(names=("har", "harris", "lm"), *,
-                       seed: int = 0) -> list[FleetWorkload]:
+                       seed: int = 0,
+                       bank: float = 1.0) -> list[FleetWorkload]:
     """The measured counterparts of ``launch.fleet.WORKLOAD_FACTORIES``,
     in the given order. Unknown names raise (same contract as the
-    launcher's proxy path)."""
+    launcher's proxy path). ``bank`` scales every oracle's calibration
+    sample bank (:func:`bank_kwargs`)."""
     unknown = [n for n in names if n not in _MEASURED]
     if unknown:
         raise ValueError(f"unknown workload(s) {unknown}; "
                          f"choose from {sorted(_MEASURED)}")
-    return [_MEASURED[n](seed=seed) for n in names]
+    return [_MEASURED[n](seed=seed, **bank_kwargs(n, bank))
+            for n in names]

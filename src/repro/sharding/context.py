@@ -24,6 +24,28 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _STATE = threading.local()
 
+# the fleet mesh axis: the serve scan's worker dimension is row-sharded
+# over this 1-D axis (repro.fleet.backend_jax sharded run_serve); kept
+# distinct from the model axes above so a future combined launch can
+# nest both
+FLEET_AXIS = "fleet"
+
+
+def make_fleet_mesh(k: int) -> Mesh:
+    """1-D ``(fleet,)`` mesh over the first ``k`` local devices — one
+    control-plane shard per device. Raises a clear error when the host
+    exposes fewer devices (on CPU, force more with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K``)."""
+    devs = jax.devices()
+    if len(devs) < k:
+        raise ValueError(
+            f"--mesh-fleet {k} needs {k} devices but jax.device_count() "
+            f"== {len(devs)}; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={k} (before jax "
+            f"imports) or use the single-device vmap placement")
+    import numpy as np
+    return Mesh(np.asarray(devs[:k]), (FLEET_AXIS,))
+
 
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check: bool = False):
     """``jax.shard_map`` across jax versions: the stable name with its

@@ -15,7 +15,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.sharding.context import MeshContext
+from repro.sharding.context import FLEET_AXIS, MeshContext
 
 # suffix-matched rules: (path contains, spec builder over (tp, n_stack_dims))
 # spec entries index the *trailing* dims of the parameter.
@@ -186,3 +186,32 @@ def batch_shardings(abstract_batch, ctx: MeshContext):
         return NamedSharding(ctx.mesh, P(*s))
 
     return jax.tree.map(spec, abstract_batch)
+
+
+# ---------------------------------------------------------------------------
+# fleet-state rules (the serve scan's worker axis)
+# ---------------------------------------------------------------------------
+
+
+def fleet_axis_spec(leaf, k: int) -> P:
+    """PartitionSpec for one fleet-shaped leaf under a K-way ``fleet``
+    mesh: shard dim 0 when it divides evenly (the stacked per-shard
+    leading axis, or an (N,) worker array with N a multiple of K),
+    replicate otherwise — the same divisibility fallback the model
+    rules use, so odd shapes lower to replication instead of a shape
+    error. 0-d leaves replicate."""
+    ndim = getattr(leaf, "ndim", 0)
+    spec: list = [None] * ndim
+    if ndim >= 1 and leaf.shape[0] > 0 and leaf.shape[0] % k == 0:
+        spec[0] = FLEET_AXIS
+    return P(*spec)
+
+
+def fleet_state_shardings(abstract_state, mesh, k: int | None = None):
+    """NamedShardings for a fleet-state pytree (stacked (K, ...) SoA
+    leaves) over a ``make_fleet_mesh`` mesh; ``k`` defaults to the mesh's
+    fleet-axis size."""
+    kk = int(mesh.shape[FLEET_AXIS]) if k is None else int(k)
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, fleet_axis_spec(x, kk)),
+        abstract_state)

@@ -4,10 +4,10 @@
 Three checks:
 
 - every ``--flag`` token in README.md and docs/*.md appears in the
-  ``--help`` output of the CLIs the docs describe (``repro.launch.fleet``,
-  ``benchmarks.fleet_throughput``, ``benchmarks.fleet_quality``,
-  ``benchmarks.fleet_observability``) — catches the classic drift where
-  a flag is renamed or removed but the prose keeps recommending it;
+  ``--help`` output of the CLIs the docs describe (``repro.launch.fleet``
+  plus the ``benchmarks.fleet_*`` suites — see ``CLIS``) — catches the
+  classic drift where a flag is renamed or removed but the prose keeps
+  recommending it;
 - every committed ``experiments/*.json`` artifact has a schema entry in
   ``docs/experiments.md`` (its filename is mentioned there) — catches
   benchmarks that grow a new artifact without documenting its fields;
@@ -36,7 +36,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 CLIS = ("repro.launch.fleet", "benchmarks.fleet_throughput",
-        "benchmarks.fleet_quality", "benchmarks.fleet_observability")
+        "benchmarks.fleet_quality", "benchmarks.fleet_observability",
+        "benchmarks.fleet_megakernel", "benchmarks.fleet_sharded_scaling")
 DOCS = ("README.md", "docs")
 
 # `--flag` with a word boundary before it (skips ---- rules and
