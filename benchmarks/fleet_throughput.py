@@ -278,6 +278,7 @@ _COUNT_KEYS = ("submitted", "completed", "rejected", "shed", "lost",
 def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
                      seed: int = 0, sched: str = "forecast",
                      traces=None, forecaster: str = "ou",
+                     forecaster_fit: str = "full",
                      workloads=None, obs_mode: str = "off",
                      obs_window_s: float = 1.0,
                      trace_out: str = "") -> dict:
@@ -300,6 +301,7 @@ def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
             power, DT, n_workers, workloads or _workloads(),
             rate_rps=rate, mix=MIX, n_steps=n_steps, seed=seed,
             backend=backend, sched=sched, forecaster=forecaster,
+            forecaster_fit=forecaster_fit,
             trace_families=families, obs_mode=obs_mode,
             obs_window_s=obs_window_s,
             trace_out=(trace_out if backend == "jax" else ""))
@@ -521,12 +523,15 @@ def run_forecaster_suite(n_workers: int = 1024,
 def run_control_plane_suite(n_workers: int = 1024,
                             duration_s: float = 600.0,
                             forecaster: str = "ou",
+                            forecaster_fit: str = "full",
                             obs_mode: str = "off",
                             obs_window_s: float = 1.0,
                             trace_out: str = "") -> dict:
     t0 = time.perf_counter()
     agree = _sched_agreement(n_workers, duration_s, 32, sched="forecast",
-                             forecaster=forecaster, obs_mode=obs_mode,
+                             forecaster=forecaster,
+                             forecaster_fit=forecaster_fit,
+                             obs_mode=obs_mode,
                              obs_window_s=obs_window_s,
                              trace_out=trace_out)
     comp = control_plane_comparison(n_workers, duration_s)
@@ -777,6 +782,14 @@ def main(argv: list[str] | None = None) -> dict:
                     help="forecast model the --control-plane agreement "
                          "check runs under (auto: per-row selection by "
                          "trace family)")
+    ap.add_argument("--forecaster-fit", choices=("full", "causal"),
+                    default="full",
+                    help="forecast-table provenance for the "
+                         "--control-plane agreement runs: full fits the "
+                         "whole trace bank up front (the offline "
+                         "default, which peeks past serve time); causal "
+                         "starts from the zero prior and only ever sees "
+                         "the observed harvest prefix")
     ap.add_argument("--forecasters", action="store_true",
                     help="forecaster-vs-family completed-requests matrix "
                          "(1024 workers, 600 s, on --backend; counts are "
@@ -820,6 +833,7 @@ def main(argv: list[str] | None = None) -> dict:
         return run_forecaster_suite(backend=args.backend)
     if args.control_plane:
         return run_control_plane_suite(forecaster=args.forecaster,
+                                       forecaster_fit=args.forecaster_fit,
                                        obs_mode=args.obs,
                                        obs_window_s=args.obs_window,
                                        trace_out=args.trace_out)

@@ -606,6 +606,201 @@ def classify_rows(rows: np.ndarray) -> list[str]:
             for r in range(rows.shape[0])]
 
 
+# ---------------------------------------------------------------------------
+# Causal (prefix-only) fitting — streaming online serve
+# ---------------------------------------------------------------------------
+
+
+def zero_row_forecast(R: int, order: int = 1) -> RowForecast:
+    """The zero-inflow prior: forecast 0 W unconditionally, so planning
+    degrades to the reactive (instantaneous-charge) budget. The honest
+    answer before any harvest has been observed."""
+    z = np.zeros(R)
+    return RowForecast(order=int(order), MU=z, W=np.zeros((R, order)),
+                       THRESH=np.full(R, np.inf), HI=z, LO=z,
+                       model=np.zeros(R, dtype=np.int8))
+
+
+def _pad_order(rf: RowForecast, order: int) -> RowForecast:
+    """Widen a compiled table's lag axis to a fixed ``order`` (unused lag
+    weights zero) so refits never change ``fc_order`` mid-run."""
+    if rf.order == order:
+        return rf
+    if rf.order > order:
+        raise ValueError(f"compiled order {rf.order} exceeds the fixed "
+                         f"causal order {order}")
+    W = np.zeros((rf.W.shape[0], order))
+    W[:, :rf.order] = rf.W
+    return dataclasses.replace(rf, order=int(order), W=W)
+
+
+class CausalFitState:
+    """Incrementally-updatable forecaster fit over the *observed* harvest
+    prefix — the honest alternative to fitting on the full (R, T) bank
+    (which peeks at the future; see docs/streaming_serve.md).
+
+    ``update(cols)`` absorbs newly observed (R, k) power columns;
+    ``compile(lookahead_ticks)`` returns the :class:`RowForecast` a fit
+    on exactly the concatenated prefix would produce. The continuous
+    models carry true windowed sufficient statistics — O(R p^2) state
+    regardless of how many ticks have streamed past:
+
+    - ``ou``: per-row count/sum/sum-of-squares plus the adjacent-product
+      sum (with first/last samples), from which the lag-1
+      autocorrelation fit of :func:`fit_ou_theta` is algebraically
+      reconstructed;
+    - ``arp``: raw lag moments (A = sum l l^T, b = sum l y, plus lag and
+      target sums) with a p-sample tail buffer to stitch regression rows
+      across chunk boundaries; the deviation-form normal equations then
+      reduce to the same ridge solve as :meth:`ARPForecaster.fit`.
+
+    The regime models (``occlusion``/``burst``) and ``auto`` selection
+    need order statistics (percentile thresholds) that have no fixed-size
+    sufficient form, so they buffer a *copy* of the observed columns and
+    batch-fit the prefix — causal by construction, O(R m) state.
+
+    Fits are compiled at a fixed lag order (``arp_order`` for ``arp``,
+    1 otherwise) so ``SchedParams.fc_order`` — part of the fused scan's
+    compile key — never changes across refits. Below ``min_ticks``
+    observed columns the compile returns :func:`zero_row_forecast`
+    (plan on what is banked, forecast nothing).
+    """
+
+    def __init__(self, mode: str, R: int, *, arp_order: int = 3,
+                 families: Sequence[str] | None = None,
+                 min_ticks: int | None = None):
+        if mode not in FORECASTER_MODES:
+            raise ValueError(f"unknown forecaster mode {mode!r}; "
+                             f"choose from {FORECASTER_MODES}")
+        self.mode = mode
+        self.R = int(R)
+        self.arp_order = int(arp_order)
+        self.families = None if families is None else list(families)
+        self.order = self.arp_order if mode == "arp" else 1
+        self.min_ticks = (max(8, self.order + 2) if min_ticks is None
+                          else int(min_ticks))
+        self.m = 0  # observed columns
+        # full-sample moments (shared by ou and arp: mu, var, extrema)
+        self._sx = np.zeros(R)
+        self._sxx = np.zeros(R)
+        self._xmin = np.full(R, np.inf)
+        self._xmax = np.full(R, -np.inf)
+        if mode == "ou":
+            self._sxy = np.zeros(R)  # sum x[t] x[t+1], adjacent pairs
+            self._first = np.zeros(R)
+            self._last = np.zeros(R)
+        elif mode == "arp":
+            p = self.arp_order
+            self._A = np.zeros((R, p, p))  # sum l l^T (raw lags)
+            self._b = np.zeros((R, p))  # sum l y
+            self._sl = np.zeros((R, p))  # sum l
+            self._sy = np.zeros(R)  # sum y
+            self._m_ar = 0  # regression rows accumulated
+            self._tail = np.zeros((R, 0))  # last <=p observed samples
+        else:  # occlusion / burst / auto: buffered prefix (see docstring)
+            self._buf = np.zeros((R, 0))
+
+    def update(self, cols: np.ndarray) -> "CausalFitState":
+        """Absorb newly observed power columns (watts), shape (R, k).
+
+        Copies what it keeps — callers may mutate ``cols`` afterwards
+        (the causality tests do exactly that to future samples)."""
+        cols = np.asarray(cols, dtype=np.float64)
+        if cols.ndim != 2 or cols.shape[0] != self.R:
+            raise ValueError(f"expected ({self.R}, k) columns, got "
+                             f"{cols.shape}")
+        k = cols.shape[1]
+        if k == 0:
+            return self
+        self._sx += cols.sum(axis=1)
+        self._sxx += (cols * cols).sum(axis=1)
+        self._xmin = np.minimum(self._xmin, cols.min(axis=1))
+        self._xmax = np.maximum(self._xmax, cols.max(axis=1))
+        if self.mode == "ou":
+            x = (cols if self.m == 0
+                 else np.concatenate([self._last[:, None], cols], axis=1))
+            self._sxy += (x[:, :-1] * x[:, 1:]).sum(axis=1)
+            if self.m == 0:
+                self._first = cols[:, 0].copy()
+            self._last = cols[:, -1].copy()
+        elif self.mode == "arp":
+            p = self.arp_order
+            nt = self._tail.shape[1]  # = min(p, m)
+            x = np.concatenate([self._tail, cols], axis=1)
+            j0 = max(p, nt)  # first NEW target index in x
+            if nt + k > j0:
+                Y = x[:, j0:]
+                X = np.stack([x[:, j0 - d:nt + k - d]
+                              for d in range(1, p + 1)], axis=2)
+                self._A += np.einsum("rtp,rtq->rpq", X, X)
+                self._b += np.einsum("rtp,rt->rp", X, Y)
+                self._sl += X.sum(axis=1)
+                self._sy += Y.sum(axis=1)
+                self._m_ar += nt + k - j0
+            self._tail = x[:, -min(p, nt + k):].copy()
+        else:
+            self._buf = np.concatenate([self._buf, cols], axis=1)
+        self.m += k
+        return self
+
+    def compile(self, lookahead_ticks: int) -> RowForecast:
+        """The :class:`RowForecast` of a batch fit on the observed
+        prefix, at the fixed lag order (see class docstring)."""
+        if self.m < self.min_ticks:
+            return zero_row_forecast(self.R, self.order)
+        if self.mode == "ou":
+            mu = self._sx / self.m
+            var = self._sxx / self.m - mu * mu
+            # sum (x[t]-mu)(x[t+1]-mu) over the m-1 adjacent pairs,
+            # reconstructed from raw sums (sum_{t<m-1} x[t+1] = sx-first,
+            # sum_{t<m-1} x[t] = sx-last)
+            cross = (self._sxy - mu * (self._sx - self._first)
+                     - mu * (self._sx - self._last)
+                     + (self.m - 1) * mu * mu)
+            rho = (cross / (self.m - 1)) / np.maximum(var, 1e-12)
+            theta = np.clip(1.0 - rho, 1e-6, 1.0)
+            return OUForecaster().compile(OUParams(theta=theta, mu=mu),
+                                          lookahead_ticks)
+        if self.mode == "arp":
+            p = self.arp_order
+            mu = self._sx / self.m
+            one = np.ones(p)
+            # deviation-form normal equations from the raw moments:
+            # sum (l-mu)(l-mu)^T and sum (l-mu)(y-mu)
+            XtX = (self._A
+                   - mu[:, None, None] * (self._sl[:, :, None] * one
+                                          + one[:, None] * self._sl[:, None, :])
+                   + self._m_ar * (mu * mu)[:, None, None])
+            XtY = (self._b - mu[:, None] * self._sl
+                   - (mu * self._sy)[:, None]
+                   + self._m_ar * (mu * mu)[:, None])
+            tr = np.trace(XtX, axis1=1, axis2=2) / p
+            A = XtX + (1e-8 * tr + 1e-300)[:, None, None] * np.eye(p)
+            coef = np.linalg.solve(A, XtY[..., None])[..., 0]
+            params = ARParams(mu=mu, coef=coef, xmin=self._xmin.copy(),
+                              xmax=self._xmax.copy())
+            return ARPForecaster(order=p).compile(params, lookahead_ticks)
+        rf = fit_row_forecast(self._buf, self.mode, lookahead_ticks,
+                              families=self.families,
+                              arp_order=self.arp_order)
+        return _pad_order(rf, self.order)
+
+
+def fit_causal_forecast(power_prefix: np.ndarray, mode: str,
+                        lookahead_ticks: int, *,
+                        families: Sequence[str] | None = None,
+                        arp_order: int = 3,
+                        min_ticks: int | None = None) -> RowForecast:
+    """One-shot causal fit: the :class:`RowForecast` from exactly the
+    (R, m) observed prefix (convenience wrapper over
+    :class:`CausalFitState` — the streaming loop holds the state and
+    updates it incrementally instead)."""
+    power_prefix = np.asarray(power_prefix, dtype=np.float64)
+    st = CausalFitState(mode, power_prefix.shape[0], arp_order=arp_order,
+                        families=families, min_ticks=min_ticks)
+    return st.update(power_prefix).compile(lookahead_ticks)
+
+
 def fit_row_forecast(power: np.ndarray, mode: str, lookahead_ticks: int, *,
                      families: Sequence[str] | None = None,
                      arp_order: int = 3) -> RowForecast:

@@ -82,7 +82,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.forecast import (FORECASTER_MODES, RowForecast,
-                                 fit_row_forecast, usable_energy_rows)
+                                 fit_row_forecast, usable_energy_rows,
+                                 zero_row_forecast)
 from repro.fleet.state import (SCHED_FIELDS, FleetParams, SchedParams,
                                SchedState, init_sched_state)
 
@@ -114,6 +115,7 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
                       forecaster: str = "ou",
                       trace_families: Sequence[str] | None = None,
                       arp_order: int = 3,
+                      forecaster_fit: str = "full",
                       lat_bins: int = 64, shards: int = 1,
                       rebalance_every: int = 0,
                       rebalance_max: int = 8) -> SchedParams:
@@ -141,6 +143,12 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
             labels when given, else label-free classification).
         trace_families: optional per-power-row family names ("SOM", ...).
         arp_order: lag order p of the "arp" model (ticks).
+        forecaster_fit: "full" fits the forecaster on the whole (R, T)
+            bank (the historical offline behavior — it reads harvest
+            samples the run has not produced yet); "causal" starts from
+            the zero-inflow prior and leaves fitting to prefix-only
+            refits (``FleetScheduler.refit_forecast``). Both compile to
+            the same ``fc_order`` so refits never re-trace the scan.
         shards: hierarchical control planes (``--mesh-fleet K``): the
             worker axis splits into K contiguous blocks, each running an
             independent plane over ``n/K`` workers and a ``max_queue/K``
@@ -173,6 +181,9 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
     if rebalance_max < 1:
         raise ValueError(f"rebalance_max must be >= 1, got "
                          f"{rebalance_max}")
+    if forecaster_fit not in ("full", "causal"):
+        raise ValueError(f"unknown forecaster_fit {forecaster_fit!r}; "
+                         "choose from ('full', 'causal')")
     W = len(workloads)
     u_max = max(w.costs.n_units for w in workloads)
     CU = np.full((W, u_max + 2), np.inf)
@@ -221,7 +232,13 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
                      / max(CU[w, u_eff], 1e-300))
         QTARGET[w] = int(np.argmax(wk.accuracy))  # first knob at the max
     L = max(int(round(lookahead_s / p.dt)), 1)
-    if sched == "forecast":
+    if sched == "forecast" and forecaster_fit == "causal":
+        # honest start: nothing observed yet, forecast nothing. The
+        # streaming loop (FleetScheduler.refit_forecast) swaps in
+        # prefix-only fits at the same fixed fc_order.
+        rf = zero_row_forecast(
+            p.n, arp_order if forecaster == "arp" else 1)
+    elif sched == "forecast":
         rf = fit_row_forecast(p.power, forecaster, L,
                               families=trace_families,
                               arp_order=arp_order).take(p.trace_index)
@@ -255,7 +272,8 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
         WL_RANK=np.argsort(-QVALUE, kind="stable").astype(np.int64),
         QTARGET=QTARGET, shards=shards,
         rebalance_every=int(rebalance_every),
-        rebalance_max=int(rebalance_max))
+        rebalance_max=int(rebalance_max),
+        forecaster_fit=str(forecaster_fit))
 
 
 def make_sched_state(sp: SchedParams) -> SchedState:
@@ -738,10 +756,43 @@ def evict(sp: SchedParams, ss, t, xp=np):
 # np.roll) evaluate the same queue moves bit-exactly
 # ---------------------------------------------------------------------------
 
+# compiled forecast tables — the SchedParams arrays a causal refit
+# replaces between chunks. The fused scan passes them as *runtime*
+# inputs (not trace constants) so a refit never forces a re-trace;
+# sched_params_compatible is the matching cache-invalidation rule.
+FC_FIELDS = ("FC_MU", "FC_W", "FC_THRESH", "FC_HI", "FC_LO", "FC_MODEL")
+
 # SchedParams fields indexed by worker (N,...) — the ones a per-shard
 # view must slice to its contiguous worker block
-PER_WORKER_FIELDS = ("FC_MU", "FC_W", "FC_THRESH", "FC_HI", "FC_LO",
-                     "FC_MODEL", "ECAP", "ACTIVE_P")
+PER_WORKER_FIELDS = FC_FIELDS + ("ECAP", "ACTIVE_P")
+
+
+def sched_params_compatible(old: SchedParams | None,
+                            new: SchedParams) -> bool:
+    """True iff a scan compiled against ``old`` stays valid for ``new``.
+
+    A causal refit rebinds only the ``FC_FIELDS`` tables (same shapes,
+    same dtypes — ``fc_order`` is fixed per session), which the compiled
+    serve functions take as runtime arguments; everything else in
+    :class:`SchedParams` is baked into the trace, so any *other* change
+    — a different table object, a different scalar — invalidates the
+    compile cache exactly like the old identity check did."""
+    if old is None:
+        return False
+    if old is new:
+        return True
+    for f in dataclasses.fields(SchedParams):
+        a, b = getattr(old, f.name), getattr(new, f.name)
+        if f.name in FC_FIELDS:
+            a, b = np.asarray(a), np.asarray(b)
+            if a.shape != b.shape or a.dtype != b.dtype:
+                return False
+        elif isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+            if a is not b:
+                return False
+        elif a != b:
+            return False
+    return True
 
 
 def shard_sched_params(sp: SchedParams, shard: int | None = None,

@@ -89,6 +89,7 @@ class FleetScheduler:
                  forecaster: str = "ou",
                  trace_families: list[str] | None = None,
                  arp_order: int = 3,
+                 forecaster_fit: str = "full",
                  lat_bins: int = 64,
                  shards: int = 1,
                  rebalance_every: int = 0,
@@ -105,10 +106,21 @@ class FleetScheduler:
             deadline_factor=straggler.deadline_factor, sched=sched,
             lookahead_s=lookahead_s, forecaster=forecaster,
             trace_families=trace_families, arp_order=arp_order,
+            forecaster_fit=forecaster_fit,
             lat_bins=lat_bins, shards=shards,
             rebalance_every=rebalance_every,
             rebalance_max=rebalance_max)
         self.state = _sched.make_sched_state(self.params)
+        # causal refit machinery: windowed sufficient statistics over the
+        # observed harvest prefix (repro.core.forecast.CausalFitState),
+        # refreshed by refit_forecast at streaming chunk boundaries
+        self.fit_state = None
+        self.observed_ticks = 0
+        if forecaster_fit == "causal" and sched == "forecast":
+            from repro.core.forecast import CausalFitState
+            self.fit_state = CausalFitState(
+                forecaster, pool.params.power.shape[0],
+                arp_order=arp_order, families=trace_families)
 
     # -- state plumbing ------------------------------------------------------
 
@@ -127,6 +139,34 @@ class FleetScheduler:
     def inflight_count(self) -> int:
         """Requests currently assigned to (pending or running on) workers."""
         return int(self.state.f_n.sum())
+
+    def refit_forecast(self, upto_tick: int) -> bool:
+        """Causal refit: absorb harvest columns ``[observed, upto_tick)``
+        into the sufficient statistics and swap the compiled forecast
+        tables in ``self.params`` for a fit on exactly that prefix.
+
+        Prefix-only by construction — samples at trace tick
+        ``>= upto_tick`` are never read (pinned by the future-mutation
+        test in tests/test_streaming.py). The replacement keeps every
+        non-``FC_*`` field identical (``sched_params_compatible``), so
+        the fused scan's compiled functions stay valid and the new
+        tables flow in as runtime arguments. Returns True iff the
+        tables changed (i.e. the scheduler was built with
+        ``forecaster_fit="causal"`` and ``sched="forecast"``)."""
+        if self.fit_state is None:
+            return False
+        import dataclasses
+        p = self.pool.params
+        upto = min(int(upto_tick), p.T)
+        if upto > self.observed_ticks:
+            self.fit_state.update(p.power[:, self.observed_ticks:upto])
+            self.observed_ticks = upto
+        rf = self.fit_state.compile(
+            self.params.lookahead_ticks).take(p.trace_index)
+        self.params = dataclasses.replace(
+            self.params, FC_MU=rf.MU, FC_W=rf.W, FC_THRESH=rf.THRESH,
+            FC_HI=rf.HI, FC_LO=rf.LO, FC_MODEL=rf.model)
+        return True
 
     def summary(self, duration_s: float) -> dict:
         # merged_sched_view sums sharded (K, ...) accounting fields over

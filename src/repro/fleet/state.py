@@ -226,6 +226,12 @@ class SchedParams:
     rebalance_every: int = 0  # cross-shard work-stealing cadence, ticks
     # (0 = off; must be a positive multiple of dispatch_every when on)
     rebalance_max: int = 8  # max requests moved per workload per event
+    # forecaster fit provenance: "full" fits on the whole (R, T) bank at
+    # construction (the historical offline behavior — it peeks at future
+    # harvest), "causal" starts from the zero-inflow prior and refits
+    # from only the observed prefix (FleetScheduler.refit_forecast /
+    # the streaming loop; see docs/streaming_serve.md)
+    forecaster_fit: str = "full"
 
 
 @dataclasses.dataclass

@@ -129,6 +129,7 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   sched: str = "reactive", lookahead_s: float = 5.0,
                   forecaster: str = "ou",
                   trace_families: list[str] | None = None,
+                  forecaster_fit: str = "full",
                   capacitance_f: np.ndarray | None = None,
                   v_max: np.ndarray | None = None,
                   active_power_w: np.ndarray | None = None,
@@ -150,6 +151,7 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                                lookahead_s=lookahead_s,
                                forecaster=forecaster,
                                trace_families=trace_families,
+                               forecaster_fit=forecaster_fit,
                                shards=mesh_fleet,
                                rebalance_every=int(round(
                                    rebalance_every_s / dt)),
@@ -324,6 +326,15 @@ def main(argv: list[str] | None = None) -> dict:
                          "mean reversion, occlusion/burst regime models, "
                          "a learned AR(p) fit, or auto per-row selection "
                          "matched to each trace row's family")
+    ap.add_argument("--forecaster-fit", choices=("full", "causal"),
+                    default="full",
+                    help="forecaster fit provenance (sched=forecast): "
+                         "fit on the whole trace bank at construction "
+                         "(full — the historical offline behavior, which "
+                         "peeks at future harvest) or start from the "
+                         "zero-inflow prior and refit from only the "
+                         "observed prefix at streaming chunk boundaries "
+                         "(causal; pair with --stream --refit-every)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--shed-after", type=float, default=30.0)
     ap.add_argument("--obs", choices=("off", "tele", "trace"),
@@ -377,6 +388,7 @@ def main(argv: list[str] | None = None) -> dict:
             shed_after_s=args.shed_after, backend=args.backend,
             sched=args.sched, lookahead_s=args.lookahead,
             forecaster=args.forecaster, trace_families=families,
+            forecaster_fit=args.forecaster_fit,
             capacitance_f=cf, v_max=vm, active_power_w=ap_w,
             obs_mode=args.obs, obs_window_s=args.obs_window,
             trace_out=args.trace_out, obs_print=True, kernel=args.kernel,

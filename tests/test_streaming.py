@@ -1,0 +1,299 @@
+"""Streaming online serve: causal (prefix-only) forecaster fitting.
+
+Two families of guarantees pinned here:
+
+- sufficient-statistics equivalence: the incrementally-updated
+  :class:`repro.core.forecast.CausalFitState` — fed the observed harvest
+  prefix in any chunking, including single-column updates that straddle
+  the AR(p) regression-row boundary — compiles to the same
+  :class:`RowForecast` as a one-shot batch fit on the concatenated
+  prefix;
+- causality: a refit at tick k reads only ``power[:, :k]``. Mutating
+  every sample at tick >= k changes nothing — not the compiled tables,
+  not ``plan_budget``'s routing budget.
+
+The chunked-vs-whole-trace differential suite for the streaming serve
+loop itself lives further down (tests the `--stream` serve path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.forecast import (CausalFitState, FORECASTER_MODES,
+                                 RowForecast, fit_causal_forecast,
+                                 fit_row_forecast, zero_row_forecast)
+from repro.fleet import sched as _sched
+from repro.fleet.scheduler import FleetScheduler
+from repro.fleet.workloads import har_workload, lm_workload
+from repro.launch.fleet import (build_dispatch_pool, make_power_matrix,
+                                trace_family_labels)
+
+DT = 0.01
+TRACES = ["SOR", "SIR", "RF", "SOM", "SIM"]
+
+
+def _bank(duration_s: float = 6.0, rows: int = 5, seed: int = 0):
+    return make_power_matrix(TRACES[:rows], rows, duration_s, DT, seed)
+
+
+def _chunkings(m: int, seed: int = 0):
+    """A few partitions of m columns: one shot, single columns, and a
+    random mixed chunking (sizes 1..17, exercising sub-order chunks)."""
+    rng = np.random.default_rng(seed)
+    mixed = []
+    left = m
+    while left > 0:
+        k = int(min(left, rng.integers(1, 18)))
+        mixed.append(k)
+        left -= k
+    return [[m], [1] * m, mixed]
+
+
+def _assert_rf_close(a: RowForecast, b: RowForecast, rtol=1e-7,
+                     atol=1e-10, exact=False):
+    assert a.order == b.order
+    for f in ("MU", "W", "THRESH", "HI", "LO"):
+        if exact:
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                          err_msg=f)
+        else:
+            np.testing.assert_allclose(getattr(a, f), getattr(b, f),
+                                       rtol=rtol, atol=atol, err_msg=f)
+    np.testing.assert_array_equal(a.model, b.model)
+
+
+# ---------------------------------------------------------------------------
+# windowed sufficient statistics == batch fit on the same prefix
+# ---------------------------------------------------------------------------
+
+
+class TestCausalSufficientStats:
+
+    @pytest.mark.parametrize("m", [64, 317])
+    def test_ou_chunked_matches_batch(self, m):
+        power = _bank()
+        prefix = power[:, :m]
+        batch = fit_row_forecast(prefix, "ou", 50)
+        for chunks in _chunkings(m, seed=m):
+            st = CausalFitState("ou", power.shape[0])
+            j = 0
+            for k in chunks:
+                st.update(prefix[:, j:j + k])
+                j += k
+            assert st.m == m
+            _assert_rf_close(st.compile(50), batch)
+
+    @pytest.mark.parametrize("order", [1, 3])
+    def test_arp_chunked_matches_batch(self, order):
+        power = _bank()
+        m = 201
+        prefix = power[:, :m]
+        batch = fit_row_forecast(prefix, "arp", 50, arp_order=order)
+        for chunks in _chunkings(m, seed=order):
+            st = CausalFitState("arp", power.shape[0], arp_order=order)
+            j = 0
+            for k in chunks:
+                st.update(prefix[:, j:j + k])
+                j += k
+            # raw-moment accumulation reassociates the sums, so demand
+            # tight agreement rather than bit equality
+            _assert_rf_close(st.compile(50), batch, rtol=1e-7, atol=1e-9)
+
+    @pytest.mark.parametrize("mode", ["occlusion", "burst", "auto"])
+    def test_buffered_modes_match_batch_exactly(self, mode):
+        power = _bank()
+        m = 150
+        prefix = power[:, :m]
+        families = trace_family_labels(TRACES, power.shape[0])
+        batch = fit_row_forecast(prefix, mode, 50, families=families)
+        st = CausalFitState(mode, power.shape[0], families=families)
+        for j in range(0, m, 13):
+            st.update(prefix[:, j:j + 13])
+        _assert_rf_close(st.compile(50), batch, exact=True)
+
+    def test_one_shot_wrapper_matches_state(self):
+        power = _bank()
+        prefix = power[:, :99]
+        for mode in FORECASTER_MODES:
+            a = fit_causal_forecast(prefix, mode, 25)
+            st = CausalFitState(mode, power.shape[0])
+            b = st.update(prefix).compile(25)
+            _assert_rf_close(a, b, exact=True)
+
+    def test_zero_prior_below_min_ticks(self):
+        power = _bank()
+        st = CausalFitState("ou", power.shape[0])
+        st.update(power[:, :st.min_ticks - 1])
+        rf = st.compile(50)
+        _assert_rf_close(rf, zero_row_forecast(power.shape[0], 1),
+                         exact=True)
+        # ... and one more column crosses the threshold
+        st.update(power[:, st.min_ticks - 1:st.min_ticks])
+        assert (st.compile(50).MU > 0).any()
+
+    def test_arp_min_ticks_scales_with_order(self):
+        st = CausalFitState("arp", 3, arp_order=9)
+        assert st.order == 9 and st.min_ticks == 11
+        assert CausalFitState("ou", 3).order == 1
+
+    def test_update_copies_its_input(self):
+        """The state must survive callers mutating the columns after
+        ``update`` — the streaming loop hands it views into the live
+        power bank."""
+        power = _bank()
+        cols = power[:, :64].copy()
+        for mode in ("ou", "arp", "auto"):
+            st = CausalFitState(mode, power.shape[0])
+            st.update(cols[:, :40])
+            st.update(cols[:, 40:])
+            before = st.compile(50)
+            cols *= 7.0
+            _assert_rf_close(st.compile(50), before, exact=True)
+            cols[:] = power[:, :64]
+
+    def test_update_validates_shape(self):
+        st = CausalFitState("ou", 4)
+        with pytest.raises(ValueError, match="columns"):
+            st.update(np.zeros((3, 10)))
+        with pytest.raises(ValueError, match="forecaster mode"):
+            CausalFitState("nope", 4)
+
+
+# ---------------------------------------------------------------------------
+# causality: a refit at tick k never reads power[:, k:]
+# ---------------------------------------------------------------------------
+
+
+def _causal_sched(power, n_workers=32, seed=0, forecaster="ou", **kw):
+    wls = [har_workload(), lm_workload()]
+    pool = build_dispatch_pool(power, DT, n_workers, wls, seed)
+    return pool, FleetScheduler(pool, wls, sched="forecast",
+                                forecaster=forecaster,
+                                forecaster_fit="causal", **kw)
+
+
+class TestCausalityRegression:
+
+    def test_causal_prior_is_zero_table(self):
+        power = _bank()
+        _, s = _causal_sched(power)
+        n = s.pool.params.n
+        np.testing.assert_array_equal(s.params.FC_MU, np.zeros(n))
+        np.testing.assert_array_equal(s.params.FC_W, np.zeros((n, 1)))
+        assert np.isinf(s.params.FC_THRESH).all()
+        np.testing.assert_array_equal(s.params.FC_HI, np.zeros(n))
+        np.testing.assert_array_equal(s.params.FC_LO, np.zeros(n))
+
+    @pytest.mark.parametrize("forecaster", ["ou", "arp", "auto"])
+    def test_refit_ignores_future_samples(self, forecaster):
+        """Two fleets whose banks agree on [:, :k] and disagree
+        everywhere after: after a causal refit at k, the compiled tables
+        and the planning budget must be exactly identical."""
+        power_a = _bank(duration_s=8.0)
+        k = 400
+        rng = np.random.default_rng(7)
+        power_b = power_a.copy()
+        power_b[:, k:] = rng.uniform(0.0, 1.0, power_b[:, k:].shape) \
+            * (3.0 * power_a.max())
+        fam = trace_family_labels(TRACES, power_a.shape[0])
+        pool_a, sa = _causal_sched(power_a, forecaster=forecaster,
+                                   trace_families=fam)
+        pool_b, sb = _causal_sched(power_b, forecaster=forecaster,
+                                   trace_families=fam)
+        assert sa.refit_forecast(k) and sb.refit_forecast(k)
+        for f in _sched.FC_FIELDS:
+            np.testing.assert_array_equal(getattr(sa.params, f),
+                                          getattr(sb.params, f),
+                                          err_msg=f)
+        # ... and so must the budget the dispatcher plans against
+        # (lags drawn from the observed prefix — phase=None keeps the
+        # cyclic gather inside [:, :k])
+        p = pool_a.params
+        budget = np.random.default_rng(1).uniform(
+            0.0, 1.0, p.n) * np.asarray(sa.params.ECAP)
+        out = []
+        for pool, s in ((pool_a, sa), (pool_b, sb)):
+            lags = _sched.power_lags(pool.params.power,
+                                     pool.params.trace_index, k - 1,
+                                     pool.params.T, s.params.fc_order)
+            out.append(np.asarray(_sched.plan_budget(s.params, budget,
+                                                     lags, p.eff)))
+        np.testing.assert_array_equal(out[0], out[1])
+
+    def test_full_fit_does_peek(self):
+        """The inverse control: with the offline ``full`` fit the same
+        future mutation DOES move the tables — the peeking the causal
+        path exists to remove (and what makes the test above falsifiable).
+        """
+        power_a = _bank(duration_s=8.0)
+        power_b = power_a.copy()
+        power_b[:, 400:] *= 5.0
+        wls = [har_workload()]
+        mu = []
+        for power in (power_a, power_b):
+            pool = build_dispatch_pool(power, DT, 16, wls, 0)
+            mu.append(FleetScheduler(pool, wls, sched="forecast",
+                                     forecaster_fit="full").params.FC_MU)
+        assert not np.array_equal(mu[0], mu[1])
+
+    def test_refit_matches_one_shot_prefix_fit(self):
+        power = _bank(duration_s=8.0)
+        pool, s = _causal_sched(power)
+        s.refit_forecast(150)
+        s.refit_forecast(390)  # incremental: absorbs [150, 390)
+        want = fit_causal_forecast(power[:, :390], "ou",
+                                   s.params.lookahead_ticks)
+        got = want.take(pool.params.trace_index)
+        np.testing.assert_allclose(s.params.FC_MU, got.MU, rtol=1e-9)
+        np.testing.assert_allclose(s.params.FC_W, got.W, rtol=1e-9)
+        # a second refit at the same tick is a no-op
+        fc = s.params.FC_W.copy()
+        s.refit_forecast(390)
+        np.testing.assert_array_equal(s.params.FC_W, fc)
+        assert s.observed_ticks == 390
+
+    def test_refit_clamps_to_trace_length(self):
+        power = _bank(duration_s=2.0)
+        _, s = _causal_sched(power)
+        assert s.refit_forecast(10 * power.shape[1])
+        assert s.observed_ticks == power.shape[1]
+
+    def test_refit_noop_without_causal_fit(self):
+        power = _bank()
+        wls = [har_workload()]
+        pool = build_dispatch_pool(power, DT, 16, wls, 0)
+        s = FleetScheduler(pool, wls, sched="forecast",
+                           forecaster_fit="full")
+        fc = s.params.FC_MU.copy()
+        assert not s.refit_forecast(200)
+        np.testing.assert_array_equal(s.params.FC_MU, fc)
+
+    def test_refit_keeps_compiled_scan_compatible(self):
+        """A refit must only rebind the FC tables — every other field
+        (identity for arrays, equality for scalars) stays put, which is
+        what lets the fused serve scan keep its compiled functions."""
+        power = _bank()
+        _, s = _causal_sched(power)
+        old = s.params
+        s.refit_forecast(300)
+        assert s.params is not old
+        assert _sched.sched_params_compatible(old, s.params)
+        assert not _sched.sched_params_compatible(None, s.params)
+        # genuinely different geometry is incompatible
+        other = dataclasses.replace(s.params, B=s.params.B + 1)
+        assert not _sched.sched_params_compatible(s.params, other)
+        # an FC table of different order (shape) is incompatible too
+        wider = dataclasses.replace(
+            s.params, FC_W=np.zeros((s.params.FC_W.shape[0], 4)))
+        assert not _sched.sched_params_compatible(s.params, wider)
+
+    def test_make_sched_params_rejects_unknown_fit(self):
+        power = _bank()
+        wls = [har_workload()]
+        pool = build_dispatch_pool(power, DT, 8, wls, 0)
+        with pytest.raises(ValueError, match="forecaster_fit"):
+            FleetScheduler(pool, wls, sched="forecast",
+                           forecaster_fit="clairvoyant")
