@@ -253,24 +253,29 @@ class JaxFleetBackend:
             return self._run_serve_sharded(
                 state, sp, sched_state, arrivals, i0=i0,
                 dispatch_every=int(dispatch_every), obs=obs)
+        from repro.fleet import sched as S
         arrivals = np.asarray(arrivals, dtype=np.int64)
         n_ticks = arrivals.shape[0]
         op = None if obs is None else obs.op
         key = (n_ticks, int(dispatch_every), op)
-        if self._serve_sp is not sp:  # new control-plane config: re-trace
+        # a causal refit only rebinds the FC_* forecast tables, which
+        # enter the compiled launch as runtime arguments — every other
+        # change to the control-plane config forces a re-trace
+        if not S.sched_params_compatible(self._serve_sp, sp):
             self._serve_compiled = {}
-            self._serve_sp = sp
+        self._serve_sp = sp
         with enable_x64():
             fs = tuple(jnp.asarray(x) for x in state_as_tuple(state))
             ss = tuple(jnp.asarray(x)
                        for x in sched_state_as_tuple(sched_state))
+            pw = {f: jnp.asarray(getattr(sp, f)) for f in S.FC_FIELDS}
             fn = self._serve_compiled.get(key)
             if fn is None:
                 fn = self._build_serve(sp, n_ticks, int(dispatch_every),
                                        op=op)
                 self._serve_compiled[key] = fn
             if op is None:
-                fs, ss = fn(fs, ss, jnp.asarray(arrivals),
+                fs, ss = fn(fs, ss, pw, jnp.asarray(arrivals),
                             jnp.asarray(i0, jnp.int64))
             else:
                 from repro.obs.state import (ring_as_tuple,
@@ -282,7 +287,7 @@ class JaxFleetBackend:
                 ring = (None if obs.ring is None else
                         tuple(jnp.asarray(x)
                               for x in ring_as_tuple(obs.ring)))
-                fs, ss, tele, ring = fn(fs, ss, tele, ring,
+                fs, ss, tele, ring = fn(fs, ss, tele, ring, pw,
                                         jnp.asarray(arrivals),
                                         jnp.asarray(i0, jnp.int64))
                 obs.tele = tele_from_tuple(
@@ -427,20 +432,33 @@ class JaxFleetBackend:
         from repro.fleet import sched as S
         obs_cs = (self._power_cumsum()
                   if op is not None and sp.forecast else None)
-        body = self._serve_body(self, sp, dispatch_every, op=op,
-                                obs_cs=obs_cs)
+
+        # the FC_* forecast tables arrive as the runtime `pw` dict (the
+        # streaming loop's causal refits swap them between chunks without
+        # re-tracing); the body closure is built inside the traced
+        # function so the scheduler passes read the traced tables, while
+        # every other SchedParams field stays a baked constant
+        def make_body(pw):
+            spt = dataclasses.replace(sp, **pw)
+            return self._serve_body(self, spt, dispatch_every, op=op,
+                                    obs_cs=obs_cs)
 
         if op is None:
-            def serve_fn(fs, ss, arr, i0):
+            def serve_fn(fs, ss, pw, arr, i0):
                 xs = (i0 + jnp.arange(n_ticks, dtype=jnp.int64), arr)
-                (fs, ss), _ = lax.scan(body, (fs, S.SS(*ss)), xs)
+                (fs, ss), _ = lax.scan(make_body(pw), (fs, S.SS(*ss)),
+                                       xs)
                 return fs, tuple(ss)
         else:
-            def serve_fn(fs, ss, tele, ring, arr, i0):
-                idx = jnp.arange(n_ticks, dtype=jnp.int64)
-                xs = (i0 + idx, idx, arr)
+            def serve_fn(fs, ss, tele, ring, pw, arr, i0):
+                # the obs tick index j is GLOBAL (i0 + local), matching
+                # the host drivers' j=i: windowed telemetry and ring
+                # timestamps stay chunk-invariant when a serve trace is
+                # split across multiple launches
+                idx = i0 + jnp.arange(n_ticks, dtype=jnp.int64)
+                xs = (idx, idx, arr)
                 ((fs, ss), (tele, ring)), _ = lax.scan(
-                    body, ((fs, S.SS(*ss)), (tele, ring)), xs)
+                    make_body(pw), ((fs, S.SS(*ss)), (tele, ring)), xs)
                 return fs, tuple(ss), tele, ring
 
         return jax.jit(serve_fn)
@@ -494,9 +512,11 @@ class JaxFleetBackend:
         arr = S.split_counts(arrivals, K)  # (K, n_ticks, W)
         op = None if obs is None else obs.op
         key = (n_ticks, int(dispatch_every), op, "sharded", use_mesh)
-        if self._serve_sp is not sp:  # new control-plane config: re-trace
+        # per-worker tables (FC_* included) already enter as runtime
+        # inputs via sh["sp"], so a causal refit keeps the trace
+        if not S.sched_params_compatible(self._serve_sp, sp):
             self._serve_compiled = {}
-            self._serve_sp = sp
+        self._serve_sp = sp
 
         def resh(x):
             a = np.asarray(x)
@@ -608,9 +628,10 @@ class JaxFleetBackend:
                                        (i0 + idx, arr))
                 return fs, tuple(ss)
             tele = tuple(jnp.zeros(s, d) for s, d in tele_tmpl)
+            # global obs index j = i0 + local, matching the host twin
             ((fs, ss), (tele, _)), _ = lax.scan(
                 body, ((fs, S.SS(*ss)), (tele, None)),
-                (i0 + idx, idx, arr))
+                (i0 + idx, i0 + idx, arr))
             return fs, tuple(ss), tele
 
         if use_mesh:

@@ -31,7 +31,7 @@ import collections
 import numpy as np
 
 from repro.fleet import backend_numpy, sched as _sched
-from repro.fleet.metrics import sched_summary
+from repro.fleet.metrics import _hist_percentile, sched_summary
 from repro.fleet.state import (STATE_FIELDS, sched_state_as_tuple,
                                sched_state_from_tuple)
 from repro.fleet.worker import EMIT, FleetWorkerPool
@@ -296,154 +296,388 @@ def _slice_state(s, sl: slice) -> _FS:
     return _FS(*(getattr(s, f)[sl] for f in STATE_FIELDS))
 
 
-def _run_fleet_numpy_sharded(pool: FleetWorkerPool,
-                             sched: FleetScheduler,
-                             stream: RequestStream, n_steps: int,
-                             dispatch_every: int, obs) -> dict:
-    """NumPy host twin of the sharded serve scan (``--mesh-fleet K``).
+class _ShardedHostServe:
+    """NumPy host twin of the sharded serve scan (``--mesh-fleet K``),
+    restructured around :meth:`window` so the streaming loop can drive
+    it chunk-by-chunk with full state carried across chunk boundaries.
 
     The device physics stays full-fleet — the tick is embarrassingly
     parallel over workers, so one ``pool.step`` per tick is already
     bit-identical to K shard-local ticks. Only the control plane loops
     the K contiguous shard slices: per-shard admission (deterministic
-    ``split_counts`` arrival split), shed/plan/dispatch/collect/evict
-    against each shard's params view, the all-integer work-stealing
-    exchange via :func:`repro.fleet.sched.rebalance_host`, and (in tele
-    mode) K per-shard telemetry states summed at the end — every
-    channel is a scatter-add, so the shard sum equals the global
-    counters. This is the reference the traced ``shard_map``/``vmap``
-    path is gated against bit-for-bit.
+    ``split_counts`` arrival split — elementwise, so splitting each
+    chunk equals slicing the full split), shed/plan/dispatch/collect/
+    evict against each shard's params view, the all-integer
+    work-stealing exchange via :func:`repro.fleet.sched.rebalance_host`,
+    and (in tele mode) K per-shard telemetry states summed into
+    ``obs.tele`` at each window end — every channel is an int64
+    scatter-add, so the per-window shard sums accumulate to exactly the
+    whole-trace counters. This is the reference the traced
+    ``shard_map``/``vmap`` path is gated against bit-for-bit.
+
+    Each :meth:`window` call re-reads ``sched.params`` (a causal refit
+    between chunks swaps the ``FC_*`` tables) and restacks the
+    per-shard scheduler states into ``sched.state`` on exit, so the
+    carried state is exactly the (K, ...) stacked form the fused scan
+    uses.
     """
-    sp = sched.params
-    p = pool.params
-    K = sp.shards
-    ns = p.n // K
-    dt = pool.dt
-    if sp.rebalance_every and (sp.rebalance_every % dispatch_every):
-        raise ValueError(
-            f"rebalance_every={sp.rebalance_every} ticks must be a "
-            f"positive multiple of dispatch_every={dispatch_every}: "
-            "the work-stealing exchange runs inside the dispatch pass")
-    if obs is not None and obs.op.mode != "tele":
-        raise ValueError(
-            "--obs trace keeps a global per-worker event ring and is "
-            "not supported under --mesh-fleet > 1; use --obs tele "
-            "(windowed counters reduce exactly across shards)")
-    sps = [_sched.shard_sched_params(sp, s) for s in range(K)]
-    sls = [slice(s * ns, (s + 1) * ns) for s in range(K)]
-    split = _sched.split_counts(stream.counts_matrix(sp.W)[:n_steps], K)
-    st = sched.state
-    sss = [_sched.SS(*(np.asarray(getattr(st, f))[s]
-                       for f in _sched.SCHED_FIELDS))
-           for s in range(K)]
-    dev = pool.state
-    if obs is not None:
-        from repro.obs import telemetry as O
-        from repro.obs.state import (init_tele, tele_as_tuple,
-                                     tele_from_tuple)
-        base = tele_as_tuple(init_tele(obs.op))
-        teles = [tuple(np.zeros_like(np.asarray(x)) for x in base)
-                 for _ in range(K)]
-    for i in range(n_steps):
-        t = i * dt
-        is_tick = i % dispatch_every == 0
+
+    def __init__(self, pool: FleetWorkerPool, sched: FleetScheduler,
+                 dispatch_every: int, obs):
+        sp = sched.params
+        p = pool.params
+        if sp.rebalance_every and (sp.rebalance_every % dispatch_every):
+            raise ValueError(
+                f"rebalance_every={sp.rebalance_every} ticks must be a "
+                f"positive multiple of dispatch_every={dispatch_every}:"
+                " the work-stealing exchange runs inside the dispatch "
+                "pass")
+        if obs is not None and obs.op.mode != "tele":
+            raise ValueError(
+                "--obs trace keeps a global per-worker event ring and "
+                "is not supported under --mesh-fleet > 1; use --obs "
+                "tele (windowed counters reduce exactly across shards)")
+        self.pool = pool
+        self.sched = sched
+        self.dispatch_every = dispatch_every
+        self.obs = obs
+        self.K = sp.shards
+        self.ns = p.n // self.K
+        self.sls = [slice(s * self.ns, (s + 1) * self.ns)
+                    for s in range(self.K)]
+
+    def window(self, counts: np.ndarray, i0: int) -> None:
+        """Serve ticks ``[i0, i0 + counts.shape[0])`` with per-tick
+        arrival counts ``counts`` ((k, W) int64), mutating pool and
+        scheduler state in place."""
+        pool, sched, obs = self.pool, self.sched, self.obs
+        K, ns, sls = self.K, self.ns, self.sls
+        dispatch_every = self.dispatch_every
+        sp = sched.params  # re-read: causal refits swap the FC_* tables
+        p = pool.params
+        dt = pool.dt
+        sps = [_sched.shard_sched_params(sp, s) for s in range(K)]
+        split = _sched.split_counts(np.asarray(counts, np.int64), K)
+        st = sched.state
+        sss = [_sched.SS(*(np.asarray(getattr(st, f))[s]
+                           for f in _sched.SCHED_FIELDS))
+               for s in range(K)]
+        dev = pool.state
         if obs is not None:
-            begins = [(O.dev_snap(_slice_state(dev, sl), copy=True),
-                       O.sched_snap(sss[s], np))
-                      for s, sl in enumerate(sls)]
-            assigns = [np.zeros(ns, dtype=bool) for _ in range(K)]
-            assign_wls = [np.zeros(ns, dtype=np.int64)
-                          for _ in range(K)]
-        for s in range(K):
-            sss[s] = _sched.admit(sps[s], sss[s], split[s, i], t, np)
-        if is_tick:
-            budget_now = backend_numpy.usable_energy(p, dev)
-            plans = []
+            from repro.obs import telemetry as O
+            from repro.obs.state import (init_tele, tele_as_tuple,
+                                         tele_from_tuple)
+            base = tele_as_tuple(init_tele(obs.op))
+            teles = [tuple(np.zeros_like(np.asarray(x)) for x in base)
+                     for _ in range(K)]
+        for j in range(split.shape[1]):
+            i = i0 + j
+            t = i * dt
+            is_tick = i % dispatch_every == 0
+            if obs is not None:
+                begins = [(O.dev_snap(_slice_state(dev, sl), copy=True),
+                           O.sched_snap(sss[s], np))
+                          for s, sl in enumerate(sls)]
+                assigns = [np.zeros(ns, dtype=bool) for _ in range(K)]
+                assign_wls = [np.zeros(ns, dtype=np.int64)
+                              for _ in range(K)]
+            for s in range(K):
+                sss[s] = _sched.admit(sps[s], sss[s], split[s, j], t,
+                                      np)
+            if is_tick:
+                budget_now = backend_numpy.usable_energy(p, dev)
+                plans = []
+                for s, sl in enumerate(sls):
+                    sss[s] = _sched.shed(sps[s], sss[s], t, np)
+                    pw_lags = _sched.power_lags(
+                        p.power, p.trace_index[sl], i, p.T, sp.fc_order,
+                        phase=None if p.phase is None else p.phase[sl],
+                        xp=np)
+                    plans.append(_sched.plan_budget(
+                        sps[s], budget_now[sl], pw_lags, p.eff, np))
+                if sp.rebalance_every and i % sp.rebalance_every == 0:
+                    sss = _sched.rebalance_host(sps, sss, plans)
+                mask_f = np.zeros(p.n, dtype=bool)
+                wl_f = np.zeros(p.n, dtype=np.int64)
+                units_f = np.zeros(p.n, dtype=np.int64)
+                batch_f = np.zeros(p.n, dtype=np.int64)
+                for s, sl in enumerate(sls):
+                    dispatchable = (dev.on & ~dev.has_work
+                                    & ~dev.p_pending)[sl]
+                    sss[s], a = _sched.dispatch(
+                        sps[s], sss[s], dispatchable, budget_now[sl],
+                        plans[s], t, np)
+                    mask_f[sl] = a.mask
+                    wl_f[sl] = a.wl
+                    units_f[sl] = a.units
+                    batch_f[sl] = a.batch
+                # one full-width write round, the exact expressions (and
+                # dtype promotions) of FleetScheduler.dispatch
+                dev.p_pending = dev.p_pending | mask_f
+                dev.p_wl = np.where(mask_f, wl_f, dev.p_wl)
+                dev.p_units = np.where(mask_f, units_f, dev.p_units)
+                dev.p_batch = np.where(mask_f, np.maximum(batch_f, 1),
+                                       dev.p_batch)
+                dev.p_t_assigned = np.where(mask_f, float(t),
+                                            dev.p_t_assigned)
+                if obs is not None:
+                    for s, sl in enumerate(sls):
+                        assigns[s] = (dev.p_pending[sl]
+                                      & ~begins[s][0].p_pending)
+                        assign_wls[s] = dev.p_wl[sl].copy()
+            pool.step(i)
+            if obs is not None:
+                pre_evict = dev.p_pending | dev.has_work
+            emit = np.zeros(p.n, dtype=bool)
+            lost = np.zeros(p.n, dtype=bool)
+            units = np.zeros(p.n, dtype=np.int64)
+            for ev in pool.pop_events():
+                w = int(ev[2])
+                if ev[0] == EMIT:
+                    emit[w] = True
+                    units[w] = int(ev[4])
+                else:
+                    lost[w] = True
             for s, sl in enumerate(sls):
-                sss[s] = _sched.shed(sps[s], sss[s], t, np)
-                pw_lags = _sched.power_lags(
-                    p.power, p.trace_index[sl], i, p.T, sp.fc_order,
-                    phase=None if p.phase is None else p.phase[sl],
-                    xp=np)
-                plans.append(_sched.plan_budget(
-                    sps[s], budget_now[sl], pw_lags, p.eff, np))
-            if sp.rebalance_every and i % sp.rebalance_every == 0:
-                sss = _sched.rebalance_host(sps, sss, plans)
-            mask_f = np.zeros(p.n, dtype=bool)
-            wl_f = np.zeros(p.n, dtype=np.int64)
-            units_f = np.zeros(p.n, dtype=np.int64)
-            batch_f = np.zeros(p.n, dtype=np.int64)
-            for s, sl in enumerate(sls):
-                dispatchable = (dev.on & ~dev.has_work
-                                & ~dev.p_pending)[sl]
-                sss[s], a = _sched.dispatch(
-                    sps[s], sss[s], dispatchable, budget_now[sl],
-                    plans[s], t, np)
-                mask_f[sl] = a.mask
-                wl_f[sl] = a.wl
-                units_f[sl] = a.units
-                batch_f[sl] = a.batch
-            # one full-width write round, the exact expressions (and
-            # dtype promotions) of FleetScheduler.dispatch
-            dev.p_pending = dev.p_pending | mask_f
-            dev.p_wl = np.where(mask_f, wl_f, dev.p_wl)
-            dev.p_units = np.where(mask_f, units_f, dev.p_units)
-            dev.p_batch = np.where(mask_f, np.maximum(batch_f, 1),
-                                   dev.p_batch)
-            dev.p_t_assigned = np.where(mask_f, float(t),
-                                        dev.p_t_assigned)
+                sss[s] = _sched.collect(sps[s], sss[s], emit[sl],
+                                        lost[sl], units[sl], t, np)
+            if is_tick:
+                evm_f = np.zeros(p.n, dtype=bool)
+                for s, sl in enumerate(sls):
+                    sss[s], evm = _sched.evict(sps[s], sss[s], t, np)
+                    evm_f[sl] = evm
+                dev.p_pending = dev.p_pending & ~evm_f
+                dev.has_work = dev.has_work & ~evm_f
             if obs is not None:
                 for s, sl in enumerate(sls):
-                    assigns[s] = (dev.p_pending[sl]
-                                  & ~begins[s][0].p_pending)
-                    assign_wls[s] = dev.p_wl[sl].copy()
+                    col = ((i % p.T) if p.phase is None
+                           else (i + p.phase[sl]) % p.T)
+                    pw = p.power[p.trace_index[sl], col]
+                    evict_mask = (pre_evict[sl]
+                                  & ~(dev.p_pending[sl]
+                                      | dev.has_work[sl]))
+                    teles[s], _ = O.obs_tick(
+                        obs.op, sps[s], teles[s], None, i=i, j=i,
+                        is_tick=is_tick, pw=pw, eff=p.eff, dt=p.dt,
+                        b=begins[s][0], sb=begins[s][1],
+                        assign_mask=assigns[s],
+                        assign_wl=assign_wls[s],
+                        evict_mask=evict_mask,
+                        fs=_slice_state(dev, sl), ss=sss[s],
+                        power=p.power, cs=obs.cs,
+                        trace_index=p.trace_index[sl],
+                        phase=None if p.phase is None else p.phase[sl],
+                        T=p.T, xp=np)
+        sched.state = sched_state_from_tuple(tuple(
+            np.stack([np.asarray(getattr(ss_, f)) for ss_ in sss])
+            for f in _sched.SCHED_FIELDS))
+        if obs is not None:
+            obs.tele = tele_from_tuple(tuple(
+                np.asarray(o) + sum(np.asarray(tl[k]) for tl in teles)
+                for k, o in enumerate(tele_as_tuple(obs.tele))))
+
+
+def _run_fleet_numpy_sharded(pool: FleetWorkerPool,
+                             sched: FleetScheduler,
+                             stream: RequestStream, n_steps: int,
+                             dispatch_every: int, obs) -> dict:
+    """Whole-trace entry over :class:`_ShardedHostServe` — one window
+    covering the full serve trace (the offline reference cadence)."""
+    serve = _ShardedHostServe(pool, sched, dispatch_every, obs)
+    serve.window(stream.counts_matrix(sched.params.W)[:n_steps], 0)
+    return sched.summary(n_steps * pool.dt)
+
+
+def _run_fleet_numpy_window(pool: FleetWorkerPool,
+                            sched: FleetScheduler, counts: np.ndarray,
+                            i0: int, dispatch_every: int, obs) -> None:
+    """One chunk of the unsharded NumPy reference loop: serve ticks
+    ``[i0, i0 + counts.shape[0])`` with per-tick arrival counts
+    ``counts`` ((k, W) int64). Identical per-tick cadence to
+    :func:`run_fleet`'s host loop — admission takes the count row
+    directly (``submit`` reduces workload ids to exactly this bincount,
+    and an all-zero row is the same no-op as an empty arrival slice),
+    and the tick index stays GLOBAL so harvest columns, dispatch/evict
+    phase, and shed deadlines are chunk-invariant."""
+    counts = np.asarray(counts, dtype=np.int64)
+    dt = pool.dt
+    for j in range(counts.shape[0]):
+        i = i0 + j
+        t = i * dt
+        if obs is not None:
+            obs.host_begin(pool.state, sched.state)
+        c = counts[j]
+        if c.any():
+            sched._store(_sched.admit(sched.params, sched._ss(), c,
+                                      float(t), np))
+        tick = i % dispatch_every == 0
+        if tick:
+            sched.dispatch(t, i)
+            if obs is not None:
+                obs.host_after_dispatch(pool.state)
         pool.step(i)
         if obs is not None:
-            pre_evict = dev.p_pending | dev.has_work
-        emit = np.zeros(p.n, dtype=bool)
-        lost = np.zeros(p.n, dtype=bool)
-        units = np.zeros(p.n, dtype=np.int64)
-        for ev in pool.pop_events():
-            w = int(ev[2])
-            if ev[0] == EMIT:
-                emit[w] = True
-                units[w] = int(ev[4])
-            else:
-                lost[w] = True
-        for s, sl in enumerate(sls):
-            sss[s] = _sched.collect(sps[s], sss[s], emit[sl], lost[sl],
-                                    units[sl], t, np)
-        if is_tick:
-            evm_f = np.zeros(p.n, dtype=bool)
-            for s, sl in enumerate(sls):
-                sss[s], evm = _sched.evict(sps[s], sss[s], t, np)
-                evm_f[sl] = evm
-            dev.p_pending = dev.p_pending & ~evm_f
-            dev.has_work = dev.has_work & ~evm_f
+            obs.host_before_evict(pool.state)
+        sched.collect(t, evict=tick)
         if obs is not None:
-            for s, sl in enumerate(sls):
-                col = ((i % p.T) if p.phase is None
-                       else (i + p.phase[sl]) % p.T)
-                pw = p.power[p.trace_index[sl], col]
-                evict_mask = (pre_evict[sl]
-                              & ~(dev.p_pending[sl]
-                                  | dev.has_work[sl]))
-                teles[s], _ = O.obs_tick(
-                    obs.op, sps[s], teles[s], None, i=i, j=i,
-                    is_tick=is_tick, pw=pw, eff=p.eff, dt=p.dt,
-                    b=begins[s][0], sb=begins[s][1],
-                    assign_mask=assigns[s], assign_wl=assign_wls[s],
-                    evict_mask=evict_mask,
-                    fs=_slice_state(dev, sl), ss=sss[s],
-                    power=p.power, cs=obs.cs,
-                    trace_index=p.trace_index[sl],
-                    phase=None if p.phase is None else p.phase[sl],
-                    T=p.T, xp=np)
-    sched.state = sched_state_from_tuple(tuple(
-        np.stack([np.asarray(getattr(ss_, f)) for ss_ in sss])
-        for f in _sched.SCHED_FIELDS))
-    if obs is not None:
-        obs.tele = tele_from_tuple(tuple(
-            np.asarray(o) + sum(np.asarray(tl[k]) for tl in teles)
-            for k, o in enumerate(tele_as_tuple(obs.tele))))
-    return sched.summary(n_steps * dt)
+            obs.host_end(i, tick, pool.state, sched.state)
+
+
+class StreamClient:
+    """Live request generator: a background producer thread feeds
+    per-tick ``(W,)`` arrival-count rows into a bounded queue, and the
+    serve loop's :meth:`take` blocks for the next chunk — the MaxText
+    offline-inference pattern of a host-side arrival queue decoupling
+    request generation from the compiled serve launches.
+
+    Rows come from the same deterministic ``RequestStream`` counts
+    matrix the offline path consumes, in order, so a streamed run is
+    row-for-row identical to the offline arrivals — that determinism is
+    what lets the differential suite pin chunked == whole-trace
+    bit-equality through the live client too.
+    """
+
+    def __init__(self, stream: RequestStream, n_workloads: int,
+                 n_steps: int | None = None, max_buffer: int = 4096):
+        import queue
+        import threading
+        counts = stream.counts_matrix(n_workloads)
+        if n_steps is not None:
+            counts = counts[:n_steps]
+        self.n_steps = counts.shape[0]
+        self.n_workloads = int(n_workloads)
+        self._q = queue.Queue(maxsize=max_buffer)
+        self._thread = threading.Thread(
+            target=self._feed, args=(counts,), daemon=True)
+        self._thread.start()
+
+    def _feed(self, counts: np.ndarray) -> None:
+        for row in counts:
+            self._q.put(row)
+
+    def take(self, k: int) -> np.ndarray:
+        """Block until the next ``k`` arrival rows are available and
+        return them stacked as a (k, W) int64 matrix."""
+        return np.stack([self._q.get() for _ in range(k)]).astype(
+            np.int64)
+
+
+_CHUNK_COUNTERS = ("submitted", "completed", "shed", "rejected",
+                   "lost", "evicted", "requeued", "lat_sum")
+
+
+def _chunk_snapshot(state) -> dict:
+    v = _sched.merged_sched_view(state)
+    snap = {f: int(getattr(v, f)) for f in _CHUNK_COUNTERS
+            if f != "lat_sum"}
+    snap["lat_sum"] = float(np.asarray(v.lat_sum))
+    snap["lat_hist"] = np.asarray(v.lat_hist).copy()
+    return snap
+
+
+def run_fleet_stream(pool: FleetWorkerPool, sched: FleetScheduler,
+                     source, n_steps: int, *, chunk_ticks: int,
+                     dispatch_every: int = 10, refit_every: int = 0,
+                     obs=None, slo_p95_s: float = 0.0) -> dict:
+    """Streaming online serve: the chunked steady-state loop.
+
+    Scans a fixed window of ``chunk_ticks`` ticks per launch, carrying
+    the full (FleetState, SchedState, TeleState) across chunk
+    boundaries, and injects host-submitted arrivals between chunks —
+    ``source`` is either a live :class:`StreamClient` (its ``take``
+    blocks on the producer thread) or an offline :class:`RequestStream`
+    (rows sliced from the counts matrix). The final, possibly shorter,
+    chunk covers the trace remainder, so ``chunk_ticks`` need not
+    divide ``n_steps``.
+
+    With a JAX pool each chunk is one fused ``run_serve`` launch
+    (``i0 = pool.steps_done`` keeps harvest columns and obs indices
+    global); equal-size chunks reuse a single compiled function, and a
+    causal refit between chunks swaps only the runtime ``FC_*``
+    tables — no re-trace. With a NumPy pool the chunk runs through the
+    per-tick reference loop (sharded pools through the
+    :class:`_ShardedHostServe` window driver). When the arrival rows
+    are identical and ``refit_every`` is 0, the chunked run is
+    **bit-exact** with the whole-trace launch on every summary field —
+    the differential suite in tests/test_streaming.py pins this.
+
+    ``refit_every`` (ticks; 0 = off) triggers
+    :meth:`FleetScheduler.refit_forecast` at the first chunk boundary
+    at least that many ticks after the previous refit — the causal,
+    prefix-only re-estimation of the forecaster tables from the harvest
+    actually observed so far.
+
+    The returned summary carries a ``"stream"`` block: per-chunk
+    latency/throughput records (p50/p95/p99 from the latency histogram
+    delta), refit count, and — when ``slo_p95_s`` > 0 — a per-chunk
+    p95 SLO verdict and total violation count. Wall-clock fields are
+    nondeterministic; equality checks strip the block.
+    """
+    import time
+    if chunk_ticks <= 0:
+        raise ValueError(f"chunk_ticks={chunk_ticks} must be positive")
+    dt = pool.dt
+    sp = sched.params
+    is_jax = getattr(pool, "backend", "numpy") == "jax"
+    sharded = sched.params.shards > 1
+    host_serve = None
+    if not is_jax and sharded:
+        host_serve = _ShardedHostServe(pool, sched, dispatch_every, obs)
+    counts_all = None
+    if not hasattr(source, "take"):
+        counts_all = source.counts_matrix(sp.W)[:n_steps]
+    chunks = []
+    done = 0
+    last_refit = 0
+    refits = 0
+    violations = 0
+    while done < n_steps:
+        k = min(int(chunk_ticks), n_steps - done)
+        counts = (source.take(k) if counts_all is None
+                  else counts_all[done:done + k])
+        before = _chunk_snapshot(sched.state)
+        t0 = time.perf_counter()
+        if is_jax:
+            pool.run_serve(sched, counts, dispatch_every=dispatch_every,
+                           obs=obs)
+        elif sharded:
+            host_serve.window(counts, done)
+        else:
+            _run_fleet_numpy_window(pool, sched, counts, done,
+                                    dispatch_every, obs)
+        wall = time.perf_counter() - t0
+        after = _chunk_snapshot(sched.state)
+        hist = after["lat_hist"] - before["lat_hist"]
+        completed = after["completed"] - before["completed"]
+        lat_sum = after["lat_sum"] - before["lat_sum"]
+        rec = {"tick0": done, "ticks": k,
+               "wall_s": wall,
+               "throughput_rps": completed / (k * dt),
+               "mean_latency_s": (lat_sum / completed
+                                  if completed else 0.0),
+               "p50_s": _hist_percentile(hist, sp.lat_max_s, 0.50),
+               "p95_s": _hist_percentile(hist, sp.lat_max_s, 0.95),
+               "p99_s": _hist_percentile(hist, sp.lat_max_s, 0.99)}
+        for f in _CHUNK_COUNTERS:
+            if f != "lat_sum":
+                rec[f] = after[f] - before[f]
+        if slo_p95_s > 0.0:
+            rec["slo_ok"] = bool(rec["p95_s"] <= slo_p95_s)
+            violations += not rec["slo_ok"]
+        chunks.append(rec)
+        done += k
+        if (refit_every and done < n_steps
+                and done - last_refit >= refit_every):
+            if sched.refit_forecast(done):
+                refits += 1
+            last_refit = done
+    summary = sched.summary(n_steps * dt)
+    summary["stream"] = {"chunk_ticks": int(chunk_ticks),
+                         "refit_every": int(refit_every),
+                         "refits": refits,
+                         "n_chunks": len(chunks),
+                         "chunks": chunks}
+    if slo_p95_s > 0.0:
+        summary["stream"]["slo_p95_s"] = float(slo_p95_s)
+        summary["stream"]["slo_violations"] = violations
+    return summary

@@ -138,7 +138,10 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   obs_print: bool = False, kernel: str = "xla",
                   mesh_fleet: int = 1, rebalance_every_s: float = 0.0,
                   rebalance_max: int = 8,
-                  fleet_placement: str = "auto") -> dict:
+                  fleet_placement: str = "auto",
+                  stream_mode: bool = False, chunk_ticks: int = 0,
+                  refit_every_s: float = 0.0,
+                  slo_p95_s: float = 0.0) -> dict:
     pool = build_dispatch_pool(power, dt, n_workers, workloads, seed,
                                backend=backend, capacitance_f=capacitance_f,
                                v_max=v_max, active_power_w=active_power_w,
@@ -164,8 +167,21 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                              window=max(int(round(obs_window_s / dt)), 1),
                              ring=obs_ring)
     stream = RequestStream(rate_rps, mix, n_steps, dt, seed=seed + 1)
-    summary = run_fleet(pool, scheduler, stream, n_steps,
-                        dispatch_every=dispatch_every, obs=obs)
+    if stream_mode:
+        # streaming online serve: a live client thread feeds arrival
+        # rows into the chunked steady-state loop (chunk boundaries are
+        # where causal refits and per-chunk SLO records happen)
+        from repro.fleet.scheduler import StreamClient, run_fleet_stream
+        client = StreamClient(stream, scheduler.params.W, n_steps)
+        summary = run_fleet_stream(
+            pool, scheduler, client, n_steps,
+            chunk_ticks=chunk_ticks or max(n_steps // 8, 1),
+            dispatch_every=dispatch_every,
+            refit_every=int(round(refit_every_s / dt)), obs=obs,
+            slo_p95_s=slo_p95_s)
+    else:
+        summary = run_fleet(pool, scheduler, stream, n_steps,
+                            dispatch_every=dispatch_every, obs=obs)
     summary["mode"] = "scheduled"
     summary["sched"] = sched
     summary["forecaster"] = forecaster
@@ -335,6 +351,29 @@ def main(argv: list[str] | None = None) -> dict:
                          "zero-inflow prior and refit from only the "
                          "observed prefix at streaming chunk boundaries "
                          "(causal; pair with --stream --refit-every)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming online serve: a live client thread "
+                         "feeds arrivals into the chunked steady-state "
+                         "loop (fixed window per launch, full state "
+                         "carried across chunk boundaries). Bit-exact "
+                         "with the whole-trace launch when no refits "
+                         "fire; per-chunk latency records land in the "
+                         "summary's 'stream' block")
+    ap.add_argument("--chunk-ticks", type=int, default=0,
+                    help="ticks per streaming chunk (--stream; 0 picks "
+                         "n_steps/8). Need not divide the trace length "
+                         "— the final chunk covers the remainder")
+    ap.add_argument("--refit-every", type=float, default=0.0,
+                    help="causal forecaster refit cadence in seconds "
+                         "(--stream with --forecaster-fit causal; 0: "
+                         "off). Refits at chunk boundaries from only "
+                         "the observed harvest prefix and swaps the "
+                         "forecast tables without re-tracing the scan")
+    ap.add_argument("--slo-p95", type=float, default=0.0,
+                    help="per-chunk p95 latency SLO in seconds "
+                         "(--stream; 0: off): each chunk record gets a "
+                         "verdict and the stream block counts "
+                         "violations")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--shed-after", type=float, default=30.0)
     ap.add_argument("--obs", choices=("off", "tele", "trace"),
@@ -394,7 +433,9 @@ def main(argv: list[str] | None = None) -> dict:
             trace_out=args.trace_out, obs_print=True, kernel=args.kernel,
             mesh_fleet=args.mesh_fleet,
             rebalance_every_s=args.rebalance_every,
-            fleet_placement=args.fleet_placement)
+            fleet_placement=args.fleet_placement,
+            stream_mode=args.stream, chunk_ticks=args.chunk_ticks,
+            refit_every_s=args.refit_every, slo_p95_s=args.slo_p95)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(
             power, args.dt, args.workers, workloads, mix=mix,

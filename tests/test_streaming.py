@@ -297,3 +297,324 @@ class TestCausalityRegression:
         with pytest.raises(ValueError, match="forecaster_fit"):
             FleetScheduler(pool, wls, sched="forecast",
                            forecaster_fit="clairvoyant")
+
+
+# ---------------------------------------------------------------------------
+# streaming serve differential suite: chunked == whole-trace, everywhere
+# ---------------------------------------------------------------------------
+
+import json
+
+from repro.fleet.scheduler import (RequestStream, StreamClient,
+                                   run_fleet, run_fleet_stream)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:
+    _HAS_HYPOTHESIS = False
+
+
+def _mk_serve(backend, n_workers=16, duration_s=8.0, seed=0, shards=1,
+              kernel="xla", placement="auto", rebalance_every=0,
+              forecaster="ou", forecaster_fit="full", arrival_seed=1,
+              rate_scale=8.0):
+    """One (pool, scheduler, stream, n_steps) serve fixture. Separate
+    calls with the same arguments are bit-identical initial states, so
+    a whole-trace run and a chunked run start from the same world."""
+    n_steps = int(round(duration_s / DT))
+    n_rows = min(8, n_workers)
+    power = make_power_matrix(TRACES, n_rows, duration_s, DT, seed)
+    wls = [har_workload(), lm_workload()]
+    pool = build_dispatch_pool(power, DT, n_workers, wls, seed,
+                               backend=backend, kernel=kernel,
+                               fleet_placement=placement)
+    sch = FleetScheduler(
+        pool, wls, sched="forecast", forecaster=forecaster,
+        trace_families=trace_family_labels(TRACES, n_rows),
+        forecaster_fit=forecaster_fit, shards=shards,
+        rebalance_every=rebalance_every)
+    stream = RequestStream(rate_scale * n_workers,
+                           np.array([0.6, 0.4]), n_steps, DT,
+                           seed=arrival_seed)
+    return pool, sch, stream, n_steps
+
+
+def _blob(summary: dict) -> str:
+    """Canonical full-summary comparison string. Only the "stream"
+    block (per-chunk wall clocks are nondeterministic) is stripped —
+    every counter, histogram, energy and quality field must match."""
+    s = dict(summary)
+    s.pop("stream", None)
+    return json.dumps(s, sort_keys=True, default=str)
+
+
+def _assert_backend_agreement(a: dict, b: dict):
+    """Cross-backend (numpy vs jax) agreement: every discrete field —
+    counters, histograms, latency percentiles, quality ledger — must be
+    bit-equal; the reported energy sums only to float tolerance (XLA
+    fuses/vectorizes the per-tick ``eff*pw*dt`` accumulation, so
+    per-worker ``e_harvest`` carries compiler-dependent ULPs — a
+    pre-existing property of the fused scan, orthogonal to chunking)."""
+    a, b = dict(a), dict(b)
+    ea, eb = a.pop("energy"), b.pop("energy")
+    a.pop("stream", None)
+    b.pop("stream", None)
+    assert (json.dumps(a, sort_keys=True, default=str)
+            == json.dumps(b, sort_keys=True, default=str))
+    assert ea.keys() == eb.keys()
+    for k in ("harvested_j", "work_j", "j_per_completed"):
+        np.testing.assert_allclose(float(ea[k]), float(eb[k]),
+                                   rtol=1e-9)
+
+
+class TestStreamingServe:
+    """The tentpole gate: a chunked steady-state run fed the identical
+    arrival stream is bit-exact with the whole-trace launch on the full
+    summary — for every backend, kernel, shard layout, and obs mode."""
+
+    @pytest.mark.parametrize("n_workers", [1, 256])
+    def test_chunked_equals_whole_trace_jax(self, n_workers):
+        pool_w, sch_w, st_w, n_steps = _mk_serve("jax", n_workers)
+        whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+        pool_c, sch_c, st_c, _ = _mk_serve("jax", n_workers)
+        # 700 does not divide 800: the final chunk covers the remainder
+        client = StreamClient(st_c, sch_c.params.W, n_steps)
+        chunked = run_fleet_stream(pool_c, sch_c, client, n_steps,
+                                   chunk_ticks=700)
+        assert chunked["stream"]["n_chunks"] == 2
+        assert chunked["stream"]["chunks"][-1]["ticks"] == 100
+        assert _blob(whole) == _blob(chunked)
+
+    def test_chunked_numpy_equals_jax(self):
+        pool_w, sch_w, st_w, n_steps = _mk_serve("numpy")
+        whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+        pool_n, sch_n, st_n, _ = _mk_serve("numpy")
+        ch_np = run_fleet_stream(pool_n, sch_n, st_n, n_steps,
+                                 chunk_ticks=333)
+        pool_j, sch_j, st_j, _ = _mk_serve("jax")
+        ch_jax = run_fleet_stream(pool_j, sch_j, st_j, n_steps,
+                                  chunk_ticks=333)
+        # the hard gate is same-backend: chunked == whole bit-exact
+        assert _blob(whole) == _blob(ch_np)
+        _assert_backend_agreement(ch_np, ch_jax)
+
+    @pytest.mark.parametrize("chunk", [1, 7, 160, 999, 5000])
+    def test_any_chunk_size_matches_whole_numpy(self, chunk):
+        # the host reference loop: every chunking of the tick axis —
+        # single ticks, sizes that straddle dispatch/evict boundaries,
+        # chunks longer than the trace — reproduces the offline run
+        pool_w, sch_w, st_w, n_steps = _mk_serve("numpy", 8,
+                                                 duration_s=4.0)
+        whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+        pool_c, sch_c, st_c, _ = _mk_serve("numpy", 8, duration_s=4.0)
+        chunked = run_fleet_stream(pool_c, sch_c, st_c, n_steps,
+                                   chunk_ticks=chunk)
+        assert _blob(whole) == _blob(chunked)
+
+    if _HAS_HYPOTHESIS:
+        @given(chunk=st.integers(1, 500),
+               arrival_seed=st.integers(0, 4),
+               forecaster=st.sampled_from(["ou", "arp", "auto"]))
+        @settings(max_examples=8, deadline=None)
+        def test_property_chunking_invariance(self, chunk,
+                                              arrival_seed,
+                                              forecaster):
+            pool_w, sch_w, st_w, n_steps = _mk_serve(
+                "numpy", 8, duration_s=3.0, forecaster=forecaster,
+                arrival_seed=arrival_seed)
+            whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+            pool_c, sch_c, st_c, _ = _mk_serve(
+                "numpy", 8, duration_s=3.0, forecaster=forecaster,
+                arrival_seed=arrival_seed)
+            chunked = run_fleet_stream(pool_c, sch_c, st_c, n_steps,
+                                       chunk_ticks=chunk)
+            assert _blob(whole) == _blob(chunked)
+
+    def test_mesh_fleet_composition(self):
+        # --mesh-fleet 8 with work stealing ON: the sharded host twin,
+        # chunked host twin, and the single-device vmap of the K-shard
+        # program all land on the same summary
+        kw = dict(n_workers=32, shards=8, rebalance_every=20)
+        pool_w, sch_w, st_w, n_steps = _mk_serve("numpy", **kw)
+        whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+        pool_n, sch_n, st_n, _ = _mk_serve("numpy", **kw)
+        ch_np = run_fleet_stream(pool_n, sch_n, st_n, n_steps,
+                                 chunk_ticks=300)
+        pool_wj, sch_wj, st_wj, _ = _mk_serve("jax",
+                                              placement="single", **kw)
+        whole_jax = run_fleet(pool_wj, sch_wj, st_wj, n_steps)
+        pool_j, sch_j, st_j, _ = _mk_serve("jax", placement="single",
+                                           **kw)
+        ch_jax = run_fleet_stream(pool_j, sch_j, st_j, n_steps,
+                                  chunk_ticks=300)
+        assert _blob(whole) == _blob(ch_np)
+        assert _blob(whole_jax) == _blob(ch_jax)
+        _assert_backend_agreement(ch_np, ch_jax)
+
+    @pytest.mark.slow
+    def test_mesh_fleet_real_device_mesh(self, tmp_path):
+        # the same gate over a real 8-device host-platform mesh: the
+        # chunked stream on shard_map must equal the whole-trace run
+        # (subprocess: device count is fixed at jax import)
+        import os
+        import subprocess
+        import sys
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8")
+        base = [sys.executable, "-m", "repro.launch.fleet",
+                "--workers", "32", "--duration", "8", "--scheduler",
+                "on", "--backend", "jax", "--sched", "forecast",
+                "--mesh-fleet", "8", "--fleet-placement", "mesh",
+                "--rebalance-every", "0.2"]
+        out_w = tmp_path / "whole.json"
+        out_c = tmp_path / "chunk.json"
+        subprocess.run(base + ["--json", str(out_w)], check=True,
+                       env=env, capture_output=True)
+        subprocess.run(base + ["--stream", "--chunk-ticks", "300",
+                               "--json", str(out_c)], check=True,
+                       env=env, capture_output=True)
+        a = json.loads(out_w.read_text())["scheduled"]
+        b = json.loads(out_c.read_text())["scheduled"]
+        assert _blob(a) == _blob(b)
+
+    def test_q32_kernel_composition(self):
+        pool_w, sch_w, st_w, n_steps = _mk_serve("jax", kernel="q32")
+        whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+        pool_c, sch_c, st_c, _ = _mk_serve("jax", kernel="q32")
+        chunked = run_fleet_stream(pool_c, sch_c, st_c, n_steps,
+                                   chunk_ticks=300)
+        assert _blob(whole) == _blob(chunked)
+
+    def test_obs_tele_chunked_equality(self):
+        # the in-scan telemetry plane sees GLOBAL tick indices from
+        # every chunk: windowed channels fill identically whether the
+        # trace runs as one launch, many launches, or the host loop
+        from repro.obs import make_fleet_obs
+        from repro.obs.state import tele_as_tuple
+
+        def run(backend, chunk):
+            pool, sch, stream, n_steps = _mk_serve(backend)
+            obs = make_fleet_obs("tele", pool.params, sch.params,
+                                 n_steps, window=100)
+            if chunk:
+                run_fleet_stream(pool, sch, stream, n_steps,
+                                 chunk_ticks=chunk, obs=obs)
+            else:
+                run_fleet(pool, sch, stream, n_steps, obs=obs)
+            return tele_as_tuple(obs.tele)
+
+        whole = run("jax", 0)
+        for got in (run("jax", 300), run("numpy", 300)):
+            for a, b in zip(whole, got):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+    def test_causal_refit_stream_backend_agreement(self):
+        # live causal refits between chunks: both backends refit from
+        # the same observed prefix and stay bit-equal — and the fused
+        # scan keeps ONE compiled function across refits (the new
+        # tables flow in as runtime arguments, no re-trace)
+        kw = dict(forecaster="arp", forecaster_fit="causal")
+        pool_j, sch_j, st_j, n_steps = _mk_serve("jax", **kw)
+        r_jax = run_fleet_stream(pool_j, sch_j, st_j, n_steps,
+                                 chunk_ticks=200, refit_every=200)
+        pool_n, sch_n, st_n, _ = _mk_serve("numpy", **kw)
+        r_np = run_fleet_stream(pool_n, sch_n, st_n, n_steps,
+                                chunk_ticks=200, refit_every=200)
+        assert r_jax["stream"]["refits"] == 3
+        assert r_np["stream"]["refits"] == 3
+        _assert_backend_agreement(r_jax, r_np)
+        assert len(pool_j._jax._serve_compiled) == 1
+
+    def test_stream_block_records(self):
+        pool, sch, stream, n_steps = _mk_serve("numpy", 8,
+                                               duration_s=4.0)
+        out = run_fleet_stream(pool, sch, stream, n_steps,
+                               chunk_ticks=150, slo_p95_s=2.0)
+        blk = out["stream"]
+        chunks = blk["chunks"]
+        assert blk["n_chunks"] == len(chunks) == 3
+        assert [c["tick0"] for c in chunks] == [0, 150, 300]
+        assert sum(c["ticks"] for c in chunks) == n_steps
+        # chunk counter deltas tile the whole-run counters exactly
+        for f in ("submitted", "completed", "shed", "rejected",
+                  "lost", "evicted"):
+            assert sum(c[f] for c in chunks) == out[f]
+        assert blk["slo_p95_s"] == 2.0
+        assert blk["slo_violations"] == sum(
+            not c["slo_ok"] for c in chunks)
+
+    def test_live_client_matches_offline_rows(self):
+        stream = RequestStream(50.0, np.array([0.5, 0.5]), 200, DT,
+                               seed=3)
+        client = StreamClient(stream, 2, 200)
+        got = np.concatenate([client.take(77), client.take(123)])
+        np.testing.assert_array_equal(got, stream.counts_matrix(2))
+
+    def test_chunk_ticks_must_be_positive(self):
+        pool, sch, stream, n_steps = _mk_serve("numpy", 8,
+                                               duration_s=1.0)
+        with pytest.raises(ValueError, match="chunk_ticks"):
+            run_fleet_stream(pool, sch, stream, n_steps, chunk_ticks=0)
+
+
+class TestStreamBoundaries:
+    """Satellite boundary pins: the arrival split below shard count,
+    the admission ring wrapping its physical capacity, and the summary
+    on an empty latency histogram."""
+
+    def test_split_counts_fewer_than_shards(self):
+        # 3 arrivals over 4 shards: low shards get the remainder, the
+        # last gets none — and the split always sums to the stream
+        np.testing.assert_array_equal(
+            _sched.split_counts(np.array([3]), 4),
+            np.array([[1], [1], [1], [0]]))
+        np.testing.assert_array_equal(
+            _sched.split_counts(np.array([4]), 4), np.ones((4, 1)))
+        rng = np.random.default_rng(0)
+        counts = rng.integers(0, 7, size=(50, 3))
+        split = _sched.split_counts(counts, 8)
+        np.testing.assert_array_equal(split.sum(axis=0), counts)
+
+    def test_ring_wraparound_at_capacity(self):
+        # Q = max_queue + n*max_batch physical slots; drive head/tail
+        # around the modulus and check the stamped arrival times land
+        # in the wrapped slots with exact admission accounting
+        power = _bank()
+        wls = [har_workload(), lm_workload()]
+        pool = build_dispatch_pool(power, DT, 2, wls, 0)
+        sch = FleetScheduler(pool, wls, max_queue=4, max_batch=1,
+                             shed_after_s=0.5)
+        sp = sch.params
+        assert sp.Q == 4 + 2 * 1
+        ss = sch._ss()
+        ss = _sched.admit(sp, ss, np.array([4, 0]), 0.0, np)
+        assert int(ss.q_len[0]) == 4
+        # exactly at max_queue: further arrivals are rejected
+        ss = _sched.admit(sp, ss, np.array([3, 0]), 0.01, np)
+        assert int(ss.rejected) == 3 and int(ss.q_len[0]) == 4
+        ss = _sched.shed(sp, ss, 1.0, np)
+        assert int(ss.shed) == 4 and int(ss.q_len[0]) == 0
+        assert int(ss.q_head[0]) == 4
+        # refill: slots (4+j) % 6 = [4, 5, 0, 1] wrap the ring
+        ss = _sched.admit(sp, ss, np.array([4, 0]), 2.0, np)
+        np.testing.assert_array_equal(
+            np.asarray(ss.q_t)[0, [4, 5, 0, 1]], np.full(4, 2.0))
+        assert int(ss.submitted) == 11 and int(ss.q_len[0]) == 4
+        # shedding reads the wrapped logical segment correctly too
+        ss = _sched.shed(sp, ss, 3.0, np)
+        assert int(ss.shed) == 8 and int(ss.q_head[0]) == 2
+
+    def test_sched_summary_empty_latency_histogram(self):
+        power = _bank()
+        wls = [har_workload(), lm_workload()]
+        pool = build_dispatch_pool(power, DT, 2, wls, 0)
+        sch = FleetScheduler(pool, wls)
+        out = sch.summary(1.0)
+        assert out["completed"] == 0
+        assert out["latency_mean_s"] == 0.0
+        assert out["latency_p50_s"] == 0.0
+        assert out["latency_p95_s"] == 0.0
+        assert out["latency_p99_s"] == 0.0
+        assert out["throughput_rps"] == 0.0
