@@ -597,10 +597,13 @@ def _quant_agreement(n_workers: int, duration_s: float, n_rows: int,
 
 def _strip_run_meta(summary: dict) -> dict:
     """Drop the launcher-provenance keys (which legitimately differ
-    between the twin evaluations) so everything else — every counter,
-    histogram, quality and energy figure — can be compared verbatim."""
+    between the twin evaluations) and the streaming block (per-chunk
+    wall clocks are nondeterministic) so everything else — every
+    counter, histogram, quality and energy figure — can be compared
+    verbatim."""
     return {k: v for k, v in summary.items()
-            if k not in ("mode", "backend", "mesh_fleet", "obs")}
+            if k not in ("mode", "backend", "mesh_fleet", "obs",
+                         "stream")}
 
 
 def _sharded_agreement(n_workers: int, duration_s: float, n_rows: int,
@@ -688,6 +691,98 @@ def run_sharded_smoke(n_workers: int = 256, duration_s: float = 30.0,
     if out["xla_reb_on"]["rebalanced"] == 0:
         raise SystemExit("fleet sharded smoke FAILED: the rebalance-on "
                          "run moved no requests (gate is vacuous)")
+    return out
+
+
+def _stream_agreement(n_workers: int, duration_s: float, n_rows: int,
+                      chunk_ticks: int, *, backend: str = "jax",
+                      kernel: str = "xla", mesh_fleet: int = 1,
+                      rebalance_every_s: float = 0.0,
+                      fleet_placement: str = "auto",
+                      seed: int = 0) -> dict:
+    """Whole-trace vs chunked-stream bit-equality for one config: the
+    same pool/scheduler/arrival world served as a single launch and as
+    the ``--stream`` chunked steady-state loop (live client thread,
+    state carried across chunk boundaries) must produce identical full
+    summaries — the tentpole gate of the streaming serve plane."""
+    rows = min(n_rows, n_workers)
+    power = make_power_matrix(TRACES, rows, duration_s, DT, seed)
+    families = trace_family_labels(TRACES, rows)
+    n_steps = int(duration_s / DT)
+    rate = n_workers / PERIOD_S
+    common = dict(rate_rps=rate, mix=MIX, n_steps=n_steps, seed=seed,
+                  backend=backend, sched="forecast",
+                  trace_families=families, kernel=kernel,
+                  mesh_fleet=mesh_fleet,
+                  rebalance_every_s=rebalance_every_s,
+                  fleet_placement=fleet_placement)
+    t0 = time.perf_counter()
+    whole = run_scheduled(power, DT, n_workers, _workloads(), **common)
+    t1 = time.perf_counter()
+    chunked = run_scheduled(power, DT, n_workers, _workloads(),
+                            stream_mode=True, chunk_ticks=chunk_ticks,
+                            **common)
+    t2 = time.perf_counter()
+    agree = (json.dumps(_strip_run_meta(whole), sort_keys=True,
+                        default=str)
+             == json.dumps(_strip_run_meta(chunked), sort_keys=True,
+                           default=str))
+    return {
+        "n_workers": n_workers,
+        "duration_s": duration_s,
+        "backend": backend,
+        "kernel": kernel,
+        "mesh_fleet": mesh_fleet,
+        "rebalance_every_s": rebalance_every_s,
+        "chunk_ticks": chunk_ticks,
+        "n_chunks": chunked["stream"]["n_chunks"],
+        "summaries_agree": bool(agree),
+        "rebalanced": int(whole["rebalanced"]),
+        "counts": {n: {k: r[k] for k in _COUNT_KEYS}
+                   for n, r in (("whole", whole),
+                                ("chunked", chunked))},
+        "wall_s": {"whole": t1 - t0, "chunked": t2 - t1},
+    }
+
+
+def run_stream_smoke(n_workers: int = 256, duration_s: float = 30.0,
+                     chunk_ticks: int = 700) -> dict:
+    """CI gate for ``--stream``: the chunked steady-state loop must be
+    bit-exact with the whole-trace launch — on the NumPy host reference
+    and the fused jax scan (chunk size NOT dividing the horizon, so the
+    remainder chunk is exercised), on the quantized q32 kernel, and on
+    the K=8 sharded program with work stealing off AND on (vmap
+    placement: no forced-device environment needed)."""
+    out = {}
+    for tag, kw in (
+            ("numpy", dict(backend="numpy")),
+            ("jax", dict(backend="jax")),
+            ("jax_q32", dict(backend="jax", kernel="q32")),
+            ("mesh8_reb_off", dict(backend="jax", mesh_fleet=8,
+                                   fleet_placement="single")),
+            ("mesh8_reb_on", dict(backend="jax", mesh_fleet=8,
+                                  rebalance_every_s=1.0,
+                                  fleet_placement="single"))):
+        r = _stream_agreement(n_workers, duration_s, 16, chunk_ticks,
+                              **kw)
+        if not r["summaries_agree"]:
+            print(json.dumps(r, indent=1), file=sys.stderr)
+            raise SystemExit(f"fleet stream smoke ({tag}) FAILED: "
+                             "chunked summary diverged from the "
+                             "whole-trace launch")
+        out[tag] = r
+        emit(f"fleet.stream_{tag}_agree", r["wall_s"]["chunked"] * 1e6,
+             str(r["summaries_agree"]))
+    if out["mesh8_reb_on"]["rebalanced"] == 0:
+        raise SystemExit("fleet stream smoke FAILED: the rebalance-on "
+                         "run moved no requests (gate is vacuous)")
+    # cross-backend: the chunked numpy and jax runs above also share
+    # one arrival world — their discrete counters must match exactly
+    a = out["numpy"]["counts"]["chunked"]
+    b = out["jax"]["counts"]["chunked"]
+    if a != b:
+        raise SystemExit(f"fleet stream smoke FAILED: chunked counts "
+                         f"disagree across backends ({a} vs {b})")
     return out
 
 
@@ -822,8 +917,16 @@ def main(argv: list[str] | None = None) -> dict:
                          "the float64 XLA chain (xla), the quantized "
                          "int32 XLA twin (q32), or the fused Pallas "
                          "megakernel (pallas; interpret mode on CPU)")
+    ap.add_argument("--stream", action="store_true",
+                    help="with --smoke: run the streaming gate instead "
+                         "— chunked ``--stream`` serve must be "
+                         "bit-equal with the whole-trace launch on "
+                         "numpy, jax, q32 and the K=8 sharded program "
+                         "(rebalance off and on)")
     args = ap.parse_args(argv)
     if args.smoke:
+        if args.stream:
+            return run_stream_smoke()
         if args.mesh_fleet > 1:
             return run_sharded_smoke(
                 mesh_fleet=args.mesh_fleet,

@@ -37,7 +37,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 CLIS = ("repro.launch.fleet", "benchmarks.fleet_throughput",
         "benchmarks.fleet_quality", "benchmarks.fleet_observability",
-        "benchmarks.fleet_megakernel", "benchmarks.fleet_sharded_scaling")
+        "benchmarks.fleet_megakernel", "benchmarks.fleet_sharded_scaling",
+        "benchmarks.fleet_streaming")
 DOCS = ("README.md", "docs")
 
 # `--flag` with a word boundary before it (skips ---- rules and
