@@ -281,7 +281,9 @@ def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
                      forecaster_fit: str = "full",
                      workloads=None, obs_mode: str = "off",
                      obs_window_s: float = 1.0,
-                     trace_out: str = "") -> dict:
+                     trace_out: str = "", kernel: str = "xla",
+                     persist: str = "none",
+                     grace_s: float = 20.0) -> dict:
     """One definition of *scheduler* agreement: the NumPy per-tick driver
     and the fused JAX launch serve the same stream over one trace bank
     and must match on every request-lifecycle counter and on the pool's
@@ -304,7 +306,8 @@ def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
             forecaster_fit=forecaster_fit,
             trace_families=families, obs_mode=obs_mode,
             obs_window_s=obs_window_s,
-            trace_out=(trace_out if backend == "jax" else ""))
+            trace_out=(trace_out if backend == "jax" else ""),
+            kernel=kernel, persist=persist, grace_s=grace_s)
     agree = all(res["numpy"][k] == res["jax"][k] for k in _COUNT_KEYS)
     out = {
         "n_workers": n_workers,
@@ -315,6 +318,15 @@ def _sched_agreement(n_workers: int, duration_s: float, n_rows: int,
         "counts": {b: {k: res[b][k] for k in _COUNT_KEYS}
                    for b in ("numpy", "jax")},
     }
+    if persist != "none":
+        # the persist ledgers (FRAM joules + checkpoint/commit/restore
+        # counters) must be bit-equal across the twin evaluations too
+        pk = ("nvm_j", "persists", "restores")
+        a = {k: res["numpy"]["energy"][k] for k in pk}
+        b = {k: res["jax"]["energy"][k] for k in pk}
+        out["persist"] = persist
+        out["persist_ledger"] = a
+        out["persist_agree"] = bool(a == b)
     if obs_mode != "off":
         a = res["numpy"]["obs"]["channels"]
         b = res["jax"]["obs"]["channels"]
@@ -446,7 +458,7 @@ def control_plane_scaling(sizes=(256, 1024), duration_s: float = 120.0,
 # pluggable forecasters: model x trace-family completed-requests matrix
 # ---------------------------------------------------------------------------
 
-FORECASTER_FAMILIES = ("SOM", "SIM", "SOR", "SIR", "RF")
+FORECASTER_FAMILIES = ("SOM", "SIM", "SOR", "SIR", "RF", "ECL")
 
 
 def forecaster_matrix(n_workers: int = 1024, duration_s: float = 600.0,
@@ -786,6 +798,35 @@ def run_stream_smoke(n_workers: int = 256, duration_s: float = 30.0,
     return out
 
 
+def run_persist_smoke(persist: str, n_workers: int = 128,
+                      duration_s: float = 30.0) -> dict:
+    """CI gate for ``--persist ckpt|undolog``: the NumPy per-tick
+    reference and the fused JAX launch serve the same stream under the
+    exact persistence discipline and must agree bit-exactly on every
+    request-lifecycle counter AND on the persist ledger (FRAM joules,
+    checkpoint/commit count, restore count) — on the float64 chain and
+    on the int32-quantized q32 kernel. The run must actually persist
+    and restore at least once, or the gate would be vacuous."""
+    out = {}
+    for tag, kernel in (("f64", "xla"), ("q32", "q32")):
+        r = _sched_agreement(n_workers, duration_s, 8, sched="forecast",
+                             kernel=kernel, persist=persist,
+                             grace_s=60.0)
+        if not (r["counts_agree"] and r["persist_agree"]):
+            print(json.dumps(r, indent=1), file=sys.stderr)
+            raise SystemExit(f"fleet persist={persist} smoke ({tag}) "
+                             "FAILED: counters or persist ledgers "
+                             "disagree across backends")
+        out[tag] = r
+        emit(f"fleet.persist_{persist}_{tag}_agree", 0.0, "True")
+    led = out["f64"]["persist_ledger"]
+    if led["persists"] == 0 or led["restores"] == 0:
+        raise SystemExit(f"fleet persist={persist} smoke FAILED: no "
+                         "checkpoint/commit or restore fired (gate is "
+                         "vacuous)")
+    return out
+
+
 def run_smoke(n_workers: int = 256, duration_s: float = 30.0,
               kernel: str = "xla") -> dict:
     """CI gate: short shared trace, both backends, counts must match
@@ -923,8 +964,18 @@ def main(argv: list[str] | None = None) -> dict:
                          "bit-equal with the whole-trace launch on "
                          "numpy, jax, q32 and the K=8 sharded program "
                          "(rebalance off and on)")
+    ap.add_argument("--persist", choices=("none", "ckpt", "undolog"),
+                    default="none",
+                    help="with --smoke: run the persistence gate "
+                         "instead — serve under the exact ckpt/undolog "
+                         "discipline (docs/persistence_plane.md) and "
+                         "require numpy-vs-jax bit-equality on every "
+                         "lifecycle counter and persist ledger, on the "
+                         "float64 and q32 kernels")
     args = ap.parse_args(argv)
     if args.smoke:
+        if args.persist != "none":
+            return run_persist_smoke(args.persist)
         if args.stream:
             return run_stream_smoke()
         if args.mesh_fleet > 1:

@@ -192,6 +192,55 @@ def kinetic_trace(seed: int = 5, duration_s: float = 600.0, dt: float = 0.01,
     return EnergyTrace("KIN", np.clip(p, 0, None), dt)
 
 
+# the eclipse schedule is FLEET-SHARED by construction: every ECL row,
+# whatever its per-row seed, draws its occlusion windows from this fixed
+# internal seed, so the whole fleet goes dark (and re-lights) together —
+# the adversarial case for a scheduler that assumes some worker is
+# always charged
+ECLIPSE_SCHEDULE_SEED = 0xEC1
+
+
+def _eclipse_mask(n: int, dt: float) -> np.ndarray:
+    """Shared lit/dark schedule: lit spans of 4-12 s alternating with
+    deep occlusions of 2-7 s at depth U(0.05, 0.15) (~35% of time dark).
+    Deterministic and duration-prefix-stable: a longer trace extends the
+    same schedule rather than redrawing it."""
+    rng = np.random.default_rng(ECLIPSE_SCHEDULE_SEED)
+    mask = np.ones(n)
+    t = 0
+    while t < n:
+        lit = int(rng.uniform(4.0, 12.0) / dt) + 1
+        dark = int(rng.uniform(2.0, 7.0) / dt) + 1
+        depth = rng.uniform(0.05, 0.15)
+        mask[t + lit:t + lit + dark] = depth
+        t += lit + dark
+    return mask
+
+
+def eclipse_trace(seed: int = 6, duration_s: float = 600.0,
+                  dt: float = 0.01,
+                  mean_uw: float = 320.0) -> EnergyTrace:
+    """ECL: fleet-correlated occlusion ("eclipse") harvesting.
+
+    SOM/SIM occlusions are independent per row, so a fleet dispatcher
+    can always route around a dark worker. ECL removes that escape
+    hatch: the occlusion *schedule* is shared across every row (see
+    :data:`ECLIPSE_SCHEDULE_SEED`) — a passing cloud bank, a train
+    entering a tunnel, stadium floodlights cycling — while the per-row
+    OU texture stays seed-distinct. Scarce mean power keeps exact
+    persistence disciplines spanning several recharge cycles per
+    request. Classified label-free as "occlusion" by
+    ``repro.core.forecast.classify_rows`` (two-level structure without
+    the hard-off fraction of a burst process)."""
+    rng = np.random.default_rng(seed)
+    n = int(duration_s / dt)
+    base = _ou_process(rng, n, 1.0, theta=0.002, sigma=0.0016)
+    p = np.clip(base, 0.0, None) * _eclipse_mask(n, dt)
+    # normalise after masking so the configured mean power is exact
+    p *= (mean_uw * 1e-6) / max(p.mean(), 1e-12)
+    return EnergyTrace("ECL", p, dt)
+
+
 TRACE_FACTORIES: dict[str, Callable[..., EnergyTrace]] = {
     "RF": rf_trace,
     "SOM": som_trace,
@@ -199,6 +248,7 @@ TRACE_FACTORIES: dict[str, Callable[..., EnergyTrace]] = {
     "SOR": sor_trace,
     "SIR": sir_trace,
     "KIN": kinetic_trace,
+    "ECL": eclipse_trace,
 }
 
 

@@ -72,7 +72,7 @@ MODEL_CODES = {name: i for i, name in enumerate(FORECASTER_NAMES)}
 # mobile solar gets the occlusion regime model, RF/kinetic the burst
 # model, static solar the OU mean reversion
 FAMILY_FORECASTER = {
-    "SOM": "occlusion", "SIM": "occlusion",
+    "SOM": "occlusion", "SIM": "occlusion", "ECL": "occlusion",
     "SOR": "ou", "SIR": "ou",
     "RF": "burst", "KIN": "burst",
 }

@@ -103,6 +103,11 @@ class JaxFleetBackend:
                 raise ValueError(
                     "quantized kernels need FleetParams.quantum_j (use "
                     "FleetWorkerPool(kernel=...) to wire params + state)")
+        if kernel == "pallas" and params.persist != "none":
+            raise ValueError(
+                "--persist ckpt/undolog supports the xla and q32 "
+                "kernels; the Pallas serve megakernel implements the "
+                "approximate tick only")
         if params.mode == "local":
             # surface non-traceable policies at build time, not mid-scan:
             # the base-class decide_batch is the NumPy-only loop fallback,
@@ -130,6 +135,13 @@ class JaxFleetBackend:
             self.EMITC = jnp.asarray(params.EMITC)
             self.NU = jnp.asarray(params.NU)
             self.AP = jnp.asarray(params.active_power_w)
+            zw = np.zeros(np.asarray(params.FIX).shape[0])
+            self.CKPT_J = jnp.asarray(params.CKPT_J
+                                      if params.CKPT_J is not None else zw)
+            self.REST_J = jnp.asarray(params.REST_J
+                                      if params.REST_J is not None else zw)
+            self.COMMIT_J = jnp.asarray(
+                params.COMMIT_J if params.COMMIT_J is not None else zw)
             self.ACC = (None if params.acc is None
                         else jnp.asarray(np.asarray(params.acc,
                                                     dtype=np.float64)))
@@ -733,6 +745,11 @@ class JaxFleetBackend:
         idle = on & ~s.has_work
         s = s._replace(v=v, on=on, cycles=cycles, e_harvest=e_harvest)
 
+        # 2b. persistence plane: pay the FRAM restore read before the
+        # worker may progress again (the restore consumes its tick)
+        if p.persist != "none":
+            s, working = self._restore(s, working)
+
         # 3. acquisition
         if p.mode == "local":
             s = self._acquire_local(s, idle, t)
@@ -787,6 +804,31 @@ class JaxFleetBackend:
             w_wl=jnp.where(succ, 0, s.w_wl),
             w_batch=jnp.where(succ, 1, s.w_batch))
 
+    def _restore(self, s, working):
+        """Persistence-plane restore (persist != "none"): pay the FRAM
+        read that reloads the progress image (ckpt) or log header
+        (undolog); the restore consumes the worker's tick. Mirrors
+        ``backend_numpy._restore`` expression for expression."""
+        p = self.p
+        rest = working & s.need_restore
+        rj = self.REST_J[s.w_wl]
+        v2, okr = self._draw(s.v, rj)
+        v = jnp.where(rest, v2, s.v)
+        okrest = rest & okr
+        failr = rest & ~okr
+        wud = s.w_units_done
+        if p.persist == "ckpt":
+            # Mementos semantics: rewind to the checkpointed counter
+            wud = jnp.where(okrest, s.ck_units, wud)
+        s = s._replace(
+            v=v, on=s.on & ~failr,
+            need_restore=s.need_restore & ~okrest,
+            restores=s.restores + okrest,
+            e_persist=s.e_persist + jnp.where(okrest, rj, 0.0),
+            w_units_done=wud,
+            w_left=jnp.where(okrest, 0.0, s.w_left))
+        return s, working & ~rest
+
     def _acquire_dispatch(self, s, idle, t, ev):
         p = self.p
         due = idle & s.p_pending
@@ -794,11 +836,16 @@ class JaxFleetBackend:
         fixed = self.FIX[s.p_wl]
         v2, ok = self._draw(s.v, jnp.minimum(fixed, us))
         v = jnp.where(due, v2, s.v)
-        p_pending = s.p_pending & ~due
         fail = due & ~ok
-        on = s.on & ~fail
-        ev = self._rec(ev, fail, EV_LOST, t, s.p_ticket, 0)
         succ = due & ok
+        on = s.on & ~fail
+        if p.persist == "none":
+            p_pending = s.p_pending & ~due
+            ev = self._rec(ev, fail, EV_LOST, t, s.p_ticket, 0)
+        else:
+            # exact disciplines never drop an accepted request: a failed
+            # acquisition keeps the assignment pending across recharge
+            p_pending = s.p_pending & ~succ
         s = s._replace(
             v=v, on=on, p_pending=p_pending,
             e_work=s.e_work + jnp.where(succ, fixed, 0.0),
@@ -813,6 +860,10 @@ class JaxFleetBackend:
             w_batch=jnp.where(succ, s.p_batch, s.w_batch),
             w_target=jnp.where(succ, s.p_units * s.p_batch, s.w_target),
             w_wl=jnp.where(succ, s.p_wl, s.w_wl))
+        if p.persist != "none":
+            # fresh request: clear stale persistence from a predecessor
+            s = s._replace(need_restore=s.need_restore & ~succ,
+                           ck_units=jnp.where(succ, 0, s.ck_units))
         return s, ev
 
     def _progress(self, s, working, t, ev):
@@ -822,51 +873,96 @@ class JaxFleetBackend:
         e_step = jnp.where(working, self.AP * p.dt, 0.0)
         run = working & (s.w_units_done < s.w_target)
         emit_now = jnp.zeros(p.n, dtype=bool)
+        ckpt_w = self.CKPT_J[s.w_wl]
+        commit_w = self.COMMIT_J[s.w_wl]
         carry = (s.v, s.on, s.has_work, s.e_work, s.w_left, s.w_units_done,
-                 e_step, run, emit_now, ev)
+                 e_step, run, emit_now, ev,
+                 s.need_restore, s.ck_units, s.e_persist, s.persists)
 
         def cond(c):
             return jnp.any(c[7])
 
         def body(c):
             (v, on, has_work, e_work, w_left, w_units_done, e_step, run,
-             emit_now, ev) = c
-            # unit boundary: start the next unit only if unit + emit-
-            # reserve are affordable now (the paper's BLE-packet reserve)
+             emit_now, ev, need_restore, ck_units, e_persist,
+             persists) = c
+            # unit boundary: start the next unit only if unit + reserve
+            # are affordable now. Approximate: reserve = the BLE emit
+            # packet and "cant" emits the partial result. Exact: the
+            # reserve also covers the checkpoint image / unit commit,
+            # and "cant" is a forced power-down — the request persists.
             starting = run & (w_left <= 0)
             gidx = jnp.where(s.w_tile > 0,
                              w_units_done % jnp.maximum(s.w_tile, 1),
                              w_units_done)
             nc = self.UC[s.w_wl, jnp.clip(gidx, 0, u_max - 1)]
             us = self._usable(v)
-            cant = starting & (us < nc + self.EMITC[s.w_wl])
-            emit_now = emit_now | cant
+            if p.persist == "none":
+                cant = starting & (us < nc + self.EMITC[s.w_wl])
+                emit_now = emit_now | cant
+            else:
+                rsv = ckpt_w if p.persist == "ckpt" else commit_w
+                cant = starting & (us < nc + rsv + self.EMITC[s.w_wl])
+                if p.persist == "ckpt":
+                    # voltage trigger fired: serialize dirty progress
+                    # to FRAM before dying (funded by the previous
+                    # boundary's reserve)
+                    dirty = cant & (w_units_done != ck_units)
+                    v2, okc = self._draw(v, ckpt_w)
+                    v = jnp.where(dirty, v2, v)
+                    wrote = dirty & okc
+                    ck_units = jnp.where(wrote, w_units_done, ck_units)
+                    persists = persists + wrote
+                    e_persist = e_persist + jnp.where(wrote, ckpt_w, 0.0)
+                on = on & ~cant
+                need_restore = need_restore | cant
             run = run & ~cant
             w_left = jnp.where(starting & ~cant, nc, w_left)
             take = jnp.minimum(e_step, w_left)
             v2, ok = self._draw(v, take)
             v = jnp.where(run, v2, v)
             fail = run & ~ok
-            # power failure mid-work: volatile by design; work lost
             on = on & ~fail
-            has_work = has_work & ~fail
-            if dispatch:
-                ev = self._rec(ev, fail, EV_LOST, t, s.w_ticket, 0)
+            if p.persist == "none":
+                # power failure mid-work: volatile by design; work lost
+                has_work = has_work & ~fail
+                if dispatch:
+                    ev = self._rec(ev, fail, EV_LOST, t, s.w_ticket, 0)
+            else:
+                # the persisted request survives; restore re-runs it
+                need_restore = need_restore | fail
             run = run & ok
             e_work = e_work + jnp.where(run, take, 0.0)
             w_left = jnp.where(run, w_left - take, w_left)
             e_step = jnp.where(run, e_step - take, e_step)
             fin = run & (w_left <= 1e-18)
+            if p.persist == "undolog":
+                # Alpaca task commit: the completed unit's undo-buffer
+                # write makes w_units_done durable (funded by the
+                # boundary reserve)
+                v2, okc = self._draw(v, commit_w)
+                v = jnp.where(fin, v2, v)
+                halted = fin & ~okc
+                on = on & ~halted
+                need_restore = need_restore | halted
+                run = run & ~halted
+                fin = fin & okc
+                persists = persists + fin
+                e_persist = e_persist + jnp.where(fin, commit_w, 0.0)
             w_units_done = w_units_done + fin
             w_left = jnp.where(fin, 0.0, w_left)
             run = run & (e_step > 0) & (w_units_done < s.w_target)
             return (v, on, has_work, e_work, w_left, w_units_done, e_step,
-                    run, emit_now, ev)
+                    run, emit_now, ev, need_restore, ck_units, e_persist,
+                    persists)
 
         (v, on, has_work, e_work, w_left, w_units_done, _, _, emit_now,
-         ev) = lax.while_loop(cond, body, carry)
+         ev, need_restore, ck_units, e_persist, persists
+         ) = lax.while_loop(cond, body, carry)
         s = s._replace(v=v, on=on, has_work=has_work, e_work=e_work,
-                       w_left=w_left, w_units_done=w_units_done)
+                       w_left=w_left, w_units_done=w_units_done,
+                       need_restore=need_restore, ck_units=ck_units,
+                       e_persist=e_persist, persists=persists)
         return s, ev, emit_now
 
     def _emit(self, s, finish, t, ev):
@@ -877,9 +973,16 @@ class JaxFleetBackend:
         efail = finish & ~ok
         esucc = finish & ok
         on = s.on & ~efail
-        has_work = s.has_work & ~finish  # volatile: failed emission loses it
+        if p.persist == "none":
+            has_work = s.has_work & ~finish  # volatile: failed emission
+            # loses the work
+        else:
+            # persisted work retries the emission after the next restore
+            has_work = s.has_work & ~esucc
+            s = s._replace(need_restore=s.need_restore | efail)
         if p.mode == "dispatch":
-            ev = self._rec(ev, efail, EV_LOST, t, s.w_ticket, 0)
+            if p.persist == "none":
+                ev = self._rec(ev, efail, EV_LOST, t, s.w_ticket, 0)
             ev = self._rec(ev, esucc, EV_EMIT, t, s.w_ticket,
                            s.w_units_done)
         emit_acc_sum = s.emit_acc_sum

@@ -12,6 +12,12 @@ backend replaces them with fixed-capacity arrays.
 Event tuples pushed to ``events`` in dispatch mode:
   ("emit", t, worker, ticket, units_done, req_units, batch)
   ("lost", t, worker, ticket)   -- brown-out or failed emission
+
+Under the persistence plane (``params.persist`` != "none" — see
+docs/persistence_plane.md) a brown-out mid-request is a power-down, not
+a loss: the worker keeps ``has_work``, pays a FRAM restore on its next
+productive wake, and re-executes to *exact* completion. No "lost"
+events are emitted in the exact disciplines.
 """
 from __future__ import annotations
 
@@ -82,6 +88,12 @@ def tick(p: FleetParams, s: FleetState, i: int,
     # semantics: the acquisition branch ends the step)
     working = active & s.has_work
     idle = active & ~s.has_work
+
+    # persistence plane: a worker that powered down mid-request pays the
+    # FRAM restore read before it may progress again (the restore
+    # consumes its tick)
+    if p.persist != "none":
+        working = _restore(p, s, working)
 
     # 3. acquisition
     if p.mode == "local":
@@ -166,6 +178,34 @@ def _acquire_local(p: FleetParams, s: FleetState, idle: np.ndarray,
     s.w_batch[succ] = 1
 
 
+def _restore(p: FleetParams, s: FleetState, working: np.ndarray
+             ) -> np.ndarray:
+    """Persistence-plane restore (persist != "none"): pay the FRAM read
+    that reloads the progress image (ckpt) or log header (undolog).
+    Returns ``working`` minus the restoring lanes — a restore consumes
+    the worker's tick before it can progress again."""
+    rest = working & s.need_restore
+    if not rest.any():
+        return working
+    r_idx = np.nonzero(rest)[0]
+    rj = p.REST_J[s.w_wl[r_idx]]
+    ok = _draw_at(p, s, r_idx, rj)
+    # not enough banked for the read yet: recharge more (defensive — a
+    # freshly woken worker holds a full cycle of charge)
+    s.on[r_idx[~ok]] = False
+    succ = r_idx[ok]
+    s.need_restore[succ] = False
+    s.restores[succ] += 1
+    s.e_persist[succ] += rj[ok]
+    if p.persist == "ckpt":
+        # Mementos semantics: rewind to the checkpointed unit counter;
+        # progress past the last image is lost and re-executes
+        s.w_units_done[succ] = s.ck_units[succ]
+    # either way the partial unit in flight restarts idempotently
+    s.w_left[succ] = 0.0
+    return working & ~rest
+
+
 def _acquire_dispatch(p: FleetParams, s: FleetState, idle: np.ndarray,
                       t: float, events: list[tuple]) -> None:
     due = idle & s.p_pending
@@ -176,14 +216,24 @@ def _acquire_dispatch(p: FleetParams, s: FleetState, idle: np.ndarray,
     us = usable_energy(p, s)[d_idx]
     fixed = p.FIX[wl]
     ok = _draw_at(p, s, d_idx, np.minimum(fixed, us))
-    s.p_pending[d_idx] = False
     fail = d_idx[~ok]
     s.on[fail] = False
-    for w in fail:
-        events.append((LOST, t, int(w), int(s.p_ticket[w])))
+    if p.persist == "none":
+        s.p_pending[d_idx] = False
+        for w in fail:
+            events.append((LOST, t, int(w), int(s.p_ticket[w])))
+    else:
+        # exact disciplines never drop an accepted request: a failed
+        # acquisition keeps the assignment pending across the recharge
+        s.p_pending[d_idx[ok]] = False
     succ = d_idx[ok]
     if succ.size == 0:
         return
+    if p.persist != "none":
+        # fresh request: clear any stale persistence carried from an
+        # evicted or completed predecessor
+        s.need_restore[succ] = False
+        s.ck_units[succ] = 0
     s.e_work[succ] += fixed[ok]
     s.acquired[succ] += 1
     s.has_work[succ] = True
@@ -212,8 +262,12 @@ def _progress(p: FleetParams, s: FleetState, working: np.ndarray, t: float,
         r_idx = np.nonzero(run)[0]
         if r_idx.size == 0:
             break
-        # unit boundary: start the next unit only if unit + emit-reserve
-        # are affordable now (the paper's BLE-packet reserve)
+        # unit boundary: start the next unit only if unit + reserve are
+        # affordable now. Approximate: reserve = the BLE emit packet and
+        # "cant" emits the partial result. Exact (persist != "none"):
+        # reserve additionally covers the checkpoint image / unit commit
+        # write, and "cant" is a forced power-down — the request is
+        # persisted, never truncated.
         starting = s.w_left[r_idx] <= 0
         if starting.any():
             s_idx = r_idx[starting]
@@ -222,8 +276,29 @@ def _progress(p: FleetParams, s: FleetState, working: np.ndarray, t: float,
             gidx = np.where(tile > 0, ud % np.maximum(tile, 1), ud)
             nc = p.UC[s.w_wl[s_idx], gidx]
             us = usable_energy(p, s)[s_idx]
-            cant = us < nc + p.EMITC[s.w_wl[s_idx]]
-            emit_now[s_idx[cant]] = True
+            if p.persist == "none":
+                cant = us < nc + p.EMITC[s.w_wl[s_idx]]
+                emit_now[s_idx[cant]] = True
+            else:
+                rsv = p.CKPT_J if p.persist == "ckpt" else p.COMMIT_J
+                cant = us < (nc + rsv[s.w_wl[s_idx]]
+                             + p.EMITC[s.w_wl[s_idx]])
+                if p.persist == "ckpt":
+                    # the voltage trigger fired: serialize dirty
+                    # progress to FRAM before dying (the reserve at the
+                    # previous boundary guarantees this write is funded)
+                    dirty = s_idx[cant & (s.w_units_done[s_idx]
+                                          != s.ck_units[s_idx])]
+                    if dirty.size:
+                        cj = p.CKPT_J[s.w_wl[dirty]]
+                        okc = _draw_at(p, s, dirty, cj)
+                        wrote = dirty[okc]
+                        s.ck_units[wrote] = s.w_units_done[wrote]
+                        s.persists[wrote] += 1
+                        s.e_persist[wrote] += cj[okc]
+                down = s_idx[cant]
+                s.on[down] = False
+                s.need_restore[down] = True
             run[s_idx[cant]] = False
             go = s_idx[~cant]
             s.w_left[go] = nc[~cant]
@@ -234,23 +309,42 @@ def _progress(p: FleetParams, s: FleetState, working: np.ndarray, t: float,
         ok = _draw_at(p, s, r_idx, take)
         fail = r_idx[~ok]
         if fail.size:
-            # power failure mid-work: volatile by design; work lost
             s.on[fail] = False
-            s.has_work[fail] = False
             run[fail] = False
-            if p.mode == "dispatch":
-                for w in fail:
-                    events.append((LOST, t, int(w), int(s.w_ticket[w])))
+            if p.persist == "none":
+                # power failure mid-work: volatile by design; work lost
+                s.has_work[fail] = False
+                if p.mode == "dispatch":
+                    for w in fail:
+                        events.append(
+                            (LOST, t, int(w), int(s.w_ticket[w])))
+            else:
+                # the persisted request survives; restore re-runs the
+                # partial unit
+                s.need_restore[fail] = True
         succ = r_idx[ok]
         tk = take[ok]
         s.e_work[succ] += tk
         s.w_left[succ] -= tk
         e_step[succ] -= tk
         fin = succ[s.w_left[succ] <= 1e-18]
+        halted = np.empty(0, dtype=np.int64)
+        if p.persist == "undolog" and fin.size:
+            # Alpaca task commit: the completed unit's undo-buffer write
+            # makes w_units_done durable (funded by the boundary reserve)
+            cj = p.COMMIT_J[s.w_wl[fin]]
+            okc = _draw_at(p, s, fin, cj)
+            halted = fin[~okc]
+            s.on[halted] = False
+            s.need_restore[halted] = True
+            fin = fin[okc]
+            s.persists[fin] += 1
+            s.e_persist[fin] += cj[okc]
         s.w_units_done[fin] += 1
         s.w_left[fin] = 0.0
         run[succ] = ((e_step[succ] > 0)
                      & (s.w_units_done[succ] < s.w_target[succ]))
+        run[halted] = False
     return emit_now
 
 
@@ -261,10 +355,14 @@ def _emit(p: FleetParams, s: FleetState, f_idx: np.ndarray, t: float,
     ok = _draw_at(p, s, f_idx, ec)
     fail = f_idx[~ok]
     s.on[fail] = False
-    s.has_work[fail] = False  # volatile: failed emission loses it
-    if p.mode == "dispatch":
-        for w in fail:
-            events.append((LOST, t, int(w), int(s.w_ticket[w])))
+    if p.persist == "none":
+        s.has_work[fail] = False  # volatile: failed emission loses it
+        if p.mode == "dispatch":
+            for w in fail:
+                events.append((LOST, t, int(w), int(s.w_ticket[w])))
+    else:
+        # persisted work retries the emission after the next restore
+        s.need_restore[fail] = True
     succ = f_idx[ok]
     s.e_work[succ] += ec[ok]
     s.has_work[succ] = False

@@ -45,16 +45,24 @@ def _energy_block(pool, completed: int) -> dict:
     e_scale = 1.0 if q is None else q
     harvested = float(pool.e_harvest.sum()) * e_scale
     work = float(pool.e_work.sum()) * e_scale
+    # approximate runtime: structurally 0.0 (no NVM state machine);
+    # persist=ckpt/undolog: measured FRAM checkpoint/commit/restore
+    # joules. Summed on the host: per-worker entries are bit-equal
+    # across backends, and a device-side reduction would reassociate
+    # them — the ledger is compared for exact equality in CI
+    nvm = float(np.asarray(pool.e_persist).sum()) * e_scale
     return {
         "harvested_j": harvested,
         "work_j": work,
-        "nvm_j": 0.0,  # approximate runtime: no NVM, ever
+        "nvm_j": nvm,
         "sleep_j": 0.0,
-        "j_per_completed": (work / completed if completed
+        "persists": int(np.asarray(pool.persists).sum()),
+        "restores": int(np.asarray(pool.restores).sum()),
+        "j_per_completed": ((work + nvm) / completed if completed
                             else float("inf")),
         # harvested >= work + nvm + sleep: nothing comes from thin air;
         # the remainder is banked charge + booster losses
-        "conservation_ok": bool(harvested + 1e-9 >= work),
+        "conservation_ok": bool(harvested + 1e-9 >= work + nvm),
     }
 
 

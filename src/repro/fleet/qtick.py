@@ -68,6 +68,12 @@ class QuantParams:
     UCQ: np.ndarray  # (W, U_max) unit costs, BIG_Q beyond each table
     FIXQ: np.ndarray  # (W,) fixed acquisition cost
     EMITCQ: np.ndarray  # (W,) emission cost
+    # persistence plane (persist != "none"): quantized FRAM joule tables
+    # (zeros in the approximate discipline, so convert_arrays always has
+    # real arrays to move on-device)
+    CKPTQ: np.ndarray  # (W,) checkpoint image write
+    RESTQ: np.ndarray  # (W,) restore read on wake
+    COMMITQ: np.ndarray  # (W,) per-unit undo-log commit
 
 
 def quantize_fleet(p: FleetParams) -> QuantParams:
@@ -78,6 +84,8 @@ def quantize_fleet(p: FleetParams) -> QuantParams:
     C = np.asarray(p.C)
     UC = np.asarray(p.UC)
     ucq = np.where(np.isfinite(UC), np.rint(UC / q), float(BIG_Q))
+    zeros_w = np.zeros(np.asarray(p.FIX).shape[0])
+    pj = lambda x: x if x is not None else zeros_w  # noqa: E731
     return QuantParams(
         quantum_j=q,
         QH=quantize_energy(p.eff * np.asarray(p.power) * p.dt, q),
@@ -87,7 +95,10 @@ def quantize_fleet(p: FleetParams) -> QuantParams:
         ESTEP=quantize_energy(np.asarray(p.active_power_w) * p.dt, q),
         UCQ=ucq.astype(np.int32),
         FIXQ=quantize_energy(p.FIX, q),
-        EMITCQ=quantize_energy(p.EMITC, q))
+        EMITCQ=quantize_energy(p.EMITC, q),
+        CKPTQ=quantize_energy(pj(p.CKPT_J), q),
+        RESTQ=quantize_energy(pj(p.REST_J), q),
+        COMMITQ=quantize_energy(pj(p.COMMIT_J), q))
 
 
 def quantize_fleet_cached(p: FleetParams) -> QuantParams:
@@ -154,17 +165,45 @@ def tick_q(p: FleetParams, qp: QuantParams, st, ev, qh, i, xp, while_loop):
     idle = on & ~s.has_work
     s = s._replace(v=E, on=on, cycles=cycles, e_harvest=e_harvest)
 
+    # 2b. persistence plane: a worker that powered down mid-request pays
+    # the FRAM restore read before it may progress again (the restore
+    # consumes its tick); ckpt rewinds to the checkpointed unit counter,
+    # undolog just restarts the partial unit
+    if p.persist != "none":
+        rest = working & s.need_restore
+        restq_w = qp.RESTQ[s.w_wl]
+        E2, okr = capacitor_draw_q(s.v, restq_w, qp.E_OFF, xp)
+        E = xp.where(rest, E2, s.v)
+        okrest = rest & okr
+        failr = rest & ~okr
+        wud = s.w_units_done
+        if p.persist == "ckpt":
+            wud = xp.where(okrest, s.ck_units, wud)
+        s = s._replace(
+            v=E, on=s.on & ~failr,
+            need_restore=s.need_restore & ~okrest,
+            restores=s.restores + okrest,
+            e_persist=s.e_persist + xp.where(okrest, restq_w, 0),
+            w_units_done=wud,
+            w_left=xp.where(okrest, 0, s.w_left))
+        working = working & ~rest
+
     # 3. acquisition (dispatch): claim the pending assignment
     due = idle & s.p_pending
     us = capacitor_usable_q(s.v, qp.E_OFF, xp)
     fixed = qp.FIXQ[s.p_wl]
     E2, ok = capacitor_draw_q(s.v, xp.minimum(fixed, us), qp.E_OFF, xp)
     E = xp.where(due, E2, s.v)
-    p_pending = s.p_pending & ~due
     fail = due & ~ok
-    on = s.on & ~fail
-    ev = _rec(ev, fail, EV_LOST, ti, s.p_ticket, 0, xp)
     succ = due & ok
+    on = s.on & ~fail
+    if p.persist == "none":
+        p_pending = s.p_pending & ~due
+        ev = _rec(ev, fail, EV_LOST, ti, s.p_ticket, 0, xp)
+    else:
+        # exact disciplines never drop an accepted request: a failed
+        # acquisition keeps the assignment pending across the recharge
+        p_pending = s.p_pending & ~succ
     s = s._replace(
         v=E, on=on, p_pending=p_pending,
         e_work=s.e_work + xp.where(succ, fixed, 0),
@@ -179,55 +218,102 @@ def tick_q(p: FleetParams, qp: QuantParams, st, ev, qh, i, xp, while_loop):
         w_batch=xp.where(succ, s.p_batch, s.w_batch),
         w_target=xp.where(succ, s.p_units * s.p_batch, s.w_target),
         w_wl=xp.where(succ, s.p_wl, s.w_wl))
+    if p.persist != "none":
+        # fresh request: clear stale persistence from a predecessor
+        s = s._replace(need_restore=s.need_restore & ~succ,
+                       ck_units=xp.where(succ, 0, s.ck_units))
 
     # 4. progress in-flight work by one tick of active draw
     emitc_w = qp.EMITCQ[s.w_wl]
+    ckptq_w = qp.CKPTQ[s.w_wl]
+    commitq_w = qp.COMMITQ[s.w_wl]
     e_step = xp.where(working, qp.ESTEP, 0)
     run = working & (s.w_units_done < s.w_target)
     emit_now = xp.zeros(p.n, dtype=bool)
     carry = (s.v, s.on, s.has_work, s.e_work, s.w_left, s.w_units_done,
-             e_step, run, emit_now, ev)
+             e_step, run, emit_now, ev,
+             s.need_restore, s.ck_units, s.e_persist, s.persists)
 
     def cond(c):
         return xp.any(c[7])
 
     def body(c):
         (E, on, has_work, e_work, w_left, w_units_done, e_step, run,
-         emit_now, ev) = c
-        # unit boundary: start the next unit only if unit + emit-reserve
-        # are affordable now (the paper's BLE-packet reserve)
+         emit_now, ev, need_restore, ck_units, e_persist, persists) = c
+        # unit boundary: start the next unit only if unit + reserve are
+        # affordable now. Approximate: reserve = the BLE emit packet and
+        # "cant" emits the partial result. Exact: the reserve also
+        # covers the checkpoint image / unit commit, and "cant" is a
+        # forced power-down — the request persists, never truncates.
         starting = run & (w_left <= 0)
         gidx = xp.where(s.w_tile > 0,
                         w_units_done % xp.maximum(s.w_tile, 1),
                         w_units_done)
         nc = qp.UCQ[s.w_wl, xp.clip(gidx, 0, u_max - 1)]
         us = capacitor_usable_q(E, qp.E_OFF, xp)
-        cant = starting & (us < nc + emitc_w)
-        emit_now = emit_now | cant
+        if p.persist == "none":
+            cant = starting & (us < nc + emitc_w)
+            emit_now = emit_now | cant
+        else:
+            rsv = ckptq_w if p.persist == "ckpt" else commitq_w
+            cant = starting & (us < nc + rsv + emitc_w)
+            if p.persist == "ckpt":
+                # voltage trigger fired: serialize dirty progress to
+                # FRAM before dying (funded by the previous boundary's
+                # reserve)
+                dirty = cant & (w_units_done != ck_units)
+                E2, okc = capacitor_draw_q(E, ckptq_w, qp.E_OFF, xp)
+                E = xp.where(dirty, E2, E)
+                wrote = dirty & okc
+                ck_units = xp.where(wrote, w_units_done, ck_units)
+                persists = persists + wrote
+                e_persist = e_persist + xp.where(wrote, ckptq_w, 0)
+            on = on & ~cant
+            need_restore = need_restore | cant
         run = run & ~cant
         w_left = xp.where(starting & ~cant, nc, w_left)
         take = xp.minimum(e_step, w_left)
         E2, ok = capacitor_draw_q(E, take, qp.E_OFF, xp)
         E = xp.where(run, E2, E)
         fail = run & ~ok
-        # power failure mid-work: volatile by design; work lost
         on = on & ~fail
-        has_work = has_work & ~fail
-        ev = _rec(ev, fail, EV_LOST, ti, s.w_ticket, 0, xp)
+        if p.persist == "none":
+            # power failure mid-work: volatile by design; work lost
+            has_work = has_work & ~fail
+            ev = _rec(ev, fail, EV_LOST, ti, s.w_ticket, 0, xp)
+        else:
+            # the persisted request survives; restore re-runs the unit
+            need_restore = need_restore | fail
         run = run & ok
         e_work = e_work + xp.where(run, take, 0)
         w_left = xp.where(run, w_left - take, w_left)
         e_step = xp.where(run, e_step - take, e_step)
         fin = run & (w_left <= 0)  # exact: the 1e-18 float slack is gone
+        if p.persist == "undolog":
+            # Alpaca task commit: the completed unit's undo-buffer write
+            # makes w_units_done durable (funded by the boundary reserve)
+            E2, okc = capacitor_draw_q(E, commitq_w, qp.E_OFF, xp)
+            E = xp.where(fin, E2, E)
+            halted = fin & ~okc
+            on = on & ~halted
+            need_restore = need_restore | halted
+            run = run & ~halted
+            fin = fin & okc
+            persists = persists + fin
+            e_persist = e_persist + xp.where(fin, commitq_w, 0)
         w_units_done = w_units_done + fin
         run = run & (e_step > 0) & (w_units_done < s.w_target)
         return (E, on, has_work, e_work, w_left, w_units_done, e_step,
-                run, emit_now, ev)
+                run, emit_now, ev, need_restore, ck_units, e_persist,
+                persists)
 
     (E, on, has_work, e_work, w_left, w_units_done, _, _, emit_now,
-     ev) = while_loop(cond, body, carry)
+     ev, need_restore, ck_units, e_persist, persists
+     ) = while_loop(cond, body, carry)
     s = s._replace(v=E, on=on, has_work=has_work, e_work=e_work,
-                   w_left=w_left, w_units_done=w_units_done)
+                   w_left=w_left, w_units_done=w_units_done,
+                   need_restore=need_restore, ck_units=ck_units,
+                   e_persist=e_persist, persists=persists)
 
     # 5. emission (BLE packet / host transfer)
     finish = (working & s.has_work & s.on
@@ -238,8 +324,13 @@ def tick_q(p: FleetParams, qp: QuantParams, st, ev, qh, i, xp, while_loop):
     efail = finish & ~ok
     esucc = finish & ok
     on = s.on & ~efail
-    has_work = s.has_work & ~finish  # volatile: failed emission loses it
-    ev = _rec(ev, efail, EV_LOST, ti, s.w_ticket, 0, xp)
+    if p.persist == "none":
+        has_work = s.has_work & ~finish  # volatile: failed emit loses it
+        ev = _rec(ev, efail, EV_LOST, ti, s.w_ticket, 0, xp)
+    else:
+        # persisted work retries the emission after the next restore
+        has_work = s.has_work & ~esucc
+        s = s._replace(need_restore=s.need_restore | efail)
     ev = _rec(ev, esucc, EV_EMIT, ti, s.w_ticket, s.w_units_done, xp)
     s = s._replace(
         v=E, on=on, has_work=has_work,

@@ -118,7 +118,10 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
                       forecaster_fit: str = "full",
                       lat_bins: int = 64, shards: int = 1,
                       rebalance_every: int = 0,
-                      rebalance_max: int = 8) -> SchedParams:
+                      rebalance_max: int = 8,
+                      persist: str = "none",
+                      fram_write_j_per_byte: float = 18e-9,
+                      fram_read_j_per_byte: float = 7e-9) -> SchedParams:
     """Compile the control-plane constants for one fleet.
 
     Stacks the workload cost/accuracy tables (joules / dimensionless),
@@ -158,6 +161,13 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
             ``dispatch_every`` — checked at serve time).
         rebalance_max: per-workload cap on requests moved to the ring
             successor per rebalance event (the ppermute buffer width).
+        persist: execution discipline ("none" | "ckpt" | "undolog") —
+            must match the fleet's ``FleetParams.persist``. Exact
+            disciplines pin the dispatch knob at NU and relax admission
+            to the fixed+emit overhead (docs/persistence_plane.md).
+        fram_write_j_per_byte / fram_read_j_per_byte: the NVM per-byte
+            energies pricing the persistence plane (provenance record;
+            the device-side joule tables live in ``FleetParams``).
     Returns:
         a frozen :class:`SchedParams`. Its ``quality`` provenance label
         is inferred: "measured" when any workload carries a per-sample
@@ -184,6 +194,14 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
     if forecaster_fit not in ("full", "causal"):
         raise ValueError(f"unknown forecaster_fit {forecaster_fit!r}; "
                          "choose from ('full', 'causal')")
+    from repro.persist import PERSIST_MODES
+    if persist not in PERSIST_MODES:
+        raise ValueError(f"unknown persist mode {persist!r}; "
+                         f"choose from {PERSIST_MODES}")
+    if persist != getattr(p, "persist", "none"):
+        raise ValueError(
+            f"control-plane persist={persist!r} does not match the "
+            f"fleet's FleetParams.persist={p.persist!r}")
     W = len(workloads)
     u_max = max(w.costs.n_units for w in workloads)
     CU = np.full((W, u_max + 2), np.inf)
@@ -273,7 +291,10 @@ def make_sched_params(p: FleetParams, workloads: Sequence, *,
         QTARGET=QTARGET, shards=shards,
         rebalance_every=int(rebalance_every),
         rebalance_max=int(rebalance_max),
-        forecaster_fit=str(forecaster_fit))
+        forecaster_fit=str(forecaster_fit),
+        persist=str(persist),
+        fram_write_j_per_byte=float(fram_write_j_per_byte),
+        fram_read_j_per_byte=float(fram_read_j_per_byte))
 
 
 def make_sched_state(sp: SchedParams) -> SchedState:
@@ -504,10 +525,18 @@ def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
         # admission: largest knob the instantaneous budget affords (-1:
         # even fixed+emit does not fit), SMART floor for floored workloads
         k_aff = xp.searchsorted(cu, bn, side="right").astype(i64) - 1
-        p_req = xp.where(xp.take(xp.asarray(sp.IS_SMART), wl),
-                         xp.take(xp.asarray(sp.P_REQ), wl),
-                         xp.maximum(k_aff, 0))
-        afford = (k_aff >= p_req) & (k_aff >= 0)
+        if sp.persist != "none":
+            # exact disciplines (docs/persistence_plane.md): the knob is
+            # pinned at NU — every unit runs — and admission only needs
+            # the fixed+emit overhead funded now; the persisted request
+            # survives power failure and spans recharge cycles
+            p_req = xp.zeros(sp.n, dtype=i64) + nu
+            afford = k_aff >= 0
+        else:
+            p_req = xp.where(xp.take(xp.asarray(sp.IS_SMART), wl),
+                             xp.take(xp.asarray(sp.P_REQ), wl),
+                             xp.maximum(k_aff, 0))
+            afford = (k_aff >= p_req) & (k_aff >= 0)
         # batch sizing on the *planning* budget (forecast inflow lets more
         # floor-knob requests ride one power cycle, amortizing fixed+emit
         # overhead); greedy knob refinement on the *instantaneous* budget
@@ -520,7 +549,7 @@ def dispatch(sp: SchedParams, ss, dispatchable, budget_now, budget_plan,
         spend_plan = bp - overhead
         spend_now = bn - overhead
         cpr = xp.take(ucum, xp.clip(p_req, 0, ucum.shape[0] - 1))
-        if sp.value_order:
+        if sp.value_order and sp.persist == "none":
             # quality mode also CAPS refinement at the target knob:
             # measured tables are non-monotonic, so units past the peak
             # cost strictly more joules for no more (often less)

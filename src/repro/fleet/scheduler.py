@@ -109,7 +109,10 @@ class FleetScheduler:
             forecaster_fit=forecaster_fit,
             lat_bins=lat_bins, shards=shards,
             rebalance_every=rebalance_every,
-            rebalance_max=rebalance_max)
+            rebalance_max=rebalance_max,
+            persist=pool.params.persist,
+            fram_write_j_per_byte=pool.mcu.fram_write_j_per_byte,
+            fram_read_j_per_byte=pool.mcu.fram_read_j_per_byte)
         self.state = _sched.make_sched_state(self.params)
         # causal refit machinery: windowed sufficient statistics over the
         # observed harvest prefix (repro.core.forecast.CausalFitState),

@@ -60,6 +60,16 @@ class FleetParams:
     # int32 quanta of this many joules and FleetState.v holds stored
     # energy E = 0.5 C v^2 in quanta instead of volts. None = float64.
     quantum_j: float | None = None
+    # persistence plane (repro.persist): execution discipline per fleet.
+    # "none" is the approximate single-power-cycle tick; "ckpt" and
+    # "undolog" are the exact-equivalence baselines where a request
+    # survives power failure and completes at full unit count. The (W,)
+    # joule tables below are built by repro.persist.persist_tables from
+    # the MCU FRAM per-byte energies; None whenever persist == "none".
+    persist: str = "none"
+    CKPT_J: np.ndarray | None = None  # (W,) checkpoint image write, J
+    REST_J: np.ndarray | None = None  # (W,) restore read on wake, J
+    COMMIT_J: np.ndarray | None = None  # (W,) per-unit undo-log commit, J
 
 
 @dataclasses.dataclass
@@ -100,6 +110,18 @@ class FleetState:
     emit_count: np.ndarray
     emit_units_sum: np.ndarray
     emit_acc_sum: np.ndarray
+    # persistence plane (persist != "none"): a brown-out mid-request sets
+    # need_restore and the worker pays REST_J on its next productive wake
+    # before continuing. ck_units is the checkpointed progress counter
+    # (ckpt: restored on wake; undolog: unused — w_units_done itself is
+    # the durable per-unit commit counter). e_persist is the FRAM joule
+    # ledger; persists/restores count checkpoint-or-commit writes and
+    # restore reads. All structurally zero when persist == "none".
+    need_restore: np.ndarray
+    ck_units: np.ndarray
+    e_persist: np.ndarray
+    persists: np.ndarray
+    restores: np.ndarray
 
 
 STATE_FIELDS: tuple[str, ...] = tuple(
@@ -136,7 +158,9 @@ def init_state(n: int, *, quantized: bool = False) -> FleetState:
         p_units=z(c_dt), p_batch=np.ones(n, dtype=c_dt),
         p_t_assigned=z(t_dt),
         emit_count=z(c_dt), emit_units_sum=z(c_dt),
-        emit_acc_sum=z())
+        emit_acc_sum=z(),
+        need_restore=z(bool), ck_units=z(c_dt), e_persist=z(e_dt),
+        persists=z(c_dt), restores=z(c_dt))
 
 
 def state_as_tuple(s: FleetState) -> tuple:
@@ -232,6 +256,15 @@ class SchedParams:
     # from only the observed prefix (FleetScheduler.refit_forecast /
     # the streaming loop; see docs/streaming_serve.md)
     forecaster_fit: str = "full"
+    # persistence plane (docs/persistence_plane.md): the execution
+    # discipline the dispatcher sizes work for. Exact disciplines pin the
+    # knob at NU (every unit runs) and admission only requires the
+    # fixed+emit overhead funded now — the persisted request survives
+    # power failure and spans recharge cycles. The FRAM per-byte energies
+    # price the checkpoint/commit/restore tables (repro.persist).
+    persist: str = "none"  # "none" | "ckpt" | "undolog"
+    fram_write_j_per_byte: float = 18e-9
+    fram_read_j_per_byte: float = 7e-9
 
 
 @dataclasses.dataclass

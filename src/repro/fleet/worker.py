@@ -33,9 +33,14 @@ Heterogeneous fleets: pass per-worker ``capacitance_f`` / ``v_max``
 arrays to mix capacitor sizes across the fleet (both backends support it;
 scalars fall back to the homogeneous ``cap`` configuration).
 
-Checkpointing modes are deliberately NOT vectorized: the fleet exists to
-demonstrate the paper's runtime at scale, and the approximate runtime is
-the one with no NVM state machine (``e_nvm`` is structurally zero here).
+Persistence plane (``persist={"none","ckpt","undolog"}``): the default
+approximate runtime has no NVM state machine (``e_nvm`` is structurally
+zero), matching the paper's thesis. The two exact disciplines vectorize
+the measured baselines — ``ckpt`` (Mementos-style voltage-triggered
+image checkpoints) and ``undolog`` (Alpaca-style task-granular commits)
+— as the same array-native tick with joule-charged FRAM draws, so the
+5-7x approximate-vs-exact gap is measured inside one engine
+(docs/persistence_plane.md).
 """
 from __future__ import annotations
 
@@ -88,7 +93,7 @@ class PoolStats:
     power_cycles: int
     energy_harvested_j: float
     energy_on_work_j: float
-    energy_on_nvm_j: float  # structurally 0.0 for the approximate runtime
+    energy_on_nvm_j: float  # 0.0 for approximate; FRAM joules under persist
     energy_on_sleep_j: float  # idem (sleep draws are below trace resolution)
     duration_s: float
 
@@ -123,7 +128,8 @@ class FleetWorkerPool:
                  backend: str = "numpy",
                  use_pallas: bool = False,
                  kernel: str = "xla",
-                 fleet_placement: str = "auto"):
+                 fleet_placement: str = "auto",
+                 persist: str = "none"):
         if mode not in ("local", "dispatch"):
             raise ValueError(f"unknown pool mode {mode!r}")
         if backend not in BACKENDS:
@@ -136,6 +142,20 @@ class FleetWorkerPool:
             raise ValueError(
                 "quantized kernels (q32/pallas) implement the dispatch "
                 "serve tick only; local mode stays float64")
+        from repro.persist import PERSIST_MODES, persist_tables
+        if persist not in PERSIST_MODES:
+            raise ValueError(f"unknown persist mode {persist!r}; "
+                             f"choose from {PERSIST_MODES}")
+        if persist != "none" and mode != "dispatch":
+            raise ValueError(
+                "--persist ckpt/undolog are exact serve disciplines; "
+                "they require the dispatch mode (local mode is the "
+                "approximate independent-workers baseline)")
+        if persist != "none" and kernel == "pallas":
+            raise ValueError(
+                "--persist ckpt/undolog supports the xla and q32 kernels; "
+                "the Pallas serve megakernel implements the approximate "
+                "tick only")
         power = np.asarray(power_w, dtype=np.float64)
         if power.ndim != 2:
             raise ValueError("power_w must be (n_traces, T)")
@@ -154,6 +174,7 @@ class FleetWorkerPool:
             dtype=np.float64), (n,)).copy()
         UC, FIX, EMITC, NU = stack_cost_tables(workloads)
         self.mcu = mcu or McuEnergyModel()
+        CKPT_J, REST_J, COMMIT_J = persist_tables(persist, NU, self.mcu)
         # per-worker active draw: MCU-class mixing (heterogeneous fleets);
         # a scalar broadcasts to the homogeneous reference device
         AP = np.broadcast_to(np.asarray(
@@ -173,7 +194,9 @@ class FleetWorkerPool:
             P=float(sampling_period_s), policy=policy,
             acc=accuracy_table,
             quantum_j=(None if kernel == "xla"
-                       else energy.DEFAULT_QUANTUM_J))
+                       else energy.DEFAULT_QUANTUM_J),
+            persist=persist, CKPT_J=CKPT_J, REST_J=REST_J,
+            COMMIT_J=COMMIT_J)
         self.state = init_state(n, quantized=kernel != "xla")
         self.backend = backend
         self.use_pallas = use_pallas
@@ -345,6 +368,6 @@ class FleetWorkerPool:
             power_cycles=int(s.cycles.sum()),
             energy_harvested_j=float(s.e_harvest.sum()) * e_scale,
             energy_on_work_j=float(s.e_work.sum()) * e_scale,
-            energy_on_nvm_j=0.0,
+            energy_on_nvm_j=float(np.asarray(s.e_persist).sum()) * e_scale,
             energy_on_sleep_j=0.0,
             duration_s=self.steps_done * self.params.dt)

@@ -29,7 +29,11 @@ active power) across the fleet. ``--quality measured`` swaps the
 analytic accuracy proxies for tables measured by the quality oracles
 (``repro.quality``: real SVM inference, Harris corner equivalence, real
 anytime-LM decodes), and ``--sched quality`` serves queues by marginal
-measured-accuracy-per-joule instead of age. The helpers here are reused
+measured-accuracy-per-joule instead of age. ``--persist ckpt|undolog``
+swaps the approximate discipline for the measured exact-equivalence
+baselines (voltage-triggered checkpoints / task-granular undo-log
+commits, joule-charged FRAM — docs/persistence_plane.md). The helpers
+here are reused
 by ``benchmarks/fleet_throughput.py``, ``benchmarks/fleet_quality.py``
 and ``examples/fleet_serve.py``.
 """
@@ -109,7 +113,8 @@ def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
                         v_max: np.ndarray | None = None,
                         active_power_w: np.ndarray | None = None,
                         kernel: str = "xla",
-                        fleet_placement: str = "auto") -> FleetWorkerPool:
+                        fleet_placement: str = "auto",
+                        persist: str = "none") -> FleetWorkerPool:
     rng = np.random.default_rng(seed)
     return FleetWorkerPool(
         power, dt, workloads=[w.costs for w in workloads], mode="dispatch",
@@ -118,7 +123,7 @@ def build_dispatch_pool(power: np.ndarray, dt: float, n_workers: int,
         phase=rng.integers(0, power.shape[1], n_workers),
         backend=backend, capacitance_f=capacitance_f, v_max=v_max,
         active_power_w=active_power_w, kernel=kernel,
-        fleet_placement=fleet_placement)
+        fleet_placement=fleet_placement, persist=persist)
 
 
 def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
@@ -141,15 +146,19 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                   fleet_placement: str = "auto",
                   stream_mode: bool = False, chunk_ticks: int = 0,
                   refit_every_s: float = 0.0,
-                  slo_p95_s: float = 0.0) -> dict:
+                  slo_p95_s: float = 0.0,
+                  persist: str = "none",
+                  grace_s: float = 20.0) -> dict:
     pool = build_dispatch_pool(power, dt, n_workers, workloads, seed,
                                backend=backend, capacitance_f=capacitance_f,
                                v_max=v_max, active_power_w=active_power_w,
                                kernel=kernel,
-                               fleet_placement=fleet_placement)
+                               fleet_placement=fleet_placement,
+                               persist=persist)
     # the rebalance cadence rounds to ticks; run_serve validates it is a
     # multiple of the dispatch cadence
     scheduler = FleetScheduler(pool, workloads, max_batch=max_batch,
+                               grace_s=grace_s,
                                shed_after_s=shed_after_s, sched=sched,
                                lookahead_s=lookahead_s,
                                forecaster=forecaster,
@@ -184,6 +193,7 @@ def run_scheduled(power: np.ndarray, dt: float, n_workers: int,
                             dispatch_every=dispatch_every, obs=obs)
     summary["mode"] = "scheduled"
     summary["sched"] = sched
+    summary["persist"] = persist
     summary["forecaster"] = forecaster
     summary["n_workers"] = n_workers
     summary["backend"] = backend
@@ -374,6 +384,23 @@ def main(argv: list[str] | None = None) -> dict:
                          "(--stream; 0: off): each chunk record gets a "
                          "verdict and the stream block counts "
                          "violations")
+    ap.add_argument("--persist", choices=("none", "ckpt", "undolog"),
+                    default="none",
+                    help="execution discipline (docs/persistence_plane."
+                         "md): the paper's approximate runtime with no "
+                         "NVM state machine (none), voltage-triggered "
+                         "image checkpoints restored after every power "
+                         "failure (ckpt, Mementos-style), or task-"
+                         "granular undo-log commits with idempotent "
+                         "re-execution (undolog, Alpaca-style). The "
+                         "exact disciplines run every workload unit and "
+                         "survive brown-outs at measured FRAM joule "
+                         "cost; requires --scheduler on")
+    ap.add_argument("--grace", type=float, default=20.0,
+                    help="straggler-eviction grace in seconds; exact "
+                         "persist disciplines span recharge cycles, so "
+                         "raise it when comparing against --persist "
+                         "ckpt/undolog")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--shed-after", type=float, default=30.0)
     ap.add_argument("--obs", choices=("off", "tele", "trace"),
@@ -407,6 +434,10 @@ def main(argv: list[str] | None = None) -> dict:
     if mix.shape[0] != len(workloads):
         ap.error(f"--mix has {mix.shape[0]} entries for "
                  f"{len(workloads)} workloads")
+    if args.persist != "none" and args.scheduler != "on":
+        ap.error("--persist ckpt/undolog are dispatch-plane disciplines; "
+                 "the independent baseline is approximate-only — use "
+                 "--scheduler on")
     n_rows = args.trace_rows or min(32, args.workers)
     power = make_power_matrix(names, n_rows, args.duration, args.dt,
                               args.seed)
@@ -435,7 +466,8 @@ def main(argv: list[str] | None = None) -> dict:
             rebalance_every_s=args.rebalance_every,
             fleet_placement=args.fleet_placement,
             stream_mode=args.stream, chunk_ticks=args.chunk_ticks,
-            refit_every_s=args.refit_every, slo_p95_s=args.slo_p95)
+            refit_every_s=args.refit_every, slo_p95_s=args.slo_p95,
+            persist=args.persist, grace_s=args.grace)
     if args.scheduler in ("off", "both"):
         out["independent"] = run_independent(
             power, args.dt, args.workers, workloads, mix=mix,

@@ -1,0 +1,32 @@
+"""Persistence plane: exact-equivalence execution disciplines.
+
+The approximate fleet tick (``--persist none``) is the paper's thesis:
+a request is approximated *within one power cycle* — at a unit boundary
+that cannot fund the next unit plus the BLE reserve, the worker emits
+the partial result now and never touches NVM. This package prices the
+two exact baselines the paper compares against, as measured runs of the
+same fleet rather than quoted constants:
+
+- ``ckpt`` — Mementos-style voltage-triggered checkpointing. When the
+  banked charge cannot fund the next unit plus the checkpoint reserve
+  (the energy-domain equivalent of the voltage trigger firing), the
+  worker serializes its progress image to modeled FRAM, powers down,
+  and on its next productive wake pays a restore read before resuming
+  from the checkpointed unit counter. Progress past the last checkpoint
+  is lost and re-executed.
+- ``undolog`` — Alpaca-style task-granular commit. Every completed unit
+  pays a small write-after-read undo-buffer commit; the durable counter
+  *is* ``w_units_done``, so a power failure only loses the partial unit
+  in flight, which re-executes idempotently after a cheap restore (log
+  header + task descriptor read).
+
+Both disciplines are charged in joules via the MCU FRAM per-byte
+energies (:class:`repro.core.energy.McuEnergyModel`) against the byte
+model below; the tick logic itself lives in the worker backends
+(``repro.fleet.backend_numpy`` / ``backend_jax`` / ``qtick``) behind
+static ``params.persist`` branches. See docs/persistence_plane.md for
+the exactness contract.
+"""
+from repro.persist.tables import (  # noqa: F401
+    HEADER_BYTES, IDX_BYTES, PERSIST_MODES, UNIT_BYTES,
+    commit_bytes, persist_tables, state_bytes)

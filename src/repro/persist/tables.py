@@ -1,0 +1,86 @@
+"""Joule tables for the persistence plane (docs/persistence_plane.md).
+
+Byte model
+----------
+
+A worker's resumable progress image is the request header (tickets,
+workload id, knob/batch targets, capacitor bookkeeping — a fixed
+``HEADER_BYTES``) plus one ``UNIT_BYTES`` accumulator record per
+workload unit (the partial sums / filter taps / layer activations a
+restart must not lose). The image grows with the workload's unit count,
+so checkpointing a 140-unit HAR window is materially more expensive
+than a 25-tap Harris sweep — exactly the asymmetry the paper's
+baselines exhibit.
+
+- ``ckpt`` writes the whole image at a checkpoint
+  (``CKPT_J = fram_write * state_bytes``) and reads it back on restore
+  (``REST_J = fram_read * state_bytes``).
+- ``undolog`` never snapshots: each unit commit writes the unit's
+  accumulator record twice (the write-after-read undo copy plus the
+  committed value) and a log index slot
+  (``COMMIT_J = fram_write * (2 * UNIT_BYTES + IDX_BYTES)``); restore
+  only re-reads the log header and task descriptor
+  (``REST_J = fram_read * HEADER_BYTES``).
+
+Every table is (W,) float64 joules, one entry per workload, and is
+baked into :class:`repro.fleet.state.FleetParams` at pool build time so
+all three tick evaluations (NumPy / fused JAX / int32-quantized) price
+persistence identically.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.energy import McuEnergyModel
+
+PERSIST_MODES = ("none", "ckpt", "undolog")
+
+HEADER_BYTES = 128  # request header + registers + stack residue
+UNIT_BYTES = 16  # one per-unit accumulator record
+IDX_BYTES = 8  # undo-log index slot per commit
+
+
+def state_bytes(n_units) -> np.ndarray:
+    """Checkpoint image size in bytes for workloads of ``n_units`` units."""
+    return HEADER_BYTES + UNIT_BYTES * np.asarray(n_units, dtype=np.int64)
+
+
+def commit_bytes() -> int:
+    """Bytes written per undo-log unit commit (undo copy + value + index)."""
+    return 2 * UNIT_BYTES + IDX_BYTES
+
+
+def persist_tables(mode: str, n_units: Sequence[int] | np.ndarray,
+                   mcu: McuEnergyModel | None = None
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(CKPT_J, REST_J, COMMIT_J) — (W,) joule tables for ``mode``.
+
+    Args:
+        mode: one of :data:`PERSIST_MODES`.
+        n_units: (W,) per-workload unit counts (``CostTable.n_units``).
+        mcu: FRAM energy source; defaults to :class:`McuEnergyModel`.
+    Returns:
+        Three (W,) float64 arrays. Tables a mode never draws from are
+        zero (``ckpt`` never commits per unit; ``undolog`` never writes
+        an image; ``none`` never touches FRAM at all).
+    """
+    if mode not in PERSIST_MODES:
+        raise ValueError(f"unknown persist mode {mode!r}; "
+                         f"choose from {PERSIST_MODES}")
+    mcu = mcu or McuEnergyModel()
+    nu = np.asarray(n_units, dtype=np.int64)
+    zeros = np.zeros(nu.shape[0], dtype=np.float64)
+    if mode == "none":
+        return zeros, zeros.copy(), zeros.copy()
+    image = state_bytes(nu).astype(np.float64)
+    if mode == "ckpt":
+        ckpt = mcu.fram_write_j_per_byte * image
+        rest = mcu.fram_read_j_per_byte * image
+        return ckpt, rest, zeros
+    commit = np.full(nu.shape[0],
+                     mcu.fram_write_j_per_byte * commit_bytes())
+    rest = np.full(nu.shape[0],
+                   mcu.fram_read_j_per_byte * float(HEADER_BYTES))
+    return zeros, rest, commit

@@ -318,7 +318,7 @@ except ImportError:
 def _mk_serve(backend, n_workers=16, duration_s=8.0, seed=0, shards=1,
               kernel="xla", placement="auto", rebalance_every=0,
               forecaster="ou", forecaster_fit="full", arrival_seed=1,
-              rate_scale=8.0):
+              rate_scale=8.0, persist="none", grace_s=20.0):
     """One (pool, scheduler, stream, n_steps) serve fixture. Separate
     calls with the same arguments are bit-identical initial states, so
     a whole-trace run and a chunked run start from the same world."""
@@ -328,12 +328,12 @@ def _mk_serve(backend, n_workers=16, duration_s=8.0, seed=0, shards=1,
     wls = [har_workload(), lm_workload()]
     pool = build_dispatch_pool(power, DT, n_workers, wls, seed,
                                backend=backend, kernel=kernel,
-                               fleet_placement=placement)
+                               fleet_placement=placement, persist=persist)
     sch = FleetScheduler(
         pool, wls, sched="forecast", forecaster=forecaster,
         trace_families=trace_family_labels(TRACES, n_rows),
         forecaster_fit=forecaster_fit, shards=shards,
-        rebalance_every=rebalance_every)
+        rebalance_every=rebalance_every, grace_s=grace_s)
     stream = RequestStream(rate_scale * n_workers,
                            np.array([0.6, 0.4]), n_steps, DT,
                            seed=arrival_seed)
@@ -557,6 +557,103 @@ class TestStreamingServe:
                                                duration_s=1.0)
         with pytest.raises(ValueError, match="chunk_ticks"):
             run_fleet_stream(pool, sch, stream, n_steps, chunk_ticks=0)
+
+
+# ---------------------------------------------------------------------------
+# persistence plane x streaming: the exact disciplines under chunking
+# ---------------------------------------------------------------------------
+
+
+class TestPersistStreaming:
+    """The exact ckpt/undolog disciplines (docs/persistence_plane.md)
+    obey the same chunking-invariance gate as the approximate runtime:
+    a chunked steady-state run is bit-exact with the whole-trace launch
+    — including every persist-ledger field (FRAM joules, checkpoint or
+    commit count, restore count) — and the NumPy per-tick reference
+    agrees with the fused JAX launch on all of it."""
+
+    # 30 s horizon with grace 60: long enough for energy-rich rows to
+    # boot from the discharged capacitor, brown out mid-request, and
+    # restore — the nonvacuousness assertions below depend on it
+    _KW = dict(n_workers=16, duration_s=30.0, grace_s=60.0)
+
+    @pytest.mark.parametrize("persist", ["ckpt", "undolog"])
+    @pytest.mark.parametrize("backend,kernel",
+                             [("numpy", "xla"), ("jax", "xla"),
+                              ("jax", "q32")])
+    def test_persist_chunked_equals_whole(self, persist, backend,
+                                          kernel):
+        kw = dict(self._KW, persist=persist, kernel=kernel)
+        pool_w, sch_w, st_w, n_steps = _mk_serve(backend, **kw)
+        whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+        pool_c, sch_c, st_c, _ = _mk_serve(backend, **kw)
+        chunked = run_fleet_stream(pool_c, sch_c, st_c, n_steps,
+                                   chunk_ticks=700)
+        assert _blob(whole) == _blob(chunked)
+        # nonvacuous: the run actually persisted state to NVM and
+        # restored through at least one mid-request power failure
+        e = whole["energy"]
+        assert e["persists"] > 0 and e["restores"] > 0
+        assert e["nvm_j"] > 0.0
+        # exactness contract: power failures never lose a request
+        assert whole["lost"] == 0
+
+    @pytest.mark.parametrize("persist", ["ckpt", "undolog"])
+    def test_persist_stream_backend_agreement(self, persist):
+        kw = dict(self._KW, persist=persist)
+        pool_n, sch_n, st_n, n_steps = _mk_serve("numpy", **kw)
+        r_np = run_fleet_stream(pool_n, sch_n, st_n, n_steps,
+                                chunk_ticks=700)
+        pool_j, sch_j, st_j, _ = _mk_serve("jax", **kw)
+        r_jax = run_fleet_stream(pool_j, sch_j, st_j, n_steps,
+                                 chunk_ticks=700)
+        _assert_backend_agreement(r_np, r_jax)
+        # the persist ledger must agree bit-exactly — the persist-path
+        # joule adds are data-dependent gathers of precomputed table
+        # entries, identical in both evaluation orders
+        for k in ("persists", "restores", "nvm_j"):
+            assert r_np["energy"][k] == r_jax["energy"][k], k
+        assert r_np["energy"]["restores"] > 0
+
+    def test_persist_none_blob_unchanged(self):
+        # persist="none" is the PR-9 streaming serve verbatim: the
+        # explicit default compiles the identical program
+        pool_a, sch_a, st_a, n_steps = _mk_serve("jax", 8,
+                                                 duration_s=4.0)
+        pool_b, sch_b, st_b, _ = _mk_serve("jax", 8, duration_s=4.0,
+                                           persist="none")
+        a = run_fleet(pool_a, sch_a, st_a, n_steps)
+        b = run_fleet(pool_b, sch_b, st_b, n_steps)
+        assert _blob(a) == _blob(b)
+
+    if _HAS_HYPOTHESIS:
+        @given(chunk=st.sampled_from([250, 700, 1300]),
+               persist=st.sampled_from(["ckpt", "undolog"]),
+               arrival_seed=st.integers(0, 3))
+        @settings(max_examples=6, deadline=None)
+        def test_property_power_failure_resume(self, chunk, persist,
+                                               arrival_seed):
+            """Mid-request power failure under the exact disciplines:
+            whatever the chunking and arrival pattern, a worker that
+            browns out mid-request restores from NVM, no request is
+            ever LOST, and the completion counters land bit-identically
+            in the host reference and the fused scan."""
+            kw = dict(self._KW, persist=persist,
+                      arrival_seed=arrival_seed)
+            pool_w, sch_w, st_w, n_steps = _mk_serve("numpy", **kw)
+            whole = run_fleet(pool_w, sch_w, st_w, n_steps)
+            pool_c, sch_c, st_c, _ = _mk_serve("numpy", **kw)
+            chunked = run_fleet_stream(pool_c, sch_c, st_c, n_steps,
+                                       chunk_ticks=chunk)
+            pool_j, sch_j, st_j, _ = _mk_serve("jax", **kw)
+            r_jax = run_fleet_stream(pool_j, sch_j, st_j, n_steps,
+                                     chunk_ticks=chunk)
+            assert _blob(whole) == _blob(chunked)
+            for k in ("submitted", "completed", "shed", "rejected",
+                      "lost", "evicted"):
+                assert whole[k] == r_jax[k], k
+            assert whole["energy"]["restores"] > 0
+            assert whole["lost"] == 0
 
 
 class TestStreamBoundaries:

@@ -11,6 +11,11 @@ Three checks:
 - every committed ``experiments/*.json`` artifact has a schema entry in
   ``docs/experiments.md`` (its filename is mentioned there) — catches
   benchmarks that grow a new artifact without documenting its fields;
+- every committed ``experiments/*.json`` artifact carries the ``host``
+  provenance block (``benchmarks.common.host_metadata()`` — platform,
+  CPU, JAX version/backend) so recorded numbers are attributable to a
+  machine; Chrome-trace exports (files with a ``traceEvents`` key) are
+  structurally exempt — their schema is fixed by the trace viewer;
 - every telemetry channel named in docs/observability.md's catalog
   exists in ``repro.obs.state.TELE_FIELDS``, and every field is
   cataloged — the channel table and the code cannot drift apart;
@@ -38,7 +43,7 @@ ROOT = Path(__file__).resolve().parent.parent
 CLIS = ("repro.launch.fleet", "benchmarks.fleet_throughput",
         "benchmarks.fleet_quality", "benchmarks.fleet_observability",
         "benchmarks.fleet_megakernel", "benchmarks.fleet_sharded_scaling",
-        "benchmarks.fleet_streaming")
+        "benchmarks.fleet_streaming", "benchmarks.fleet_exactness")
 DOCS = ("README.md", "docs")
 
 # `--flag` with a word boundary before it (skips ---- rules and
@@ -79,6 +84,21 @@ def undocumented_artifacts() -> list[str]:
     text = schema_doc.read_text() if schema_doc.exists() else ""
     return sorted(p.name for p in (ROOT / "experiments").glob("*.json")
                   if p.name not in text)
+
+
+def unattributed_artifacts() -> list[str]:
+    """Committed experiments/*.json files missing the ``host``
+    provenance block. Chrome-trace exports (top-level ``traceEvents``)
+    have a viewer-fixed schema and are exempt."""
+    import json
+    bad = []
+    for p in sorted((ROOT / "experiments").glob("*.json")):
+        doc = json.loads(p.read_text())
+        if "traceEvents" in doc:
+            continue
+        if "host" not in doc:
+            bad.append(p.name)
+    return bad
 
 
 def channel_catalog_drift() -> tuple[list[str], list[str]]:
@@ -131,6 +151,14 @@ def main() -> int:
         for name in undoc:
             print(f"  {name}", file=sys.stderr)
         return 1
+    unattributed = unattributed_artifacts()
+    if unattributed:
+        print("experiments/*.json artifacts missing the host_metadata() "
+              "provenance block (a top-level \"host\" key):",
+              file=sys.stderr)
+        for name in unattributed:
+            print(f"  {name}", file=sys.stderr)
+        return 1
     unknown, uncataloged = channel_catalog_drift()
     if unknown or uncataloged:
         if unknown:
@@ -153,8 +181,9 @@ def main() -> int:
         return 1
     print(f"docs-consistency OK: {len(found)} doc flags all exist "
           f"in {' + '.join(CLIS)} --help; all experiments/*.json "
-          "artifacts documented; telemetry channel catalog matches "
-          "TeleState; kernel registry matches docs/kernels.md")
+          "artifacts documented and host-attributed; telemetry channel "
+          "catalog matches TeleState; kernel registry matches "
+          "docs/kernels.md")
     return 0
 
 
